@@ -1,0 +1,89 @@
+"""Micro-benchmarks of the APNC hot loops (XLA path wall-clock on this CPU;
+the Pallas path is correctness-validated in interpret mode — its perf story is
+the structural VMEM/MXU analysis in EXPERIMENTS.md section Kernels)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.apnc import pairwise_discrepancy, sufficient_stats
+from repro.core.kernels_fn import Kernel
+from repro.core import nystrom
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile + warm
+    jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def bench_embed(n=8192, d=256, l=512, m=256):
+    X = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    kern = Kernel("rbf", gamma=0.05)
+    coeffs = nystrom.fit(jax.random.PRNGKey(1), X, kern, l=l, m=m)
+
+    @jax.jit
+    def embed(X):
+        from repro.core.apnc import embed as _e
+
+        return _e(X, coeffs)
+
+    us = _time(embed, X)
+    flops = 2 * n * l * d + 2 * n * l * m  # gram + contraction
+    return {"name": "apnc_embed_xla", "us_per_call": us,
+            "derived": f"{flops / (us * 1e-6) / 1e9:.2f}GFLOPs n={n} d={d} l={l} m={m}"}
+
+
+def bench_assign(n=65536, m=256, k=64, disc="l2"):
+    Y = jax.random.normal(jax.random.PRNGKey(0), (n, m))
+    C = jax.random.normal(jax.random.PRNGKey(1), (k, m))
+
+    @jax.jit
+    def assign(Y, C):
+        D = pairwise_discrepancy(Y, C, disc)
+        labels = jnp.argmin(D, axis=-1)
+        return sufficient_stats(Y, labels, k)
+
+    us = _time(assign, Y, C)
+    return {"name": f"apnc_assign_{disc}_xla", "us_per_call": us,
+            "derived": f"{n / (us * 1e-6) / 1e6:.2f}Mrows/s n={n} m={m} k={k}"}
+
+
+def bench_lloyd_iteration(n=65536, m=256, k=64):
+    from repro.core.lloyd import lloyd
+
+    Y = jax.random.normal(jax.random.PRNGKey(0), (n, m))
+
+    @jax.jit
+    def one(Y):
+        return lloyd(Y, k, discrepancy="l2", iters=1,
+                     init=Y[:k]).centroids
+
+    us = _time(one, Y)
+    return {"name": "lloyd_iteration_xla", "us_per_call": us,
+            "derived": f"{n / (us * 1e-6) / 1e6:.2f}Mrows/s/iter"}
+
+
+def bench_flash_attention(B=1, S=1024, H=4, Dh=64):
+    """XLA-path wall clock of the attention shape the Pallas kernel targets
+    (the kernel itself is interpret-validated; see EXPERIMENTS §Kernels)."""
+    from repro.kernels import ref
+
+    q, k, v = (jax.random.normal(jax.random.PRNGKey(i), (B, S, H, Dh))
+               for i in range(3))
+    fn = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, 0))
+    us = _time(fn, q, k, v)
+    flops = 4 * B * H * S * S * Dh
+    return {"name": "attention_oracle_xla", "us_per_call": us,
+            "derived": f"{flops / (us * 1e-6) / 1e9:.2f}GFLOPs B={B} S={S} H={H} Dh={Dh}"}
+
+
+def run_all():
+    return [bench_embed(), bench_assign(disc="l2"), bench_assign(disc="l1", n=16384),
+            bench_lloyd_iteration(), bench_flash_attention()]

@@ -1,0 +1,63 @@
+"""Roofline table (deliverable g): read the dry-run JSONL, derive the 3 terms
+per (arch x shape x mesh), dominant bottleneck, MODEL_FLOPS usefulness ratio.
+Emits CSV rows + a markdown table for EXPERIMENTS.md."""
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.configs import get_arch
+from repro.roofline.analysis import analyze_record, load_results
+
+RESULTS = Path(__file__).resolve().parent / "dryrun_results.jsonl"
+
+
+def build_rows(path=RESULTS, include_opts=False):
+    rows = []
+    for rec in load_results(path):
+        if rec.get("status") != "ok":
+            rows.append(rec)
+            continue
+        if rec.get("opts") and not include_opts:
+            continue
+        cfg = get_arch(rec["arch"])
+        rows.append(analyze_record(rec, cfg))
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows.sort(key=lambda r: (r.get("arch", ""), order.get(r.get("shape"), 9),
+                             r.get("multi_pod", False)))
+    return rows
+
+
+def csv_lines(rows):
+    out = ["arch,shape,mesh,status,t_compute_s,t_memory_s,t_collective_s,"
+           "bottleneck,useful_ratio,hbm_gb_per_dev"]
+    for r in rows:
+        mesh = "2x16x16" if r.get("multi_pod") else "16x16"
+        if r.get("status") != "ok":
+            out.append(f"{r.get('arch')},{r.get('shape')},{mesh},{r.get('status')},,,,,,")
+            continue
+        hbm = (r.get("argument_size_in_bytes", 0) + r.get("temp_size_in_bytes", 0)) / 1e9
+        out.append(
+            f"{r['arch']},{r['shape']},{mesh},ok,"
+            f"{r['t_compute_s']:.4g},{r['t_memory_s']:.4g},{r['t_collective_s']:.4g},"
+            f"{r['bottleneck']},{r['useful_ratio']:.3f},{hbm:.2f}")
+    return out
+
+
+def markdown_table(rows, single_pod_only=True):
+    out = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | bound | useful | HBM GB/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("multi_pod") and single_pod_only:
+            continue
+        if r.get("status") == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped (full attn) | — | — |")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r.get('arch')} | {r.get('shape')} | FAIL | | | | | |")
+            continue
+        hbm = (r.get("argument_size_in_bytes", 0) + r.get("temp_size_in_bytes", 0)) / 1e9
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3g} | "
+            f"{r['t_memory_s']:.3g} | {r['t_collective_s']:.3g} | "
+            f"**{r['bottleneck']}** | {r['useful_ratio']:.2f} | {hbm:.1f} |")
+    return out

@@ -1,0 +1,60 @@
+"""Benchmark harness entry point: one section per paper table + APNC hot-loop
+micro-benches + the roofline table from the dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--skip-tables]
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract) followed by the
+paper-table results and claim verdicts.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="more seeds / larger n")
+    ap.add_argument("--skip-tables", action="store_true")
+    ap.add_argument("--skip-micro", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import kernel_bench, paper_tables, roofline_table
+
+    print("name,us_per_call,derived")
+    if not args.skip_micro:
+        for row in kernel_bench.run_all():
+            print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+
+    rows = []
+    if not args.skip_tables:
+        t0 = time.time()
+        seeds = (0, 1, 2) if args.full else (0, 1)
+        rows += paper_tables.table2(seeds=seeds)
+        rows += paper_tables.table3(seeds=(0, 1) if args.full else (0,))
+        print(f"# paper tables computed in {time.time() - t0:.1f}s")
+        print("table,dataset,method,l,nmi,std,embed_s")
+        for r in rows:
+            print(f"{r['table']},{r['dataset']},{r['method']},{r['l']},"
+                  f"{r['nmi']:.4f},{r['std']:.4f},{r.get('embed_s', '')}")
+        print("# paper-claim verdicts:")
+        for v in paper_tables.check_paper_claims(rows):
+            print(f"#   {v}")
+
+    # roofline table (requires dry-run artifacts; prints whatever exists)
+    rl_rows = roofline_table.build_rows()
+    if rl_rows:
+        print("# roofline (single-pod 16x16; see EXPERIMENTS.md for the full table)")
+        for line in roofline_table.csv_lines(rl_rows):
+            print(line)
+    else:
+        print("# roofline: no dry-run artifacts yet "
+              "(run PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""repro: Embed-and-Conquer (APNC kernel k-means) as a production JAX framework.
+
+Layers:
+    repro.core         -- the paper: APNC embeddings + MapReduce->shard_map kernel k-means
+    repro.kernels      -- Pallas TPU kernels for the APNC hot loops (+ jnp oracles)
+    repro.models       -- LM model zoo substrate (dense/GQA/MoE/Mamba/RWKV6/hybrid)
+    repro.configs      -- assigned architecture configs + paper dataset configs
+    repro.data         -- synthetic datasets + LM token pipeline
+    repro.distributed  -- sharding rules, checkpointing, compression, pipeline
+    repro.optim        -- AdamW + schedules
+    repro.train        -- train/serve steps, fault-tolerant loop
+    repro.launch       -- mesh, dry-run, train/serve CLIs, elastic restart
+    repro.roofline     -- roofline-term extraction from compiled artifacts
+"""
+__version__ = "1.0.0"

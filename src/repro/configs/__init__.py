@@ -1,0 +1,20 @@
+"""Architecture registry: importing this package registers every assigned arch."""
+from repro.configs.base import (
+    SHAPES, ArchConfig, LayerSpec, MoEConfig, ShapeSpec, get_arch, list_archs,
+    reduced, register,
+)
+from repro.configs import (  # noqa: F401  (registration side effects)
+    command_r_plus_104b,
+    jamba15_large_398b,
+    llama3_8b,
+    llava_next_34b,
+    mixtral_8x7b,
+    musicgen_large,
+    qwen15_05b,
+    qwen2_moe_a27b,
+    qwen3_4b,
+    rwkv6_3b,
+)
+from repro.configs import paper_datasets  # noqa: F401
+
+ALL_ARCHS = list_archs()

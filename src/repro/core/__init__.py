@@ -1,0 +1,25 @@
+"""Core library: the paper's contribution (APNC embeddings + scalable kernel k-means).
+
+Public API:
+    Kernel, make_kernel, self_tuned_rbf      -- kernel functions kappa(.,.)
+    APNCCoefficients, embed, assign          -- the APNC family (Section 4)
+    nystrom.fit / stable.fit                 -- the two instances (Sections 6-7)
+    APNCConfig, fit_predict, predict         -- single-program drivers
+    distributed_fit_predict                  -- the MapReduce->shard_map programs
+    lloyd                                    -- Lloyd-on-embeddings (Algorithm 2)
+    baselines                                -- exact KKM / ApproxKKM / RFF / SV-RFF / 2-stage
+    nmi                                      -- evaluation metric of the paper
+"""
+from repro.core.apnc import APNCCoefficients, assign, embed, pairwise_discrepancy
+from repro.core.kernels_fn import Kernel, make_kernel, self_tuned_rbf
+from repro.core.kkmeans import APNCConfig, fit_coefficients, fit_predict, predict
+from repro.core.lloyd import lloyd, kmeanspp_init
+from repro.core.metrics import nmi
+from repro.core import baselines, distributed, nystrom, stable
+
+__all__ = [
+    "APNCCoefficients", "APNCConfig", "Kernel", "assign", "baselines", "distributed",
+    "embed", "fit_coefficients", "fit_predict", "kmeanspp_init", "lloyd",
+    "make_kernel", "nmi", "nystrom", "pairwise_discrepancy", "predict",
+    "self_tuned_rbf", "stable",
+]

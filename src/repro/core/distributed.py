@@ -1,0 +1,160 @@
+"""Distributed APNC on a TPU mesh — the MapReduce programs of the paper (Alg 1 + 2)
+expressed as shard_map SPMD programs.
+
+Mapping (DESIGN.md section 2):
+  * HDFS data blocks          -> X / Y sharded over the ("pod","data") mesh axes
+  * broadcast of (R, L)       -> replicated coefficient arrays (they are small; P4.3)
+  * map-only embedding job    -> shard-local gram + matmul, ZERO collectives
+  * in-mapper combiner (Z, g) -> shard-local sufficient stats
+  * shuffle of (Z, g)         -> ONE psum of (k*m + k) floats per Lloyd iteration
+  * single reducer Y_bar      -> computed redundantly on every shard post-psum
+
+The embedding phase HLO is asserted collective-free and the clustering phase HLO is
+asserted to contain only the (Z, g) psum in tests/test_distributed.py — these are the
+paper's two communication claims, checked structurally.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.apnc import (
+    APNCCoefficients,
+    Discrepancy,
+    embed,
+    pairwise_discrepancy,
+    sufficient_stats,
+)
+
+Array = jax.Array
+
+
+def data_axes_of(mesh: Mesh) -> tuple[str, ...]:
+    """The axes APNC shards rows over: every mesh axis except 'model' (the APNC
+    programs have no tensor-parallel dimension — 'model' stays idle/replicated,
+    or is used by the caller to run independent restarts)."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def shard_rows(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P(data_axes_of(mesh)))
+
+
+def distributed_embed(
+    mesh: Mesh, X: Array, coeffs: APNCCoefficients, *, use_pallas: bool = False
+) -> Array:
+    """Algorithm 1 on the mesh. X is row-sharded; (R, L) replicated. Map-only:
+    the lowered program contains no collectives (asserted in tests)."""
+    axes = data_axes_of(mesh)
+
+    def block(x_shard, landmarks, R):
+        c = APNCCoefficients(landmarks, R, coeffs.kernel, coeffs.discrepancy)
+        if use_pallas:
+            from repro.kernels import ops
+
+            return ops.apnc_embed(x_shard, c)
+        return embed(x_shard, c)
+
+    fn = jax.shard_map(
+        block,
+        mesh=mesh,
+        in_specs=(P(axes), P(), P()),
+        out_specs=P(axes),
+    )
+    return fn(X, coeffs.landmarks, coeffs.R)
+
+
+@partial(jax.jit, static_argnames=("mesh", "k", "discrepancy", "iters", "use_pallas"))
+def distributed_lloyd(
+    mesh: Mesh,
+    Y: Array,
+    init_centroids: Array,
+    *,
+    k: int,
+    discrepancy: Discrepancy,
+    iters: int = 20,
+    use_pallas: bool = False,
+) -> tuple[Array, Array]:
+    """Algorithm 2 on the mesh. Per iteration, each shard:
+      map:     assign its rows to the nearest centroid under e  (Eq. 4)
+      combine: accumulate Z (k, m) and g (k,) locally
+      shuffle: psum((Z, g)) over the data axes       <- the ONLY communication
+      reduce:  Y_bar = Z / g, computed redundantly everywhere
+
+    Returns (labels row-sharded, final centroids replicated).
+    """
+    axes = data_axes_of(mesh)
+
+    def shard_fn(y_shard, c0):
+        def body(_, c):
+            if use_pallas:
+                from repro.kernels import ops
+
+                Z, g, _ = ops.apnc_assign(y_shard, c, discrepancy)
+            else:
+                D = pairwise_discrepancy(y_shard, c, discrepancy)
+                labels = jnp.argmin(D, axis=-1)
+                Z, g = sufficient_stats(y_shard, labels, k)
+            Z = jax.lax.psum(Z, axes)
+            g = jax.lax.psum(g, axes)
+            return jnp.where((g > 0)[:, None], Z / jnp.maximum(g, 1.0)[:, None], c)
+
+        c = jax.lax.fori_loop(0, iters, body, c0)
+        D = pairwise_discrepancy(y_shard, c, discrepancy)
+        return jnp.argmin(D, axis=-1).astype(jnp.int32), c
+
+    fn = jax.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(P(axes), P()),
+        out_specs=(P(axes), P()),
+    )
+    return fn(Y, init_centroids)
+
+
+def sample_rows_global(key: Array, X: Array, count: int) -> Array:
+    """Uniform global row sample (used for landmark selection and seeding). Under
+    jit/SPMD the gather crosses shards automatically; count is tiny (<= ~2k)."""
+    idx = jax.random.choice(key, X.shape[0], (count,), replace=False)
+    return jnp.take(X, idx, axis=0)
+
+
+def distributed_fit_predict(
+    mesh: Mesh,
+    key: Array,
+    X: Array,
+    kernel,
+    k: int,
+    cfg=None,
+):
+    """End-to-end distributed embed-and-conquer.
+
+    1. sample landmarks globally (Alg 3/4 map phase),
+    2. fit coefficients — replicated; the l x l eigensolve is tiny (P4.3),
+    3. Algorithm 1 embedding (map-only),
+    4. k-means++-lite seeding from a global sample,
+    5. Algorithm 2 Lloyd with psum'd (Z, g).
+    """
+    from repro.core.kkmeans import APNCConfig, fit_coefficients
+    from repro.core.lloyd import kmeanspp_init
+
+    cfg = cfg or APNCConfig()
+    k_land, k_seed = jax.random.split(key)
+
+    # Landmark sample + coefficient fit: small, replicated everywhere.
+    coeffs = fit_coefficients(k_land, X, kernel, cfg)
+
+    Y = distributed_embed(mesh, X, coeffs, use_pallas=cfg.use_pallas)
+
+    # Seed on a bounded global sample so seeding cost is O(sample * k), not O(n k).
+    sample = sample_rows_global(k_seed, Y, min(Y.shape[0], 16 * k))
+    c0 = kmeanspp_init(k_seed, sample, k, coeffs.discrepancy)
+
+    labels, centroids = distributed_lloyd(
+        mesh, Y, c0, k=k, discrepancy=coeffs.discrepancy, iters=cfg.iters,
+        use_pallas=cfg.use_pallas,
+    )
+    return labels, centroids, coeffs

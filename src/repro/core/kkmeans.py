@@ -1,0 +1,80 @@
+"""Top-level drivers: fit an APNC embedding then cluster it (the paper's two-phase
+pipeline), single-program version. The distributed version lives in distributed.py
+and reuses the same fit functions (coefficients are tiny and mesh-replicated).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nystrom, stable
+from repro.core.apnc import APNCCoefficients, embed
+from repro.core.kernels_fn import Kernel
+from repro.core.lloyd import LloydResult, lloyd
+
+Array = jax.Array
+Method = Literal["nystrom", "sd"]
+
+
+@dataclasses.dataclass(frozen=True)
+class APNCConfig:
+    """Hyperparameters of the paper's experiments (Section 9)."""
+
+    method: Method = "nystrom"
+    l: int = 300  # landmark sample size
+    m: int = 200  # embedding dimensionality (per block)
+    t: int | None = None  # APNC-SD subset size; default 0.4 * l
+    q: int = 1  # number of R blocks (ensemble)
+    iters: int = 20  # Lloyd cap; the paper fixes 20
+    n_init: int = 4  # k-means++ restarts; lowest-inertia run wins
+    use_pallas: bool = False  # route hot loops through the Pallas kernels
+
+
+def fit_coefficients(key: Array, X: Array, kernel: Kernel, cfg: APNCConfig) -> APNCCoefficients:
+    if cfg.method == "nystrom":
+        return nystrom.fit(key, X, kernel, l=cfg.l, m=cfg.m, q=cfg.q)
+    if cfg.method == "sd":
+        return stable.fit(key, X, kernel, l=cfg.l, m=cfg.m, t=cfg.t, q=cfg.q)
+    raise ValueError(f"unknown APNC method {cfg.method!r}")
+
+
+def apnc_embed(X: Array, coeffs: APNCCoefficients, use_pallas: bool = False) -> Array:
+    if use_pallas:
+        from repro.kernels import ops  # local import: kernels are optional at runtime
+
+        return ops.apnc_embed(X, coeffs)
+    return embed(X, coeffs)
+
+
+def fit_predict(
+    key: Array,
+    X: Array,
+    kernel: Kernel,
+    k: int,
+    cfg: APNCConfig | None = None,
+) -> tuple[LloydResult, APNCCoefficients]:
+    """Embed-and-conquer: APNC embedding + Lloyd on embeddings. Returns labels etc.
+    plus the coefficients (so new points can be embedded & assigned online)."""
+    cfg = cfg or APNCConfig()
+    k_fit, k_cluster = jax.random.split(key)
+    coeffs = fit_coefficients(k_fit, X, kernel, cfg)
+    Y = apnc_embed(X, coeffs, cfg.use_pallas)
+    best = None
+    for r in range(max(1, cfg.n_init)):  # restarts: kernel k-means is init-sensitive
+        res = lloyd(Y, k, discrepancy=coeffs.discrepancy, iters=cfg.iters,
+                    key=jax.random.fold_in(k_cluster, r))
+        if best is None or float(res.inertia) < float(best.inertia):
+            best = res
+    return best, coeffs
+
+
+def predict(X: Array, coeffs: APNCCoefficients, centroids: Array, use_pallas: bool = False) -> Array:
+    """Assign unseen points: embed then nearest centroid under e — the online path
+    a serving system uses (Property 4.4)."""
+    from repro.core.apnc import assign
+
+    Y = apnc_embed(X, coeffs, use_pallas)
+    return assign(Y, centroids, coeffs.discrepancy)

@@ -1,0 +1,95 @@
+"""Lloyd iterations on APNC embeddings (paper Algorithm 2, single-program form).
+
+The distributed (shard_map) version in repro/core/distributed.py shares the same
+per-iteration body; here Z and g are global because all rows are local.
+
+Design notes:
+  * the iteration is a lax.fori_loop so the whole clustering jits to one program;
+  * empty clusters keep their previous centroid (g clamped to >= 1 on zero counts),
+    matching what a MapReduce reducer that receives no values for key c does;
+  * init is k-means++ under the declared discrepancy e (l2 for Nys, l1 for SD) —
+    seeding in the *embedding* geometry the iterations will use.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.apnc import Discrepancy, pairwise_discrepancy, sufficient_stats
+
+Array = jax.Array
+
+
+class LloydResult(NamedTuple):
+    labels: Array  # (n,) int32
+    centroids: Array  # (k, m)
+    inertia: Array  # () sum of e(y_i, c_{pi(i)})
+    iters: Array  # () iterations actually run
+
+
+def kmeanspp_init(key: Array, Y: Array, k: int, discrepancy: Discrepancy) -> Array:
+    """k-means++ seeding in embedding space with D(x)^2 weighting under e."""
+    n = Y.shape[0]
+    k0, key = jax.random.split(key)
+    first = jax.random.randint(k0, (), 0, n)
+    centroids = jnp.zeros((k, Y.shape[-1]), Y.dtype).at[0].set(Y[first])
+    mind = pairwise_discrepancy(Y, centroids[:1], discrepancy)[:, 0]  # (n,)
+
+    def body(i, carry):
+        centroids, mind, key = carry
+        key, kc = jax.random.split(key)
+        w = mind * mind
+        p = w / jnp.maximum(jnp.sum(w), 1e-30)
+        nxt = jax.random.choice(kc, n, (), p=p)
+        centroids = centroids.at[i].set(Y[nxt])
+        d_new = pairwise_discrepancy(Y, Y[nxt][None, :], discrepancy)[:, 0]
+        return centroids, jnp.minimum(mind, d_new), key
+
+    centroids, _, _ = jax.lax.fori_loop(1, k, body, (centroids, mind, key))
+    return centroids
+
+
+def lloyd(
+    Y: Array,
+    k: int,
+    *,
+    discrepancy: Discrepancy,
+    iters: int = 20,
+    key: Array | None = None,
+    init: Array | None = None,
+    tol: float = 0.0,
+) -> LloydResult:
+    """Run `iters` Lloyd iterations of Algorithm 2 on embeddings Y (n, m).
+
+    Stops early when the label vector stops changing (tol == 0 exact-fixed-point)
+    — the paper fixes 20 iterations in Section 9, which is our default cap.
+    """
+    if init is None:
+        if key is None:
+            raise ValueError("provide key= for k-means++ init or init= centroids")
+        init = kmeanspp_init(key, Y, k, discrepancy)
+
+    def body(carry):
+        i, centroids, labels, _ = carry
+        D = pairwise_discrepancy(Y, centroids, discrepancy)  # (n, k)
+        new_labels = jnp.argmin(D, axis=-1)
+        Z, g = sufficient_stats(Y, new_labels, k)  # (k, m), (k,)
+        # empty cluster -> keep old centroid (reducer receives no values for c)
+        new_centroids = jnp.where(
+            (g > 0)[:, None], Z / jnp.maximum(g, 1.0)[:, None], centroids
+        )
+        changed = jnp.any(new_labels != labels)
+        return i + 1, new_centroids, new_labels, changed
+
+    def cond(carry):
+        i, _, _, changed = carry
+        return jnp.logical_and(i < iters, changed)
+
+    n = Y.shape[0]
+    state = (jnp.asarray(0), init, jnp.full((n,), -1, jnp.int32), jnp.asarray(True))
+    it, centroids, labels, _ = jax.lax.while_loop(cond, body, state)
+    D = pairwise_discrepancy(Y, centroids, discrepancy)
+    inertia = jnp.sum(jnp.min(D, axis=-1))
+    return LloydResult(labels.astype(jnp.int32), centroids, inertia, it)

@@ -1,0 +1,2 @@
+from repro.distributed import sharding
+from repro.distributed import checkpoint, compression, pipeline

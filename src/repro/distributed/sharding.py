@@ -1,0 +1,220 @@
+"""Sharding rules: param-path -> PartitionSpec, batch/cache specs per shape.
+
+Axis semantics (DESIGN.md section 6):
+    "model"          16-way tensor parallelism (heads / d_ff / vocab / d_inner)
+    "data"           data parallelism + FSDP storage sharding (ZeRO) of params
+                     and optimizer state (cfg.zero_shard_params)
+    "pod"            2nd-level data parallelism across pods (gradients cross the
+                     pod axis once per step; FSDP gathers stay INTRA-pod)
+
+Rules are keyed on (context, name, ndim) where context is "mixer"/"ffn"/top-level;
+params under "groups" carry a leading layer-stack dim (spec gets a None prepended).
+The optimizer state mirrors the param tree, so it inherits these specs (ZeRO-1/3:
+moments live sharded over both axes wherever the param does).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, SHAPES
+
+Array = jax.Array
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def fsdp_axis(cfg: ArchConfig) -> str | None:
+    """FSDP storage axis — intra-pod only (DCN-crossing gathers would dominate)."""
+    return "data" if cfg.zero_shard_params else None
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _param_rule(cfg: ArchConfig, context: str, name: str, ndim: int) -> P:
+    """PartitionSpec for an UNSTACKED param. `context` in {"mixer","ffn","top"}."""
+    f = fsdp_axis(cfg)
+    if context == "top":
+        if name == "embed":
+            return P(None, "model", f) if ndim == 3 else P("model", f)
+        if name == "head":
+            return P(None, f, "model") if ndim == 3 else P(f, "model")
+        return P()  # final_norm
+    if context == "mixer":
+        attn = {
+            "wq": P(f, "model", None),
+            "wk": P(f, None, None),  # KV heads replicated over model (GQA)
+            "wv": P(f, None, None),
+            "wo": P("model", None, f),
+            "bq": P("model", None),
+            "bk": P(),
+            "bv": P(),
+            "q_scale": P(),
+            "k_scale": P(),
+        }
+        mamba = {
+            "in_proj": P(f, "model"),
+            "conv_w": P(None, "model"),
+            "conv_b": P("model"),
+            "x_proj": P("model", None),
+            "dt_proj": P(None, "model"),
+            "dt_bias": P("model"),
+            "A_log": P("model", None),
+            "D": P("model"),
+            "out_proj": P("model", f),
+        }
+        rwkv = {
+            "mu_x": P(),
+            "mu": P(),
+            "lora_A": P(f, None),
+            "lora_B": P(),
+            "wr": P(f, "model"),
+            "wk": P(f, "model"),
+            "wv": P(f, "model"),
+            "wg": P(f, "model"),
+            "wo": P("model", f),
+            "w0": P("model"),
+            "wA": P(f, None),
+            "wB": P(None, "model"),
+            "u": P("model", None),
+            "ln_scale": P("model"),
+            "ln_bias": P("model"),
+        }
+        # disambiguate wk/wv/wo/wr between attention (3D) and rwkv (2D)
+        if name in attn and ndim == len(attn[name]):
+            return attn[name]
+        if name in rwkv and ndim == len(rwkv[name]):
+            return rwkv[name]
+        if name in attn:
+            return attn[name]
+        if name in rwkv:
+            return rwkv[name]
+        if name in mamba:
+            return mamba[name]
+        raise KeyError(f"no mixer rule for {name} ndim={ndim}")
+    if context == "ffn":
+        ffn = {
+            # dense mlp / rwkv cmix (2D) and moe experts (3D)
+            "wi": P(f, "model") if ndim == 2 else P(None, f, "model"),
+            "wo": P("model", f) if ndim == 2 else P(None, "model", f),
+            "router": P(f, None),
+            "shared_wi": P(f, "model"),
+            "shared_wo": P("model", f),
+            "shared_gate": P(),
+            "mu_k": P(),
+            "mu_r": P(),
+            "wk": P(f, "model"),
+            "wv": P("model", f),
+            "wr": P(f, None),
+        }
+        if name in ffn:
+            return ffn[name]
+        raise KeyError(f"no ffn rule for {name} ndim={ndim}")
+    raise KeyError(context)
+
+
+def _path_context(path) -> tuple[str, str, bool]:
+    """(context, leaf_name, under_group_stack) from a tree path."""
+    keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = keys[-1]
+    stacked = "groups" in keys
+    if "mixer" in keys:
+        return "mixer", name, stacked
+    if "ffn" in keys:
+        return "ffn", name, stacked
+    return "top", name, stacked
+
+
+def param_pspecs(cfg: ArchConfig, params: Any) -> Any:
+    """Tree of PartitionSpec matching `params` (works on ShapeDtypeStructs too)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        ctx, name, stacked = _path_context(path)
+        ndim = leaf.ndim - (1 if stacked else 0)
+        if ctx == "top" and name in ("norm1", "norm2"):
+            spec = P()
+        else:
+            spec = _param_rule(cfg, ctx, name, ndim)
+        if stacked:
+            spec = P(None, *spec)
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(cfg: ArchConfig, shape_name: str, mesh: Mesh) -> Any:
+    """Specs for the input batch dict of a given shape. long_500k (batch=1)
+    replicates the batch dim (sequence is sharded in the CACHE instead)."""
+    s = SHAPES[shape_name]
+    dp = dp_axes(mesh)
+    b = None if s.batch < _dp_degree(mesh) else dp
+    specs: dict[str, P] = {}
+    inputs = cfg.input_specs(shape_name)
+    for k, v in inputs.items():
+        specs[k] = P(b, *([None] * (v.ndim - 1)))
+    return specs
+
+
+def _dp_degree(mesh: Mesh) -> int:
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def cache_pspecs(cfg: ArchConfig, shape_name: str, mesh: Mesh, cache: Any) -> Any:
+    """Specs for the decode cache pytree (leading layer-stack dim on every leaf).
+
+    decode_32k: batch-shard the cache; long_500k (batch=1): shard the KV cache
+    SEQUENCE dim over the dp axes (distributed flash-decode) — SSM states have no
+    sequence dim and replicate over dp while sharding heads/d_inner over "model".
+    """
+    s = SHAPES[shape_name]
+    dp = dp_axes(mesh)
+    seq_shard = s.batch < _dp_degree(mesh)
+    b = None if seq_shard else dp
+
+    def spec_for(path, leaf) -> P:
+        keys = [getattr(k, "key", str(k)) for k in path]
+        name = keys[-1]
+        if name in ("k", "v"):  # (G, B, T, KV, Dh)
+            return P(None, b, dp if seq_shard else None, None, None)
+        if name in ("k_scale", "v_scale"):  # (G, B, T, KV) int8-cache scales
+            return P(None, b, dp if seq_shard else None, None)
+        if name == "h":  # mamba (G, B, di, N)
+            return P(None, b, "model", None)
+        if name == "conv":  # (G, B, W-1, di)
+            return P(None, b, None, "model")
+        if name == "S":  # rwkv (G, B, Hp, hs, hs)
+            return P(None, b, "model", None, None)
+        if name in ("x_tmix", "x_cmix"):  # (G, B, 1, d)
+            return P(None, b, None, None)
+        raise KeyError(name)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(treedef, [spec_for(p, l) for p, l in flat])
+
+
+def to_shardings(mesh: Mesh, pspec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def opt_state_pspecs(cfg: ArchConfig, params: Any, opt_state) -> Any:
+    """AdamWState(step, mu, nu): moments mirror the param specs (ZeRO)."""
+    pspecs = param_pspecs(cfg, params)
+    return type(opt_state)(step=P(), mu=pspecs, nu=pspecs)

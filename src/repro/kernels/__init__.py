@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (DESIGN.md section 7):
+
+    apnc_embed       -- fused pairwise-kernel + coefficient contraction (Alg 1)
+    apnc_assign      -- fused distance/argmin/sufficient-stats          (Alg 2)
+    flash_attention  -- causal flash attention for the LM substrate (tile-skip
+                        of masked blocks at the Mosaic grid level)
+
+ops.py: jit'd wrappers (padding + dispatch; interpret=True off-TPU).
+ref.py: pure-jnp oracles the kernels are validated against.
+EXAMPLE.md kept from scaffold for reference.
+"""
+from repro.kernels import ops, ref

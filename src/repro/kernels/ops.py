@@ -1,0 +1,144 @@
+"""jit'd public wrappers for the Pallas kernels: padding, dispatch, unpadding.
+
+On non-TPU backends the kernels run with interpret=True (the kernel body executes
+in Python/XLA on CPU) — this is how this container validates them; on TPU the same
+BlockSpecs compile to Mosaic. `interpret=None` auto-detects.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.apnc import APNCCoefficients
+from repro.core.kernels_fn import Kernel
+from repro.kernels import apnc_assign as _assign
+from repro.kernels import apnc_embed as _embed
+
+Array = jax.Array
+
+_LANE = 128  # TPU lane width: last-dim tiles should be multiples of this
+_BIG = 1.0e6  # sentinel coordinate for padded centroids (never wins argmin)
+
+
+def _auto_interpret(interpret: bool | None) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _pad_to(x: Array, mult: int, axis: int, value: float = 0.0) -> Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@partial(jax.jit, static_argnames=("kernel", "bn", "bl", "bd", "interpret"))
+def _embed_block_padded(X, landmarks, R, kernel: Kernel, bn, bl, bd, interpret):
+    n = X.shape[0]
+    Xp = _pad_to(_pad_to(X, bd, 1), bn, 0)
+    Lp = _pad_to(_pad_to(landmarks, bd, 1), bl, 0)
+    # Pad R columns (landmark dim) with ZEROS so padded landmarks contribute 0,
+    # and rows (embedding dim) with zeros -> extra output dims sliced off.
+    Rp = _pad_to(_pad_to(R, bl, 1), _LANE, 0)
+    Y = _embed.apnc_embed_block(Xp, Lp, Rp, kernel, bn=bn, bl=bl, bd=bd, interpret=interpret)
+    return Y[:n, : R.shape[0]]
+
+
+def apnc_embed(
+    X: Array,
+    coeffs: APNCCoefficients,
+    *,
+    bn: int = _embed.DEFAULT_BN,
+    bl: int = _embed.DEFAULT_BL,
+    bd: int = _embed.DEFAULT_BD,
+    interpret: bool | None = None,
+) -> Array:
+    """Fused APNC embedding (Algorithm 1 hot loop). X (n, d) -> Y (n, m_total) f32."""
+    interpret = _auto_interpret(interpret)
+    bl_eff = min(bl, max(_LANE, ((coeffs.landmarks.shape[1] + _LANE - 1) // _LANE) * _LANE))
+    bd_eff = min(bd, max(_LANE, ((X.shape[1] + _LANE - 1) // _LANE) * _LANE))
+    bn_eff = min(bn, max(8, ((X.shape[0] + 7) // 8) * 8))
+    parts = [
+        _embed_block_padded(
+            X, coeffs.landmarks[b], coeffs.R[b], coeffs.kernel,
+            bn_eff, bl_eff, bd_eff, interpret,
+        )
+        for b in range(coeffs.q)
+    ]
+    return jnp.concatenate(parts, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("discrepancy", "bn", "interpret"))
+def _assign_padded(Y, C, discrepancy, bn, interpret):
+    n, m = Y.shape
+    k = C.shape[0]
+    Yp = _pad_to(_pad_to(Y, _LANE, 1), bn, 0)
+    # zero-pad the feature dim on BOTH Y and C: l2/l1 distances are unchanged.
+    Cp = _pad_to(_pad_to(C, _LANE, 1), 8, 0)
+    if Cp.shape[0] != k:  # sentinel rows: huge coords never win the argmin
+        Cp = Cp.at[k:].set(_BIG)
+    Z, g, labels = _assign.apnc_assign_padded(
+        Yp, Cp, discrepancy, n_actual=n, bn=bn, interpret=interpret
+    )
+    return Z[:k, :m], g[:k, 0], labels[:n, 0]
+
+
+def apnc_assign(
+    Y: Array,
+    C: Array,
+    discrepancy: str,
+    *,
+    bn: int = _assign.DEFAULT_BN,
+    interpret: bool | None = None,
+) -> tuple[Array, Array, Array]:
+    """Fused assignment + sufficient stats (Algorithm 2 map + combiner).
+
+    Y (n, m), C (k, m) -> Z (k, m) f32, g (k,) f32, labels (n,) i32.
+    """
+    interpret = _auto_interpret(interpret)
+    bn_eff = min(bn, max(8, ((Y.shape[0] + 7) // 8) * 8))
+    return _assign_padded(Y, C, discrepancy, bn_eff, interpret)
+
+
+def flash_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    window: int = 0,
+    bq: int | None = None,
+    bk: int | None = None,
+    interpret: bool | None = None,
+) -> Array:
+    """Causal flash attention over flat heads (Pallas kernel, TPU target).
+
+    q/k/v: (B, S, H, Dh) with equal head counts (GQA repeat upstream).
+    Pads S to tile multiples (padded key rows are masked out by causality since
+    their positions exceed every query position) and Dh to the 128 lane.
+    """
+    from repro.kernels import flash_attention as _fa
+
+    interpret = _auto_interpret(interpret)
+    B, S, H, Dh = q.shape
+    bq = bq or min(_fa.DEFAULT_BQ, max(8, S))
+    bk = bk or min(_fa.DEFAULT_BK, max(8, S))
+    tile = max(bq, bk)
+    Sp = ((S + tile - 1) // tile) * tile
+    Dp = ((Dh + _LANE - 1) // _LANE) * _LANE
+
+    def prep(x):
+        x = jnp.pad(x, ((0, 0), (0, Sp - S), (0, 0), (0, Dp - Dh)))
+        return x.transpose(0, 2, 1, 3).reshape(B * H, Sp, Dp)
+
+    out = _fa.flash_attention_bhsd(
+        prep(q), prep(k), prep(v), window=window, scale=Dh ** -0.5,
+        bq=min(bq, Sp), bk=min(bk, Sp), interpret=interpret,
+    )
+    out = out.reshape(B, H, Sp, Dp).transpose(0, 2, 1, 3)
+    return out[:, :S, :, :Dh]

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels. These are the ground truth the kernels
+are validated against (tests/test_kernels.py sweeps shapes/dtypes, interpret=True).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.apnc import APNCCoefficients, Discrepancy, pairwise_discrepancy
+from repro.core.kernels_fn import Kernel
+
+Array = jax.Array
+
+
+def apnc_embed_ref(X: Array, landmarks: Array, R: Array, kernel: Kernel) -> Array:
+    """Oracle for the fused embedding: Y = kappa(X, L) @ R^T, per block, concat.
+
+    X: (n, d); landmarks: (q, l_b, d); R: (q, m_b, l_b)  ->  (n, q * m_b).
+    Computed in f32 regardless of input dtype (the kernel accumulates in f32).
+    """
+    Xf = X.astype(jnp.float32)
+    parts = []
+    for b in range(landmarks.shape[0]):
+        K = kernel.gram(Xf, landmarks[b].astype(jnp.float32))
+        parts.append(K @ R[b].astype(jnp.float32).T)
+    return jnp.concatenate(parts, axis=-1)
+
+
+def apnc_assign_ref(
+    Y: Array, C: Array, discrepancy: Discrepancy
+) -> tuple[Array, Array, Array]:
+    """Oracle for the fused assignment: distances -> argmin -> sufficient stats.
+
+    Y: (n, m), C: (k, m)  ->  Z (k, m) f32, g (k,) f32, labels (n,) int32.
+    """
+    Yf = Y.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    D = pairwise_discrepancy(Yf, Cf, discrepancy)
+    labels = jnp.argmin(D, axis=-1).astype(jnp.int32)
+    onehot = jax.nn.one_hot(labels, C.shape[0], dtype=jnp.float32)
+    Z = onehot.T @ Yf
+    g = jnp.sum(onehot, axis=0)
+    return Z, g, labels
+
+
+def flash_attention_ref(Y_q: Array, K: Array, V: Array, window: int = 0) -> Array:
+    """Oracle: direct masked softmax attention. (B, S, H, Dh) flat heads."""
+    Dh = Y_q.shape[-1]
+    s = jnp.einsum("bqhd,bthd->bhqt", Y_q.astype(jnp.float32),
+                   K.astype(jnp.float32)) * (Dh ** -0.5)
+    S = Y_q.shape[1]
+    pos = jnp.arange(S)
+    mask = pos[:, None] >= pos[None, :]
+    if window:
+        mask = mask & (pos[:, None] - pos[None, :] < window)
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqt,bthd->bqhd", w, V.astype(jnp.float32))
+    return out.astype(Y_q.dtype)

@@ -1,0 +1,1 @@
+# NOTE: do not import dryrun here — it must own the first jax import.

@@ -1,0 +1,289 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). Everything else follows.
+"""Multi-pod dry-run: AOT lower + compile every (arch x input-shape x mesh) cell
+against the production meshes with 512 placeholder host devices.
+
+For each cell this records (JSONL, read by repro.roofline and benchmarks):
+    flops / bytes from compiled.cost_analysis()
+    per-device memory from compiled.memory_analysis()
+    collective operand bytes parsed from the optimized HLO (compiled.as_text())
+    lowering + compile wall time
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+    PYTHONPATH=src python -m repro.launch.dryrun --arch ... --shape ... --opt <flag>
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_arch, list_archs
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import model
+from repro.models.common import Policy
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+from repro.train import step as step_lib
+
+RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "dryrun_results.jsonl"
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|f64|s64|c64)\[([\d,]*)\]")
+
+_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+          "pred": 1, "f64": 8, "s64": 8, "c64": 8}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum OUTPUT-side operand bytes of every collective op in optimized HLO.
+    Returns per-kind byte totals. HLO lines look like:
+       %all-reduce.1 = f32[1024,512] all-reduce(...), replica_groups=...
+    For tuple shapes we sum every component."""
+    per_kind = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for ln in hlo_text.splitlines():
+        stripped = ln.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s+([\w\-]+)\(", stripped)
+        if not m:
+            continue
+        op = m.group(2)
+        kind = None
+        for k in _COLLECTIVES:
+            if op == k or op.startswith(k + "."):
+                kind = k
+                break
+        if kind is None:
+            continue
+        shape_str = m.group(1)
+        total = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(shape_str))
+        per_kind[kind] += total
+        counts[kind] += 1
+    per_kind_counts = {f"n_{k}": v for k, v in counts.items()}
+    return {**per_kind, **per_kind_counts,
+            "total_collective_bytes": sum(per_kind[k] for k in _COLLECTIVES)}
+
+
+def _abstract_state(cfg, policy, opt_cfg):
+    """Param + optimizer-state ShapeDtypeStructs via eval_shape (no allocation)."""
+    params = jax.eval_shape(lambda k: model.init(k, cfg, policy), jax.random.PRNGKey(0))
+    opt_state = jax.eval_shape(lambda: adamw.init(params, opt_cfg))
+    return params, opt_state
+
+
+CACHE_DTYPE = jnp.bfloat16  # overridden by --opt kv_int8
+ACCUM_STEPS = 1  # overridden by --opt accum=N (microbatch gradient accumulation)
+
+
+def _abstract_cache(cfg, batch, max_len):
+    return jax.eval_shape(lambda: model.init_cache(cfg, batch, max_len, CACHE_DTYPE))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *, opts=(),
+             dump_hlo_dir=None) -> dict:
+    cfg = get_arch(arch)
+    for o in opts:  # hillclimb option flags, e.g. "no_fsdp"
+        cfg = _apply_opt(cfg, o)
+    if shape_name not in cfg.runnable_shapes():
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": "full-attention arch: long_500k skipped"}
+    s = SHAPES[shape_name]
+    policy = Policy(param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16)
+    opt_cfg = AdamWConfig(moments_dtype=cfg.moments_dtype)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+           "mesh": dict(zip(mesh.axis_names, (mesh.shape[a] for a in mesh.axis_names))),
+           "opts": list(opts)}
+
+    t0 = time.time()
+    with mesh:
+        batch_specs = shd.to_shardings(mesh, shd.batch_pspecs(cfg, shape_name, mesh))
+        inputs = cfg.input_specs(shape_name)
+
+        if s.kind == "train":
+            params, opt_state = _abstract_state(cfg, policy, opt_cfg)
+            pspecs = shd.param_pspecs(cfg, params)
+            p_shard = shd.to_shardings(mesh, pspecs)
+            o_shard = shd.to_shardings(mesh, shd.opt_state_pspecs(cfg, params, opt_state))
+            from repro.optim.schedule import warmup_cosine
+            train_step = step_lib.make_train_step(cfg, policy, opt_cfg, warmup_cosine,
+                                                  accum_steps=ACCUM_STEPS)
+            jitted = jax.jit(
+                train_step,
+                in_shardings=(p_shard, o_shard, batch_specs),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params, opt_state, inputs)
+        elif s.kind == "prefill":
+            params, _ = _abstract_state(cfg, policy, opt_cfg)
+            p_shard = shd.to_shardings(mesh, shd.param_pspecs(cfg, params))
+            prefill = step_lib.make_prefill_step(cfg, policy)
+            jitted = jax.jit(prefill, in_shardings=(p_shard, batch_specs))
+            lowered = jitted.lower(params, inputs)
+        else:  # decode
+            params, _ = _abstract_state(cfg, policy, opt_cfg)
+            p_shard = shd.to_shardings(mesh, shd.param_pspecs(cfg, params))
+            cache = _abstract_cache(cfg, s.batch, s.seq_len)
+            c_shard = shd.to_shardings(mesh, shd.cache_pspecs(cfg, shape_name, mesh, cache))
+            serve = step_lib.make_decode_step(cfg, policy)
+            jitted = jax.jit(
+                serve,
+                in_shardings=(p_shard, batch_specs, c_shard, None),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(params, inputs, cache, jax.ShapeDtypeStruct((), jnp.int32))
+
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        cost = compiled.cost_analysis() or {}
+        rec["xla_flops_once"] = float(cost.get("flops", -1))  # loop bodies once!
+        rec["xla_bytes_once"] = float(cost.get("bytes accessed", -1))
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "generated_code_size_in_bytes",
+                         "alias_size_in_bytes"):
+                rec[attr] = int(getattr(mem, attr, -1))
+        # loop-aware per-device terms (repro.roofline.hlo_cost): while bodies are
+        # multiplied by their known_trip_count, collectives included.
+        from repro.roofline.hlo_cost import analyze_hlo
+        t2 = time.time()
+        hlo = compiled.as_text()
+        rec.update(analyze_hlo(hlo))
+        rec["total_collective_bytes"] = rec.get("collective_bytes", 0.0)
+        rec["analyze_s"] = round(time.time() - t2, 2)
+        if dump_hlo_dir is not None:
+            import gzip
+            dump_hlo_dir.mkdir(parents=True, exist_ok=True)
+            tag = f"{arch}__{shape_name}__{'mp' if multi_pod else 'sp'}"
+            if opts:
+                tag += "__" + "_".join(o.replace("=", "-") for o in opts)
+            with gzip.open(dump_hlo_dir / f"{tag}.hlo.gz", "wt") as f:
+                f.write(hlo)
+        rec["status"] = "ok"
+    return rec
+
+
+def _apply_opt(cfg, opt: str):
+    """Named hillclimb variants (see EXPERIMENTS.md §Perf)."""
+    import dataclasses
+    if opt == "no_fsdp":
+        return dataclasses.replace(cfg, zero_shard_params=False)
+    if opt == "fsdp":
+        return dataclasses.replace(cfg, zero_shard_params=True)
+    if opt.startswith("accum="):
+        global ACCUM_STEPS
+        ACCUM_STEPS = int(opt.split("=")[1])
+        return cfg
+    if opt.startswith("wkv_chunk="):
+        from repro.models import rwkv6 as rwkv_lib
+        rwkv_lib.WKV_CHUNK = int(opt.split("=")[1])
+        return cfg
+    if opt == "kv_int8":
+        global CACHE_DTYPE
+        CACHE_DTYPE = jnp.int8
+        return cfg
+    if opt == "causal_skip":
+        from repro.models import attention as attn_lib
+        attn_lib.CAUSAL_SKIP = True
+        return cfg
+    if opt == "no_remat":
+        return dataclasses.replace(cfg, remat="none")
+    if opt.startswith("moe_cf="):  # capacity factor override
+        from repro.models import moe as moe_lib
+        moe_lib.CAPACITY_FACTOR = float(opt.split("=")[1])
+        return cfg
+    if opt.startswith("moe_group="):
+        from repro.models import moe as moe_lib
+        moe_lib.GROUP_SIZE = int(opt.split("=")[1])
+        return cfg
+    if opt.startswith("loss_chunk="):
+        from repro.models import model as model_lib
+        model_lib.LOSS_CHUNK = int(opt.split("=")[1])
+        return cfg
+    if opt.startswith("qchunk="):
+        from repro.models import attention as attn_lib
+        attn_lib.Q_CHUNK = int(opt.split("=")[1])
+        return cfg
+    if opt.startswith("kvchunk="):
+        from repro.models import attention as attn_lib
+        attn_lib.KV_CHUNK = int(opt.split("=")[1])
+        return cfg
+    raise ValueError(f"unknown opt {opt!r}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true", help="2x16x16 mesh (else 16x16)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--opt", action="append", default=[], help="hillclimb variant flag")
+    ap.add_argument("--out", default=str(RESULTS))
+    ap.add_argument("--dump-hlo", default=None,
+                    help="directory for gzipped optimized-HLO dumps (re-analysis without recompiling)")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str, bool]] = []
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for sh in shapes:
+            for mp in meshes:
+                cells.append((a, sh, mp))
+
+    out_path = Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    n_ok = n_fail = 0
+    for a, sh, mp in cells:
+        tag = f"{a} x {sh} x {'2x16x16' if mp else '16x16'}" + (f" {args.opt}" if args.opt else "")
+        try:
+            rec = run_cell(a, sh, mp, opts=tuple(args.opt),
+                           dump_hlo_dir=Path(args.dump_hlo) if args.dump_hlo else None)
+            status = rec["status"]
+            if status == "ok":
+                n_ok += 1
+                print(f"[ok]   {tag}: flops={rec['flops']:.3e} "
+                      f"coll={rec['total_collective_bytes']:.3e}B "
+                      f"lower={rec['lower_s']}s compile={rec['compile_s']}s", flush=True)
+            else:
+                print(f"[skip] {tag}: {rec.get('reason','')}", flush=True)
+        except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+            n_fail += 1
+            rec = {"arch": a, "shape": sh, "multi_pod": mp, "status": "fail",
+                   "opts": list(args.opt),
+                   "error": f"{type(e).__name__}: {str(e)[:2000]}"}
+            print(f"[FAIL] {tag}: {rec['error'][:300]}", flush=True)
+            traceback.print_exc(limit=4)
+        with out_path.open("a") as f:
+            f.write(json.dumps(rec) + "\n")
+    print(f"done: {n_ok} ok, {n_fail} failed", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

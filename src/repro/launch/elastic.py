@@ -1,0 +1,36 @@
+"""Elastic restart: resume a run on a DIFFERENT mesh than it was saved from.
+
+Checkpoints carry no device placement (manifest = logical shapes only), so
+elasticity is just: build the new mesh, rebuild shardings from the SAME rules,
+restore with device_put onto them. `reshard_restore` is the one-call version the
+launcher uses after detecting a changed device count (e.g. a lost node =>
+fall back from (4, 2) to (2, 2) host mesh; on a pod, from 2 pods to 1).
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.distributed import checkpoint as ckpt_lib
+from repro.distributed import sharding as shd
+from repro.models import model as model_lib
+from repro.models.common import Policy
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+
+
+def reshard_restore(ckpt_dir: str | Path, cfg: ArchConfig, policy: Policy,
+                    opt_cfg: AdamWConfig, mesh):
+    """Returns (step, params, opt_state) placed on `mesh` regardless of the mesh
+    the checkpoint was written under."""
+    params_t = jax.eval_shape(lambda k: model_lib.init(k, cfg, policy), jax.random.PRNGKey(0))
+    opt_t = jax.eval_shape(lambda: adamw.init(params_t, opt_cfg))
+    p_sh = shd.to_shardings(mesh, shd.param_pspecs(cfg, params_t))
+    o_sh = shd.to_shardings(mesh, shd.opt_state_pspecs(cfg, params_t, opt_t))
+    step, trees = ckpt_lib.restore(
+        ckpt_dir, {"params": params_t, "opt_state": opt_t},
+        shardings={"params": p_sh, "opt_state": o_sh},
+    )
+    return step, trees["params"], trees["opt_state"]

@@ -1,0 +1,102 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --steps 50 \
+        --batch 8 --seq 256 --data-axis 4 --model-axis 2 --ckpt /tmp/run1
+
+Runs a real training loop (synthetic corpus) on the host devices with the SAME
+sharding rules, train step, checkpointing and fault tolerance the production
+mesh uses; `--reduced` shrinks the arch for CPU-scale runs. The 512-chip
+configuration is exercised by repro.launch.dryrun (AOT, allocation-free).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, reduced
+from repro.data import tokens
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_mesh
+from repro.models import model as model_lib
+from repro.models.common import Policy
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+from repro.optim.schedule import warmup_cosine
+from repro.train import step as step_lib
+from repro.train.loop import LoopConfig, TrainLoop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--data-axis", type=int, default=1)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--ckpt", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--width", type=int, default=0, help="override d_model (reduced)")
+    ap.add_argument("--layers", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        over = {}
+        if args.width:
+            over["d_model"] = args.width
+        if args.layers:
+            over["num_layers"] = args.layers
+        cfg = reduced(cfg, **over)
+    cfg = dataclasses.replace(cfg, remat="none")  # host-scale runs fit w/o remat
+
+    policy = Policy()  # f32 on host
+    mesh = make_mesh((args.data_axis, args.model_axis), ("data", "model"))
+    opt_cfg = AdamWConfig(lr=args.lr, moments_dtype=cfg.moments_dtype)
+
+    params = model_lib.init(jax.random.PRNGKey(0), cfg, policy)
+    opt_state = adamw.init(params, opt_cfg)
+    p_sh = shd.to_shardings(mesh, shd.param_pspecs(cfg, params))
+    o_sh = shd.to_shardings(mesh, shd.opt_state_pspecs(cfg, params, opt_state))
+    params = jax.device_put(params, p_sh)
+    opt_state = jax.device_put(opt_state, o_sh)
+
+    schedule = lambda s: warmup_cosine(s, warmup=max(2, args.steps // 10), total=args.steps)
+    train_step = step_lib.make_train_step(cfg, policy, opt_cfg, schedule, args.accum)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    batch_sh = {
+        k: NamedSharding(mesh, P(("data",), *([None] * (len(jnp.shape(v)) - 1))))
+        for k, v in tokens.synthetic_batch(cfg, 0, args.batch, args.seq).items()
+    }
+    with mesh:
+        jitted = jax.jit(train_step, in_shardings=(p_sh, o_sh, batch_sh),
+                         donate_argnums=(0, 1))
+
+        def data_factory(start_step):
+            return tokens.batch_iterator(cfg, args.batch, args.seq, start_step, batch_sh)
+
+        loop = TrainLoop(
+            jitted, data_factory, args.ckpt,
+            LoopConfig(total_steps=args.steps, checkpoint_every=args.ckpt_every,
+                       log_every=max(1, args.steps // 20)),
+        )
+        params, opt_state, history = loop.run(
+            params, opt_state, shardings={"params": p_sh, "opt_state": o_sh}
+        )
+    first, last = history[0], history[-1]
+    print(f"[train] {cfg.name}: step {first['step']} loss {first['loss']:.4f} -> "
+          f"step {last['step']} loss {last['loss']:.4f}")
+    if loop.straggler_events:
+        print(f"[train] straggler events: {len(loop.straggler_events)}")
+    return history
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""LM model zoo substrate: a single parameterized stack covering the 10 assigned
+architectures (dense GQA / MoE / Mamba / RWKV6 / hybrid / audio / vlm)."""
+from repro.models import attention, common, mamba, mlp, model, moe, rope, rwkv6, transformer
+from repro.models.common import Policy, TEST_POLICY, TRAIN_POLICY_TPU

@@ -1,0 +1,344 @@
+"""GQA attention: qkv(+bias), qk-norm, RoPE/sinusoidal/none positions, sliding
+window, chunked-flash full attention (train/prefill), KV-cache decode.
+
+Tensor-parallel layout (DESIGN.md section 6): query heads are FLAT (no (KV, G)
+grouping in the weights) and shard over the "model" axis; K/V heads stay compact
+(GQA cache stays small) with weights replicated over "model" and are repeated to
+the query-head count on the fly — the repeat of a replicated tensor shards as a
+local slice, so attention proper needs ZERO collectives; only the out-projection
+all-reduces (Megatron row-parallel). Archs whose head count does not divide TP=16
+(llava 56) set cfg.padded_heads: padded heads are zero-init + masked => exact.
+
+Memory design: full attention NEVER materializes the (S, T) score matrix — a
+scan-over-scan online-softmax (flash) keeps one (q_chunk x kv_chunk) tile live.
+Decode computes one query row directly; with the KV cache sequence-sharded
+(long_500k) the softmax max/sum become tiny all-reduces inserted by SPMD —
+distributed flash-decode for free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import Policy, normal_init, rms_norm
+from repro.models.rope import apply_rope, rope_angles
+
+Array = jax.Array
+
+Q_CHUNK = 256
+KV_CHUNK = 512
+# Causal-skip ("triangle scan") flash attention: iterate only the lower-triangle
+# (q_chunk, kv_chunk) tile pairs instead of the full nq x nk grid — the masked
+# upper-triangle tiles are never computed, halving attention FLOPs at large S.
+# One scan over a static (qi, ki) pair list; chunks are gathered by index, so
+# the HLO stays O(1) in sequence length. Perf iteration #1 in EXPERIMENTS §Perf.
+CAUSAL_SKIP = False  # baseline off; enabled per-cell via dryrun --opt causal_skip (§Perf)
+_NEG = -1e30
+
+
+def _head_mask(cfg: ArchConfig, dtype) -> Array | None:
+    """(Hp,) 1/0 mask; None when no padding. Physical head h = kv*Gp + g is real
+    iff g < logical group size G."""
+    Hp, H, KV = cfg.phys_heads, cfg.num_heads, cfg.num_kv_heads
+    if Hp == H:
+        return None
+    Gp, G = Hp // KV, H // KV
+    m = (jnp.arange(Hp) % Gp) < G
+    return m.astype(dtype)
+
+
+def init(key: Array, cfg: ArchConfig, policy: Policy) -> dict:
+    d, KV, Dh = cfg.d_model, cfg.num_kv_heads, cfg.resolved_head_dim
+    Hp = cfg.phys_heads
+    ks = jax.random.split(key, 4)
+    dt = policy.param_dtype
+    mask = _head_mask(cfg, dt)
+    wq = normal_init(ks[0], (d, Hp, Dh), dt)
+    wo = normal_init(ks[3], (Hp, Dh, d), dt, scale=0.02 / (2 * cfg.num_layers) ** 0.5)
+    if mask is not None:  # zero-init the padded heads
+        wq = wq * mask[None, :, None]
+        wo = wo * mask[:, None, None]
+    p = {
+        "wq": wq,
+        "wk": normal_init(ks[1], (d, KV, Dh), dt),
+        "wv": normal_init(ks[2], (d, KV, Dh), dt),
+        "wo": wo,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hp, Dh), dt)
+        p["bk"] = jnp.zeros((KV, Dh), dt)
+        p["bv"] = jnp.zeros((KV, Dh), dt)
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.ones((Dh,), dt)
+        p["k_scale"] = jnp.ones((Dh,), dt)
+    return p
+
+
+def _project_qkv(p: dict, cfg: ArchConfig, policy: Policy, x: Array, positions: Array):
+    """x (B, S, d) -> q (B, S, Hp, Dh), k, v (B, S, KV, Dh); RoPE applied."""
+    q = jnp.einsum("bsd,dhe->bshe", x, policy.cast(p["wq"]))
+    k = jnp.einsum("bsd,dhe->bshe", x, policy.cast(p["wk"]))
+    v = jnp.einsum("bsd,dhe->bshe", x, policy.cast(p["wv"]))
+    if cfg.qkv_bias:
+        q = q + policy.cast(p["bq"])
+        k = k + policy.cast(p["bk"])
+        v = v + policy.cast(p["bv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_scale"], cfg.norm_eps)
+        k = rms_norm(k, p["k_scale"], cfg.norm_eps)
+    if cfg.pos_emb == "rope":
+        cos, sin = rope_angles(positions, cfg.resolved_head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _repeat_kv(x: Array, reps: int) -> Array:
+    """(B, T, KV, Dh) -> (B, T, KV*reps, Dh); replicated source => local slice
+    under any head sharding (no collectives)."""
+    if reps == 1:
+        return x
+    B, T, KV, Dh = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (B, T, KV, reps, Dh)).reshape(
+        B, T, KV * reps, Dh
+    )
+
+
+def _flash_attention_triangle(
+    q: Array, k: Array, v: Array, pos: Array, window: int, chunk: int,
+) -> Array:
+    """Causal-skip flash attention for SELF-attention with monotone positions.
+
+    One lax.scan over the STATIC list of lower-triangle (q_chunk, kv_chunk) tile
+    pairs (within the sliding window, when set); the masked-out upper triangle
+    is never computed => ~2x fewer attention FLOPs than the rectangular scan,
+    and O(window) instead of O(S) tiles under SWA. Chunks are gathered by pair
+    index, so HLO size stays O(1) in sequence length.
+    """
+    B, S, H, Dh = q.shape
+    c = min(chunk, S)
+    assert S % c == 0, (S, c)
+    n = S // c
+    scale = Dh ** -0.5
+    tr = lambda a: a.reshape(B, n, c, H, Dh).transpose(1, 0, 2, 3, 4)
+    qr, kr, vr = tr(q), tr(k), tr(v)
+    pr = pos.reshape(n, c)
+    wc = n if not window else min(n, -(-window // c) + 1)  # kv chunks per row
+    pairs = [(i, j) for i in range(n) for j in range(max(0, i - wc + 1), i + 1)]
+    qi = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    ki = jnp.asarray([p[1] for p in pairs], jnp.int32)
+    first = jnp.asarray([j == max(0, i - wc + 1) for i, j in pairs])
+    last = jnp.asarray([j == i for i, j in pairs])
+
+    def body(carry, xs):
+        acc, mm, ll, outs = carry
+        qi_, ki_, fi, la = xs
+        acc = jnp.where(fi, 0.0, acc)
+        mm = jnp.where(fi, _NEG, mm)
+        ll = jnp.where(fi, 0.0, ll)
+        qc = jax.lax.dynamic_index_in_dim(qr, qi_, 0, keepdims=False)
+        kc = jax.lax.dynamic_index_in_dim(kr, ki_, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vr, ki_, 0, keepdims=False)
+        pq = jax.lax.dynamic_index_in_dim(pr, qi_, 0, keepdims=False)
+        pk = jax.lax.dynamic_index_in_dim(pr, ki_, 0, keepdims=False)
+        s = jnp.einsum("bqhd,bthd->bhqt", qc, kc,
+                       preferred_element_type=jnp.float32) * scale
+        mask = pq[:, None] >= pk[None, :]
+        if window:
+            mask &= pq[:, None] - pk[None, :] < window
+        s = jnp.where(mask[None, None, :, :], s, -jnp.inf)
+        # running max must be MONOTONE vs the carry: a fully-masked tile would
+        # otherwise lower m and blow alpha = exp(m - m_new) up to inf
+        m_new = jnp.maximum(mm, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(mm - m_new)
+        ll = ll * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhqt,bthd->bhqd", p.astype(vc.dtype), vc,
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        mm = m_new
+        out = (acc / jnp.maximum(ll, 1e-30)[..., None]).transpose(0, 2, 1, 3)
+        outs = jax.lax.cond(
+            la,
+            lambda o: jax.lax.dynamic_update_index_in_dim(
+                o, out.astype(o.dtype), qi_, 0),
+            lambda o: o,
+            outs,
+        )
+        return (acc, mm, ll, outs), None
+
+    acc0 = jnp.zeros((B, H, c, Dh), jnp.float32)
+    m0 = jnp.full((B, H, c), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, H, c), jnp.float32)
+    outs0 = jnp.zeros((n, B, c, H, Dh), q.dtype)
+    (_, _, _, outs), _ = jax.lax.scan(body, (acc0, m0, l0, outs0),
+                                      (qi, ki, first, last))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Dh)
+
+
+def _flash_attention(
+    q: Array, k: Array, v: Array, pos_q: Array, pos_kv: Array, window: int,
+    q_chunk: int = Q_CHUNK, kv_chunk: int = KV_CHUNK, self_causal: bool = False,
+) -> Array:
+    """Causal online-softmax attention over flat heads.
+
+    q: (B, Sq, H, Dh); k, v: (B, T, H, Dh); pos_q (Sq,), pos_kv (T,) absolute
+    positions (causal + sliding-window masks). Returns (B, Sq, H, Dh).
+    Both loops are lax.scan: live memory is one (q_chunk x kv_chunk) tile per head.
+    With CAUSAL_SKIP and self-attention, dispatches to the triangle scan above.
+    """
+    if self_causal and CAUSAL_SKIP and q.shape[1] == k.shape[1]:
+        return _flash_attention_triangle(q, k, v, pos_q, window, q_chunk)
+    B, Sq, H, Dh = q.shape
+    T = k.shape[1]
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, T)
+    assert Sq % q_chunk == 0 and T % kv_chunk == 0, (Sq, T, q_chunk, kv_chunk)
+    scale = Dh ** -0.5
+    nq, nk = Sq // q_chunk, T // kv_chunk
+
+    qr = q.reshape(B, nq, q_chunk, H, Dh).transpose(1, 0, 2, 3, 4)
+    kr = k.reshape(B, nk, kv_chunk, H, Dh).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(B, nk, kv_chunk, H, Dh).transpose(1, 0, 2, 3, 4)
+    pq = pos_q.reshape(nq, q_chunk)
+    pk = pos_kv.reshape(nk, kv_chunk)
+
+    def q_step(_, qc_pq):
+        qc, pqc = qc_pq  # (B, qc, H, Dh), (qc,)
+
+        def kv_step(carry, kc_vc_pk):
+            acc, m, l = carry
+            kc, vc, pkc = kc_vc_pk
+            s = jnp.einsum(
+                "bqhd,bthd->bhqt", qc, kc, preferred_element_type=jnp.float32
+            ) * scale  # (B, H, qc, kc) f32
+            mask = pqc[:, None] >= pkc[None, :]
+            if window:
+                mask &= pqc[:, None] - pkc[None, :] < window
+            s = jnp.where(mask[None, None, :, :], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))  # monotone running max
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum(
+                "bhqt,bthd->bhqd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32,
+            )
+            acc = acc * alpha[..., None] + pv
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, H, q_chunk, Dh), jnp.float32)
+        m0 = jnp.full((B, H, q_chunk), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        (acc, _, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), (kr, vr, pk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, H, qc, Dh)
+        return None, out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qr, pq))  # (nq, B, qc, H, Dh)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, Dh)
+
+
+def fwd_full(p: dict, cfg: ArchConfig, policy: Policy, x: Array, positions: Array) -> Array:
+    """Training / prefill path: full causal (+window) attention. positions (B, S)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, policy, x, positions)
+    reps = cfg.phys_heads // cfg.num_kv_heads
+    pos = positions[0]  # (S,) — identical across batch rows by construction
+    out = _flash_attention(q, _repeat_kv(k, reps), _repeat_kv(v, reps), pos, pos,
+                           cfg.sliding_window, self_causal=True)
+    mask = _head_mask(cfg, out.dtype)
+    if mask is not None:
+        out = out * mask[None, None, :, None]
+    return jnp.einsum("bshe,hed->bsd", out, policy.cast(p["wo"]))
+
+
+# int8 KV cache: symmetric per-(token, kv-head) quantization. Halves the cache
+# read traffic — the dominant memory-roofline term of decode cells (§Perf).
+KV_QUANT_DTYPES = (jnp.int8,)
+
+
+def _quantize_kv(x: Array) -> tuple[Array, Array]:
+    """x (B, S, KV, Dh) -> (int8 codes, f32 scales (B, S, KV))."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _dequantize_kv(q: Array, scale: Array, dtype) -> Array:
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)).astype(dtype)
+
+
+def quantize_cache(cache: dict) -> dict:
+    """Convert a bf16 {k, v} cache (e.g. fresh from prefill) to int8+scales."""
+    kq, ks = _quantize_kv(cache["k"])
+    vq, vs = _quantize_kv(cache["v"])
+    return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    KV, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    if dtype == jnp.int8:
+        return {
+            "k": jnp.zeros((batch, max_len, KV, Dh), jnp.int8),
+            "v": jnp.zeros((batch, max_len, KV, Dh), jnp.int8),
+            "k_scale": jnp.zeros((batch, max_len, KV), jnp.float32),
+            "v_scale": jnp.zeros((batch, max_len, KV), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((batch, max_len, KV, Dh), dtype),
+        "v": jnp.zeros((batch, max_len, KV, Dh), dtype),
+    }
+
+
+def fwd_decode(
+    p: dict, cfg: ArchConfig, policy: Policy, x: Array, cache: dict, cache_len: Array
+) -> tuple[Array, dict]:
+    """One decode step. x (B, 1, d); cache k/v (B, T, KV, Dh); cache_len () int32 =
+    number of valid cache entries (the new token is written at that index)."""
+    B = x.shape[0]
+    Hp, KV, Dh = cfg.phys_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    reps = Hp // KV
+    positions = jnp.broadcast_to(cache_len, (B, 1))
+    q, k_new, v_new = _project_qkv(p, cfg, policy, x, positions)
+    quantized = "k_scale" in cache
+    new_cache = {}
+    if quantized:
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        dus = jax.lax.dynamic_update_slice
+        new_cache["k"] = dus(cache["k"], kq, (0, cache_len, 0, 0))
+        new_cache["v"] = dus(cache["v"], vq, (0, cache_len, 0, 0))
+        new_cache["k_scale"] = dus(cache["k_scale"], ks, (0, cache_len, 0))
+        new_cache["v_scale"] = dus(cache["v_scale"], vs, (0, cache_len, 0))
+        k_cache = _dequantize_kv(new_cache["k"], new_cache["k_scale"], policy.compute_dtype)
+        v_cache = _dequantize_kv(new_cache["v"], new_cache["v_scale"], policy.compute_dtype)
+    else:
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, cache_len, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, cache_len, 0, 0))
+        new_cache = {"k": k_cache, "v": v_cache}
+
+    T = k_cache.shape[1]
+    kk = _repeat_kv(policy.cast(k_cache), reps)  # (B, T, Hp, Dh)
+    vv = _repeat_kv(policy.cast(v_cache), reps)
+    s = jnp.einsum("bhd,bthd->bht", q[:, 0], kk, preferred_element_type=jnp.float32)
+    s = s * (Dh ** -0.5)  # (B, Hp, T)
+    t_idx = jnp.arange(T)
+    valid = t_idx <= cache_len  # includes the token just written
+    if cfg.sliding_window:
+        valid &= t_idx > cache_len - cfg.sliding_window
+    s = jnp.where(valid[None, None, :], s, -jnp.inf)
+    m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), _NEG)
+    w = jnp.exp(s - m)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bht,bthd->bhd", w.astype(vv.dtype), vv,
+                     preferred_element_type=jnp.float32)
+    out = out[:, None, :, :].astype(x.dtype)  # (B, 1, Hp, Dh)
+    mask = _head_mask(cfg, out.dtype)
+    if mask is not None:
+        out = out * mask[None, None, :, None]
+    y = jnp.einsum("bshe,hed->bsd", out, policy.cast(p["wo"]))
+    return y, new_cache

@@ -1,0 +1,111 @@
+"""Shared model substrate: dtype policy, norms, initializers, positional encodings.
+
+Parameters are plain pytrees (nested dicts of jnp arrays). Every module exposes
+``init_*(key, cfg, policy) -> params`` and ``apply(params, ...) -> out`` so the
+whole stack stays functional and works with jax.eval_shape for the allocation-free
+dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """Mixed-precision policy: params stored in param_dtype, math in compute_dtype,
+    norms/softmax/losses accumulated in f32."""
+
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+
+    def cast(self, x: Array) -> Array:
+        return x.astype(self.compute_dtype)
+
+
+TRAIN_POLICY_TPU = Policy(param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16)
+TEST_POLICY = Policy()
+
+
+def normal_init(key: Array, shape, dtype, scale: float = 0.02) -> Array:
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def zeros_init(shape, dtype) -> Array:
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(shape, dtype) -> Array:
+    return jnp.ones(shape, dtype)
+
+
+def rms_norm(x: Array, scale: Array, eps: float) -> Array:
+    """RMSNorm in f32, output cast back to the input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def group_norm(x: Array, scale: Array, bias: Array, num_groups: int, eps: float) -> Array:
+    """GroupNorm over the channel dim (RWKV6 wkv output norm). x: (..., C)."""
+    *lead, C = x.shape
+    xf = x.astype(jnp.float32).reshape(*lead, num_groups, C // num_groups)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(*lead, C)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def sinusoidal_positions(positions: Array, dim: int, max_scale: float = 10_000.0) -> Array:
+    """Classic transformer sin/cos table evaluated at `positions` (any int shape).
+    Returns (..., dim) f32 (musicgen-style additive embedding)."""
+    half = dim // 2
+    freq = jnp.exp(-jnp.log(max_scale) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., half)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def silu(x: Array) -> Array:
+    return x * jax.nn.sigmoid(x)
+
+
+def _ambient_mesh():
+    """The mesh installed by `with mesh:` around jit/lower, or None."""
+    from jax._src import mesh as mesh_lib
+
+    m = mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def constrain_batch(x: Array, batch_dim: int = 0) -> Array:
+    """Anchor the data-parallel sharding of an activation tensor.
+
+    XLA's sharding propagation can drop the batch sharding after an embedding
+    gather whose table is model-sharded (it prefers the operand's sharding) and
+    then carries batch-REPLICATED activations through the whole model — a 16x
+    compute blow-up on any op that isn't TP-sharded. Pinning the batch dim at a
+    few anchor points (embed output, scan carries, loss chunks) keeps
+    propagation honest. No-op outside a mesh context or when indivisible.
+    """
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not dp:
+        return x
+    deg = 1
+    for a in dp:
+        deg *= mesh.shape[a]
+    if x.shape[batch_dim] % deg:
+        return x
+    spec = [None] * x.ndim
+    spec[batch_dim] = dp
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,33 @@
+"""Dense FFN blocks: SwiGLU (llama-family) and GELU (musicgen), plus the RWKV6
+channel-mix which lives in rwkv6.py."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import Policy, normal_init, silu
+
+Array = jax.Array
+
+
+def init(key: Array, cfg: ArchConfig, policy: Policy, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    dt = policy.param_dtype
+    width = 2 * f if cfg.act == "swiglu" else f  # fused gate+up projection
+    return {
+        "wi": normal_init(k1, (d, width), dt),
+        "wo": normal_init(k2, (f, d), dt, scale=0.02 / (2 * cfg.num_layers) ** 0.5),
+    }
+
+
+def apply(p: dict, cfg: ArchConfig, policy: Policy, x: Array) -> Array:
+    h = x @ policy.cast(p["wi"])
+    if cfg.act == "swiglu":
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = silu(gate) * up
+    else:
+        h = jax.nn.gelu(h)
+    return h @ policy.cast(p["wo"])

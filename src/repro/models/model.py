@@ -1,0 +1,259 @@
+"""The LM model: embeddings (+ stub frontends) -> scanned layer groups -> head(s).
+
+Entry points (all pure functions of (params, batch)):
+    init(key, cfg, policy)                          -> params
+    forward_train(params, cfg, policy, batch, key)  -> (loss, metrics)
+    forward_prefill(params, cfg, policy, batch)     -> (last_logits, cache)
+    forward_decode(params, cfg, policy, batch, cache, cache_len)
+                                                    -> (logits, new_cache)
+    init_cache(cfg, batch, max_len)                 -> cache pytree
+
+Memory-critical choices:
+  * scan over layer groups with per-group remat (cfg.remat) — activations are
+    O(d_model * tokens) per group, recomputed in backward;
+  * the cross-entropy is CHUNKED over the sequence (scan + checkpoint): the
+    (B, S, vocab) logits tensor — 10GB/device for 150k vocabs at train_4k —
+    never materializes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer
+from repro.models.common import (Policy, constrain_batch, normal_init, rms_norm,
+                                 sinusoidal_positions)
+
+Array = jax.Array
+
+LOSS_CHUNK = 512
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init(key: Array, cfg: ArchConfig, policy: Policy) -> dict:
+    k_emb, k_head, k_groups = jax.random.split(key, 3)
+    dt = policy.param_dtype
+    V, d, K = cfg.vocab_size, cfg.d_model, cfg.num_codebooks
+    params: dict[str, Any] = {}
+    if cfg.frontend == "audio_codes":
+        params["embed"] = normal_init(k_emb, (K, V, d), dt)
+    else:
+        params["embed"] = normal_init(k_emb, (V, d), dt)
+    if not cfg.tie_embeddings:
+        if cfg.frontend == "audio_codes":
+            params["head"] = normal_init(k_head, (K, d, V), dt)
+        else:
+            params["head"] = normal_init(k_head, (d, V), dt)
+    params["final_norm"] = jnp.ones((d,), dt)
+
+    groups = [
+        transformer.init_group(jax.random.fold_in(k_groups, g), cfg, policy)
+        for g in range(cfg.num_groups)
+    ]
+    params["groups"] = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+    return params
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    caches = [
+        transformer.init_group_cache(cfg, batch, max_len, dtype)
+        for _ in range(cfg.num_groups)
+    ]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# embedding / frontends
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params: dict, cfg: ArchConfig, policy: Policy, batch: dict) -> Array:
+    """Returns x (B, S, d) in compute dtype. Stub frontends per DESIGN.md:
+    audio: sum of per-codebook embeddings of the given EnCodec codes;
+    vlm: precomputed patch embeddings concatenated ahead of token embeddings."""
+    emb = policy.cast(params["embed"])
+    if cfg.frontend == "audio_codes":
+        codes = batch["codes"]  # (B, K, S)
+        # per-codebook lookup then sum over K
+        parts = [jnp.take(emb[k], codes[:, k], axis=0) for k in range(cfg.num_codebooks)]
+        x = functools.reduce(jnp.add, parts)
+    elif cfg.frontend == "vision_prefix":
+        tok = jnp.take(emb, batch["tokens"], axis=0)  # (B, S_text, d)
+        if "patch_embeds" in batch:  # prefill/train; decode steps are text-only
+            patches = policy.cast(batch["patch_embeds"])  # (B, P, d)
+            tok = jnp.concatenate([patches, tok], axis=1)
+        x = tok
+    else:
+        x = jnp.take(emb, batch["tokens"], axis=0)
+    if cfg.pos_emb == "sinusoidal":
+        S = x.shape[1]
+        pos = sinusoidal_positions(
+            batch.get("position_offset", 0) + jnp.arange(S), cfg.d_model
+        )
+        x = x + pos.astype(x.dtype)
+    return constrain_batch(x)
+
+
+def _labels(cfg: ArchConfig, batch: dict) -> Array:
+    """Token ids aligned with the model sequence (prefix positions zero-filled)."""
+    if cfg.frontend == "audio_codes":
+        return batch["codes"]  # (B, K, S)
+    if cfg.frontend == "vision_prefix":
+        B, P = batch["patch_embeds"].shape[:2]
+        pad = jnp.zeros((B, P), jnp.int32)
+        return jnp.concatenate([pad, batch["tokens"]], axis=1)
+    return batch["tokens"]
+
+
+# ---------------------------------------------------------------------------
+# backbone scan
+# ---------------------------------------------------------------------------
+
+def _scan_groups_full(params, cfg, policy, x, positions):
+    def body(carry, g_params):
+        h, aux = carry
+        h, aux_g = transformer.apply_group_full(g_params, cfg, policy, h, positions)
+        return (constrain_batch(h), aux + aux_g), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["groups"])
+    return x, aux
+
+
+def _head_logits(params, cfg, policy, x):
+    """x (B, S, d) -> logits; audio: (B, K, S, V)."""
+    if cfg.frontend == "audio_codes":
+        head = policy.cast(params["head"])  # (K, d, V)
+        return jnp.einsum("bsd,kdv->bksv", x, head)
+    w = policy.cast(params["embed"].T if cfg.tie_embeddings else params["head"])
+    return x @ w
+
+
+# ---------------------------------------------------------------------------
+# losses (chunked over sequence)
+# ---------------------------------------------------------------------------
+
+def _ce_chunk(params, cfg, policy, x_chunk, labels_chunk, mask_chunk):
+    """Cross-entropy for one sequence chunk; logits live only inside this fn."""
+    logits = _head_logits(params, cfg, policy, x_chunk).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    if cfg.frontend == "audio_codes":
+        # logits (B, K, Sc, V), labels (B, K, Sc)
+        gold = jnp.take_along_axis(logits, labels_chunk[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mask_chunk[:, None, :]
+    else:
+        gold = jnp.take_along_axis(logits, labels_chunk[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mask_chunk
+    return jnp.sum(nll), jnp.sum(mask_chunk)
+
+
+def _chunked_ce(params, cfg, policy, x, labels, mask):
+    """Next-token CE, scanning LOSS_CHUNK positions at a time so (B, S, V) never
+    materializes. Shift happens here: position i predicts label i+1."""
+    B, S, d = x.shape
+    x_in = x[:, :-1]
+    if cfg.frontend == "audio_codes":
+        y = labels[:, :, 1:]
+        m = mask[:, 1:]
+        perm = lambda a: a  # (B, K, S-1) already
+    else:
+        y = labels[:, 1:]
+        m = mask[:, 1:]
+        perm = lambda a: a
+    Sm = S - 1
+    chunk = min(LOSS_CHUNK, Sm)
+    n_even = (Sm // chunk) * chunk
+
+    def scan_body(carry, inp):
+        tot, cnt = carry
+        xc, yc, mc = inp
+        s, c = _ce_chunk(params, cfg, policy, constrain_batch(xc), yc, mc)
+        return (tot + s, cnt + c), None
+
+    ce_fn = jax.checkpoint(scan_body, prevent_cse=False)
+    nchunks = n_even // chunk
+    xs = x_in[:, :n_even].reshape(B, nchunks, chunk, d).transpose(1, 0, 2, 3)
+    if cfg.frontend == "audio_codes":
+        K = cfg.num_codebooks
+        ys = y[:, :, :n_even].reshape(B, K, nchunks, chunk).transpose(2, 0, 1, 3)
+    else:
+        ys = y[:, :n_even].reshape(B, nchunks, chunk).transpose(1, 0, 2)
+    ms = m[:, :n_even].reshape(B, nchunks, chunk).transpose(1, 0, 2)
+    (tot, cnt), _ = jax.lax.scan(scan_body if nchunks == 1 else ce_fn,
+                                 (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+                                 (xs, ys, ms))
+    if n_even < Sm:  # ragged tail
+        s, c = _ce_chunk(
+            params, cfg, policy, x_in[:, n_even:],
+            y[..., n_even:], m[:, n_even:],
+        )
+        tot, cnt = tot + s, cnt + c
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# public forwards
+# ---------------------------------------------------------------------------
+
+def forward_train(params: dict, cfg: ArchConfig, policy: Policy, batch: dict):
+    """Returns (loss, metrics dict). batch needs tokens/codes(+patch_embeds) and
+    loss_mask (B, S)."""
+    x = embed_inputs(params, cfg, policy, batch)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x, aux = _scan_groups_full(params, cfg, policy, x, positions)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones((B, S), x.dtype)
+    ce = _chunked_ce(params, cfg, policy, x, _labels(cfg, batch), mask.astype(jnp.float32))
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def forward_prefill(params: dict, cfg: ArchConfig, policy: Policy, batch: dict):
+    """Full-sequence forward that also builds the decode cache.
+    Returns (logits_last (B, V) or (B, K, V), cache)."""
+    x = embed_inputs(params, cfg, policy, batch)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(h, g_params):
+        h, cache_g = transformer.apply_group_prefill(g_params, cfg, policy, h, positions)
+        return constrain_batch(h), cache_g
+
+    x, cache = jax.lax.scan(body, x, params["groups"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _head_logits(params, cfg, policy, x[:, -1:])
+    return logits[:, :, 0] if cfg.frontend == "audio_codes" else logits[:, 0], cache
+
+
+def forward_decode(params: dict, cfg: ArchConfig, policy: Policy, batch: dict,
+                   cache: dict, cache_len: Array):
+    """One token for every sequence in the batch. Returns (logits, new_cache)."""
+    x = embed_inputs(params, cfg, policy, batch)  # (B, 1, d)
+    if cfg.pos_emb == "sinusoidal":
+        # correct position for the step (embed_inputs used offset 0)
+        x = x - sinusoidal_positions(jnp.arange(1), cfg.d_model).astype(x.dtype)
+        x = x + sinusoidal_positions(cache_len[None], cfg.d_model).astype(x.dtype)
+
+    def body(h, xs):
+        g_params, g_cache = xs
+        h, new_c = transformer.apply_group_decode(g_params, cfg, policy, h, g_cache, cache_len)
+        return constrain_batch(h), new_c
+
+    x, new_cache = jax.lax.scan(body, x, (params["groups"], cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _head_logits(params, cfg, policy, x)
+    return (logits[:, :, 0] if cfg.frontend == "audio_codes" else logits[:, 0]), new_cache

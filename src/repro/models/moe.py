@@ -1,0 +1,106 @@
+"""Mixture-of-Experts FFN: top-k routing with GShard-style grouped dense dispatch.
+
+Layout choices (see DESIGN.md section 6):
+  * experts are TENSOR-parallel — each expert's d_ff is sharded over the "model"
+    axis. Robust to any expert count (8 / 16 / 60 all divide nothing): no EP
+    divisibility constraint, and the same all-reduce pattern as the dense FFN.
+  * dispatch uses the capacity-factor one-hot einsum over GROUPS of tokens
+    (group_size per group). Dispatch FLOPs per token = 2*k*E*C*d/G ~ 2*k*cf*d*E/E;
+    with G=256 this is <=3% overhead for mixtral/jamba and ~25% for the
+    fine-grained qwen2-moe — a measured hillclimb target (EXPERIMENTS.md §Perf).
+  * shared experts (qwen2-moe) are a permanently-active fused SwiGLU with a
+    learned sigmoid gate, mathematically HF's shared_expert/shared_expert_gate.
+
+Groups never cross batch rows (group_size divides seq_len), so under batch
+sharding the dispatch is shard-local — no collectives besides the FFN's TP ones.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import Policy, normal_init, silu
+
+Array = jax.Array
+
+GROUP_SIZE = 256
+CAPACITY_FACTOR = 1.25
+
+
+def init(key: Array, cfg: ArchConfig, policy: Policy) -> dict:
+    moe = cfg.moe
+    assert moe is not None
+    d, E, f = cfg.d_model, moe.num_experts, moe.d_ff_expert
+    ks = jax.random.split(key, 6)
+    dt = policy.param_dtype
+    out_scale = 0.02 / (2 * cfg.num_layers) ** 0.5
+    p = {
+        "router": normal_init(ks[0], (d, E), dt),
+        "wi": normal_init(ks[1], (E, d, 2 * f), dt),  # fused gate+up per expert
+        "wo": normal_init(ks[2], (E, f, d), dt, scale=out_scale),
+    }
+    if moe.num_shared:
+        fs = moe.num_shared * moe.d_ff_shared
+        p["shared_wi"] = normal_init(ks[3], (d, 2 * fs), dt)
+        p["shared_wo"] = normal_init(ks[4], (fs, d), dt, scale=out_scale)
+        p["shared_gate"] = normal_init(ks[5], (d, 1), dt)
+    return p
+
+
+def _capacity(group: int, top_k: int, num_experts: int, factor: float) -> int:
+    return max(1, int(group * top_k * factor / num_experts + 0.5))
+
+
+def apply(p: dict, cfg: ArchConfig, policy: Policy, x: Array) -> tuple[Array, Array]:
+    """x (B, S, d) -> (out (B, S, d), aux_loss ()). Works for S == 1 (decode):
+    groups then form across the batch dim instead."""
+    moe = cfg.moe
+    B, S, d = x.shape
+    E, k = moe.num_experts, moe.top_k
+    T = B * S
+    G = min(GROUP_SIZE, T)
+    xg = x.reshape(T // G, G, d)
+    n = T // G
+    C = _capacity(G, k, E, CAPACITY_FACTOR)
+
+    logits = jnp.einsum("ngd,de->nge", xg, policy.cast(p["router"])).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (n, G, E)
+    gate_vals, ids = jax.lax.top_k(probs, k)  # (n, G, k)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # --- position-in-expert bookkeeping (GShard): priority = (choice, position).
+    # rank of each (token, choice) among same-expert assignments within the group =
+    # same-choice earlier tokens + all assignments from earlier choices j' < j.
+    onehot = jax.nn.one_hot(ids, E, dtype=jnp.int32)  # (n, G, k, E)
+    counts_per_choice = jnp.sum(onehot, axis=1, keepdims=True)  # (n, 1, k, E)
+    offset = jnp.cumsum(counts_per_choice, axis=2) - counts_per_choice  # choices j' < j
+    pos_in_e = (jnp.cumsum(onehot, axis=1) - onehot) + offset  # (n, G, k, E)
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)  # (n, G, k) int
+    keep = pos < C  # capacity drop mask
+
+    # dispatch/combine tensors (n, G, k, E, C) — the GShard einsum pair
+    pos_oh = jax.nn.one_hot(pos, C, dtype=policy.compute_dtype) * keep[..., None]
+    disp = onehot.astype(policy.compute_dtype)[..., None] * pos_oh[..., None, :]
+    comb = disp * gate_vals.astype(policy.compute_dtype)[..., None, None]
+
+    expert_in = jnp.einsum("ngkec,ngd->necd", disp, xg)  # (n, E, C, d)
+    h = jnp.einsum("necd,edf->necf", expert_in, policy.cast(p["wi"]))
+    gate_h, up_h = jnp.split(h, 2, axis=-1)
+    h = silu(gate_h) * up_h
+    expert_out = jnp.einsum("necf,efd->necd", h, policy.cast(p["wo"]))
+    out = jnp.einsum("ngkec,necd->ngd", comb, expert_out)  # (n, G, d)
+
+    # load-balancing aux loss (Switch): E * sum_e frac_tokens_e * mean_prob_e
+    frac = jnp.mean(onehot[:, :, 0, :].astype(jnp.float32), axis=(0, 1))  # (E,)
+    mean_p = jnp.mean(probs, axis=(0, 1))
+    aux = moe.aux_loss_weight * E * jnp.sum(frac * mean_p)
+
+    out = out.reshape(B, S, d)
+    if moe.num_shared:
+        hsh = x @ policy.cast(p["shared_wi"])
+        g, u = jnp.split(hsh, 2, axis=-1)
+        shared = (silu(g) * u) @ policy.cast(p["shared_wo"])
+        sg = jax.nn.sigmoid((x @ policy.cast(p["shared_gate"])).astype(jnp.float32))
+        out = out + shared * sg.astype(out.dtype)
+    return out, aux

@@ -1,0 +1,25 @@
+"""Rotary position embeddings (half-split convention, as llama/qwen)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rope_angles(positions: Array, head_dim: int, theta: float) -> tuple[Array, Array]:
+    """positions (...,) int -> (cos, sin) of shape (..., head_dim // 2) f32."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x: (B, S, H, Dh); cos/sin: (B, S, Dh/2) (or broadcastable). Half-split:
+    rotate pairs (x[..., :Dh/2], x[..., Dh/2:])."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)  # (B, S, 1, Dh/2)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)

@@ -1,0 +1,251 @@
+"""RWKV-6 "Finch" block: data-dependent-decay linear attention (arXiv:2404.05892).
+
+Time-mix (wkv6):
+    ddlerp token-shift produces per-projection inputs x_r/k/v/w/g via a low-rank
+    data-dependent mix; decay w_t = exp(-exp(w0 + lora_w(x_w))) is PER-TOKEN
+    (the "data-dependent decay" that distinguishes Finch from RWKV-5);
+    per head of size hs:  y_t = r_t (S_{t-1} + diag(u) k_t v_t^T),
+                          S_t = diag(w_t) S_{t-1} + k_t v_t^T.
+Channel-mix: token-shifted squared-relu gated FFN.
+
+TP layout: the wkv "attention dim" is Hp * hs where Hp = cfg.phys_heads is the
+TP-padded head count (40 -> 48 for rwkv6-3b on a 16-way model axis). Padded heads
+are zero-init + masked after the group-norm => mathematically exact. All per-head
+tensors (state S, decay, bonus u) shard head-wise over "model" with no cross-head
+traffic; only wo all-reduces.
+
+The recurrence is a lax.scan carrying S (B, Hp, hs, hs) — O(1) state, which is
+why rwkv6-3b runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import Policy, group_norm, normal_init, silu
+
+Array = jax.Array
+
+_LORA = 32  # low-rank dim of the ddlerp mixers
+_LORA_W = 64  # low-rank dim of the decay lora
+
+
+def _att_dim(cfg: ArchConfig) -> int:
+    return cfg.phys_heads * cfg.rwkv_head_size
+
+
+def _rwkv_head_mask(cfg: ArchConfig, dtype) -> Array | None:
+    Hp, H = cfg.phys_heads, cfg.rwkv_num_heads
+    if Hp == H:
+        return None
+    return (jnp.arange(Hp) < H).astype(dtype)
+
+
+def init_tmix(key: Array, cfg: ArchConfig, policy: Policy) -> dict:
+    d = cfg.d_model
+    Hp, hs = cfg.phys_heads, cfg.rwkv_head_size
+    a = _att_dim(cfg)
+    ks = jax.random.split(key, 12)
+    dt = policy.param_dtype
+    mask = _rwkv_head_mask(cfg, jnp.float32)
+    col_mask = 1.0 if mask is None else jnp.repeat(mask, hs)  # (a,)
+
+    def masked(w):  # zero-out padded-head columns
+        return (w * col_mask).astype(w.dtype) if mask is not None else w
+
+    return {
+        # ddlerp token-shift: 5 targets (r, k, v, w, g)
+        "mu_x": normal_init(ks[0], (1, 1, d), dt, scale=0.1),
+        "mu": normal_init(ks[1], (5, 1, 1, d), dt, scale=0.1),
+        "lora_A": normal_init(ks[2], (d, 5 * _LORA), dt),
+        "lora_B": normal_init(ks[3], (5, _LORA, d), dt, scale=0.01),
+        "wr": masked(normal_init(ks[4], (d, a), dt)),
+        "wk": masked(normal_init(ks[5], (d, a), dt)),
+        "wv": masked(normal_init(ks[6], (d, a), dt)),
+        "wg": masked(normal_init(ks[7], (d, a), dt)),
+        "wo": normal_init(ks[8], (a, d), dt, scale=0.02 / (2 * cfg.num_layers) ** 0.5),
+        # decay: w0 + tanh(xw @ wA) @ wB ; bonus u per (head, hs)
+        "w0": jnp.full((a,), -6.0, jnp.float32),
+        "wA": normal_init(ks[9], (d, _LORA_W), dt),
+        "wB": normal_init(ks[10], (_LORA_W, a), dt, scale=0.01),
+        "u": normal_init(ks[11], (Hp, hs), jnp.float32, scale=0.5),
+        "ln_scale": jnp.ones((a,), dt),
+        "ln_bias": jnp.zeros((a,), dt),
+    }
+
+
+def init_cmix(key: Array, cfg: ArchConfig, policy: Policy) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = policy.param_dtype
+    return {
+        "mu_k": normal_init(ks[0], (1, 1, d), dt, scale=0.1),
+        "mu_r": normal_init(ks[1], (1, 1, d), dt, scale=0.1),
+        "wk": normal_init(ks[2], (d, f), dt),
+        "wv": normal_init(jax.random.fold_in(key, 7), (f, d), dt,
+                          scale=0.02 / (2 * cfg.num_layers) ** 0.5),
+        "wr": normal_init(jax.random.fold_in(key, 8), (d, d), dt),
+    }
+
+
+def _ddlerp(p: dict, policy: Policy, x: Array, x_prev: Array):
+    """Data-dependent token-shift: returns (x_r, x_k, x_v, x_w, x_g)."""
+    dx = x_prev - x  # (B, S, d)
+    xxx = x + dx * policy.cast(p["mu_x"])
+    lora = jnp.tanh(xxx @ policy.cast(p["lora_A"]))  # (B, S, 5*LORA)
+    B_, S_, _ = lora.shape
+    lora = lora.reshape(B_, S_, 5, _LORA)
+    mix = policy.cast(p["mu"]) + jnp.einsum(
+        "bsfr,frd->fbsd", lora, policy.cast(p["lora_B"])
+    )  # (5, B, S, d)
+    return tuple(x + dx * mix[i] for i in range(5))
+
+
+def _wkv_inputs(p: dict, cfg: ArchConfig, policy: Policy, x, x_prev):
+    Hp, hs = cfg.phys_heads, cfg.rwkv_head_size
+    B, S, _ = x.shape
+    x_r, x_k, x_v, x_w, x_g = _ddlerp(p, policy, x, x_prev)
+    r = (x_r @ policy.cast(p["wr"])).reshape(B, S, Hp, hs)
+    k = (x_k @ policy.cast(p["wk"])).reshape(B, S, Hp, hs)
+    v = (x_v @ policy.cast(p["wv"])).reshape(B, S, Hp, hs)
+    g = silu(x_g @ policy.cast(p["wg"]))  # (B, S, a)
+    wlog = p["w0"].astype(jnp.float32) + (
+        jnp.tanh(x_w @ policy.cast(p["wA"])) @ policy.cast(p["wB"])
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wlog)).reshape(B, S, Hp, hs)  # per-token decay in (0, 1)
+    return r, k, v, g, w
+
+
+def _wkv_step(S_state, r_t, k_t, v_t, w_t, u):
+    """One recurrence step. S_state (B, Hp, hs, hs) [key x value], all f32."""
+    kv = k_t[..., :, None] * v_t[..., None, :]  # (B, Hp, hs, hs)
+    y = jnp.einsum("bhk,bhkv->bhv", r_t, S_state + u[None, :, :, None] * kv)
+    S_new = w_t[..., :, None] * S_state + kv
+    return S_new, y
+
+
+def _finish_tmix(p, cfg, policy, y, g):
+    """group-norm + pad-mask + gate + out-projection. y (B, S, a)."""
+    Hp = cfg.phys_heads
+    y = group_norm(y, p["ln_scale"], p["ln_bias"], Hp, 64e-5)
+    mask = _rwkv_head_mask(cfg, y.dtype)
+    if mask is not None:
+        y = y * jnp.repeat(mask, cfg.rwkv_head_size)[None, None, :]
+    return (y * g) @ policy.cast(p["wo"])
+
+
+# Chunked WKV (flash-linear-attention style): 0 = per-token lax.scan (the
+# paper-faithful recurrence); C > 0 = process C tokens per state round-trip.
+# The per-token scan reads+writes the (B, Hp, hs, hs) state EVERY token — the
+# dominant HBM term of rwkv training (EXPERIMENTS §Perf iteration A). Chunking
+# amortizes that traffic by C at the cost of O(C^2 hs) intra-chunk compute.
+WKV_CHUNK = 0
+
+
+def fwd_tmix_full(p: dict, cfg: ArchConfig, policy: Policy, x: Array) -> Array:
+    """Full-sequence time-mix. x (B, S, d)."""
+    B, S, _ = x.shape
+    Hp, hs = cfg.phys_heads, cfg.rwkv_head_size
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]  # shift by one
+    r, k, v, g, w = _wkv_inputs(p, cfg, policy, x, x_prev)
+    u = p["u"]
+
+    if WKV_CHUNK and S % WKV_CHUNK == 0 and S > WKV_CHUNK:
+        y = _wkv_chunked(r, k, v, w, u, WKV_CHUNK)
+    else:
+        def step(S_state, inp):
+            r_t, k_t, v_t, w_t = inp  # (B, Hp, hs) each, f32
+            S_new, y_t = _wkv_step(S_state, r_t, k_t, v_t, w_t, u)
+            return S_new, y_t
+
+        to_f32 = lambda a: a.transpose(1, 0, 2, 3).astype(jnp.float32)
+        S0 = jnp.zeros((B, Hp, hs, hs), jnp.float32)
+        _, ys = jax.lax.scan(step, S0, (to_f32(r), to_f32(k), to_f32(v), to_f32(w)))
+        y = ys.transpose(1, 0, 2, 3)
+    y = y.reshape(B, S, _att_dim(cfg)).astype(x.dtype)
+    return _finish_tmix(p, cfg, policy, y, g)
+
+
+def _wkv_chunked(r, k, v, w, u, C: int) -> Array:
+    """Chunkwise-parallel WKV6. r/k/v/w: (B, S, Hp, hs); returns (B, S, Hp, hs).
+
+    Per chunk (all f32, numerically safe: every exponent is <= 0):
+      lw_t   = cumsum(log w)                 within-chunk log decay
+      carry  y_t += (r_t . exp(lw_{t-1})) @ S0
+      intra  A_ts = sum_h r_th k_sh exp(lw_{t-1,h} - lw_{s,h})   for s < t
+      bonus  A_tt = (r_t . u) k_t
+      state  S' = diag(exp(lw_C)) S0 + sum_s (k_s . exp(lw_C - lw_s)) v_s^T
+    """
+    B, S, H, hs = r.shape
+    n = S // C
+    f32 = lambda a: a.reshape(B, n, C, H, hs).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    rc, kc, vc, wc = f32(r), f32(k), f32(v), f32(w)
+    uf = u.astype(jnp.float32)
+
+    def body(S0, inp):
+        rb, kb, vb, wb = inp  # (B, C, H, hs)
+        lw = jnp.cumsum(jnp.log(jnp.maximum(wb, 1e-38)), axis=1)  # (B, C, H, hs)
+        lw_prev = jnp.pad(lw, ((0, 0), (1, 0), (0, 0), (0, 0)))[:, :-1]  # lw_{t-1}
+        # carry-in term
+        rt = rb * jnp.exp(lw_prev)
+        y = jnp.einsum("bchk,bhkv->bchv", rt, S0)
+        # intra-chunk: pairwise decay exponents are <= 0 for s < t (no overflow)
+        E = jnp.exp(lw_prev[:, :, None] - lw[:, None, :])  # (B, C_t, C_s, H, hs)
+        A = jnp.einsum("bchk,bshk,bcshk->bhcs", rb, kb, E)
+        tri = jnp.tril(jnp.ones((C, C), jnp.float32), k=-1)
+        A = A * tri[None, None]
+        diag = jnp.einsum("bchk,bchk->bch", rb * uf[None, None], kb)  # bonus term
+        y = y + jnp.einsum("bhcs,bshv->bchv", A, vb)
+        y = y + diag[..., None] * vb  # bonus (current-token) contribution
+        # chunk-end state
+        decay_end = jnp.exp(lw[:, -1])  # (B, H, hs)
+        kt = kb * jnp.exp(lw[:, -1:] - lw)  # (B, C, H, hs), exponents <= 0
+        S_new = decay_end[:, :, :, None] * S0 + jnp.einsum("bshk,bshv->bhkv", kt, vb)
+        return S_new, y
+
+    S0 = jnp.zeros((B, H, hs, hs), jnp.float32)
+    _, ys = jax.lax.scan(body, S0, (rc, kc, vc, wc))  # (n, B, C, H, hs)
+    return ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hs)
+
+
+def init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+    Hp, hs = cfg.phys_heads, cfg.rwkv_head_size
+    return {
+        "S": jnp.zeros((batch, Hp, hs, hs), jnp.float32),
+        "x_tmix": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "x_cmix": jnp.zeros((batch, 1, cfg.d_model), dtype),
+    }
+
+
+def fwd_tmix_decode(
+    p: dict, cfg: ArchConfig, policy: Policy, x: Array, state: dict
+) -> tuple[Array, dict]:
+    """One decode step. x (B, 1, d); state carries S and the previous token x."""
+    B = x.shape[0]
+    r, k, v, g, w = _wkv_inputs(p, cfg, policy, x, state["x_tmix"].astype(x.dtype))
+    f32 = lambda a: a[:, 0].astype(jnp.float32)
+    S_new, y = _wkv_step(state["S"], f32(r), f32(k), f32(v), f32(w), p["u"])
+    y = y.reshape(B, 1, _att_dim(cfg)).astype(x.dtype)
+    out = _finish_tmix(p, cfg, policy, y, g)
+    return out, {**state, "S": S_new, "x_tmix": x.astype(state["x_tmix"].dtype)}
+
+
+def fwd_cmix_full(p: dict, cfg: ArchConfig, policy: Policy, x: Array) -> Array:
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    dx = x_prev - x
+    xk = x + dx * policy.cast(p["mu_k"])
+    xr = x + dx * policy.cast(p["mu_r"])
+    k = jnp.square(jax.nn.relu(xk @ policy.cast(p["wk"])))
+    return jax.nn.sigmoid(xr @ policy.cast(p["wr"])) * (k @ policy.cast(p["wv"]))
+
+
+def fwd_cmix_decode(
+    p: dict, cfg: ArchConfig, policy: Policy, x: Array, state: dict
+) -> tuple[Array, dict]:
+    dx = state["x_cmix"].astype(x.dtype) - x
+    xk = x + dx * policy.cast(p["mu_k"])
+    xr = x + dx * policy.cast(p["mu_r"])
+    k = jnp.square(jax.nn.relu(xk @ policy.cast(p["wk"])))
+    out = jax.nn.sigmoid(xr @ policy.cast(p["wr"])) * (k @ policy.cast(p["wv"]))
+    return out, {**state, "x_cmix": x.astype(state["x_cmix"].dtype)}

@@ -1,0 +1,96 @@
+"""AdamW on raw pytrees (no optax in this container — built from scratch).
+
+Features the 100B+ configs need:
+  * moments stored in a configurable dtype (bf16 for command-r-plus / jamba so the
+    optimizer state fits HBM; update math is always f32),
+  * global-norm gradient clipping,
+  * decoupled weight decay with a no-decay predicate (norms, biases, 1D params),
+  * state tree mirrors the param tree -> inherits the param shardings (ZeRO).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4  # peak; schedule multiplies this
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moments_dtype: str = "float32"  # "bfloat16" for >=100B params
+
+
+class AdamWState(NamedTuple):
+    step: Array  # () int32
+    mu: Any  # first moment, tree like params
+    nu: Any  # second moment, tree like params
+
+
+def _no_decay(path, leaf) -> bool:
+    """1D params (norm scales, biases, decays) are not decayed."""
+    return leaf.ndim <= 1
+
+
+def init(params, cfg: AdamWConfig) -> AdamWState:
+    dt = jnp.dtype(cfg.moments_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def update(
+    params, grads, state: AdamWState, cfg: AdamWConfig, lr_scale: Array | float = 1.0
+):
+    """Returns (new_params, new_state, metrics). Math in f32, storage in the
+    declared dtypes; params keep their original dtype."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) if cfg.grad_clip else 1.0
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+    mdt = jnp.dtype(cfg.moments_dtype)
+
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state.mu)
+    flat_nu = jax.tree.leaves(state.nu)
+
+    new_p, new_mu, new_nu = [], [], []
+    for (path, p), g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+        g32 = g.astype(jnp.float32) * clip
+        mu32 = b1 * mu.astype(jnp.float32) + (1 - b1) * g32
+        nu32 = b2 * nu.astype(jnp.float32) + (1 - b2) * g32 * g32
+        upd = (mu32 / bc1) / (jnp.sqrt(nu32 / bc2) + cfg.eps)
+        if cfg.weight_decay and not _no_decay(path, p):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_mu.append(mu32.astype(mdt))
+        new_nu.append(nu32.astype(mdt))
+
+    unflatten = jax.tree_util.tree_unflatten
+    td = jax.tree.structure(params)
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return (
+        unflatten(td, new_p),
+        AdamWState(step, unflatten(td, new_mu), unflatten(td, new_nu)),
+        metrics,
+    )

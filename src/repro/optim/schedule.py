@@ -1,0 +1,18 @@
+"""LR schedules: linear warmup + cosine decay (the only schedule the examples
+need; returned as a pure fn of the int step so it jits into the update)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup: int = 100, total: int = 10_000, floor: float = 0.1):
+    """Multiplier in [floor, 1]; step may be traced."""
+    s = jnp.asarray(step, jnp.float32)
+    warm = s / jnp.maximum(warmup, 1)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def constant(step, *, value: float = 1.0):
+    return jnp.asarray(value, jnp.float32)

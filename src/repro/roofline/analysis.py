@@ -1,0 +1,158 @@
+"""Roofline-term derivation (deliverable g).
+
+v5e-class hardware constants (per the brief):
+    197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+The dry-run records PER-DEVICE loop-aware flops / HBM bytes / collective bytes
+(repro.roofline.hlo_cost over the SPMD-partitioned HLO), so the three terms are:
+
+    t_compute    = flops_per_device / 197e12
+    t_memory     = bytes_per_device / 819e9
+    t_collective = collective_bytes_per_device / (links * 50e9)
+
+with `links` the number of ICI links engaged (v5e: 2D torus, we model the
+per-axis bandwidth conservatively as ONE 50 GB/s link per collective hop; ring
+all-reduce payload bytes are already per-device output bytes in the HLO).
+
+MODEL_FLOPS (useful compute) is 6*N*D (dense) / 6*N_active*D (MoE) for training,
+2*N*D for inference; the ratio MODEL_FLOPS / HLO_FLOPS exposes remat recompute,
+attention-causal waste, MoE dispatch overhead and TP head padding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+from repro.configs.base import SHAPES, ArchConfig
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+
+def roofline_terms(*, flops: float, bytes_hbm: float, collective_bytes: float,
+                   chips: int = 1, links: int = 1) -> dict:
+    """Inputs are PER-DEVICE totals when chips == 1 (the dry-run convention);
+    pass global totals with chips=N to average."""
+    t_c = flops / (chips * PEAK_FLOPS)
+    t_m = bytes_hbm / (chips * HBM_BW)
+    t_n = collective_bytes / (chips * links * ICI_BW)
+    terms = {"t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_n}
+    bottleneck = max(terms, key=terms.get)
+    terms["bottleneck"] = {"t_compute_s": "compute", "t_memory_s": "memory",
+                           "t_collective_s": "collective"}[bottleneck]
+    # roofline fraction: how much of the step the bound resource is busy if the
+    # other two overlap perfectly behind it
+    total = max(t_c, t_m, t_n)
+    terms["roofline_fraction"] = (t_c / total) if total > 0 else 0.0
+    return terms
+
+
+# ---------------------------------------------------------------------------
+# analytic useful flops (MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+def param_counts(cfg: ArchConfig) -> dict:
+    """Analytic parameter counts: total and active (MoE top-k + shared)."""
+    d, V = cfg.d_model, cfg.vocab_size
+    Dh, H, KV = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+    per_layer_total = 0.0
+    per_layer_active = 0.0
+    for spec in cfg.layer_pattern():
+        if spec.mixer == "attn":
+            mix = d * (H + 2 * KV) * Dh + H * Dh * d
+        elif spec.mixer == "mamba":
+            di, N, r = cfg.ssm_d_inner, cfg.ssm_state, cfg.resolved_dt_rank
+            mix = d * 2 * di + di * (r + 2 * N) + r * di + di * d + cfg.ssm_conv * di
+        else:  # rwkv6 tmix
+            a = cfg.rwkv_num_heads * cfg.rwkv_head_size
+            mix = 4 * d * a + a * d + d * 5 * 32 + 5 * 32 * d + d * 64 + 64 * a
+        if spec.ffn == "dense":
+            f = d * cfg.d_ff * (3 if cfg.act == "swiglu" else 2)
+            fa = f
+        elif spec.ffn == "moe":
+            moe = cfg.moe
+            fe = d * moe.d_ff_expert * 3
+            f = moe.num_experts * fe + d * moe.num_experts
+            fa = moe.top_k * fe
+            if moe.num_shared:
+                sh = 3 * d * moe.num_shared * moe.d_ff_shared
+                f += sh
+                fa += sh
+        else:  # rwkv cmix
+            f = 2 * d * cfg.d_ff if False else d * cfg.d_ff * 2 + d * d
+            fa = f
+        per_layer_total += mix + f
+        per_layer_active += mix + fa
+    n_pat = cfg.num_layers // len(cfg.layer_pattern())
+    total = per_layer_total * n_pat
+    active = per_layer_active * n_pat
+    emb = V * d * (cfg.num_codebooks if cfg.frontend == "audio_codes" else 1)
+    head = 0 if cfg.tie_embeddings else emb
+    return {"backbone_total": total, "backbone_active": active,
+            "embed": emb, "head": head,
+            "total": total + emb + head, "active": active + emb + head}
+
+
+def model_flops(cfg: ArchConfig, shape_name: str) -> float:
+    """Useful (paper-formula) flops for the GLOBAL step: 6*N_active*D train,
+    2*N_active*D inference, + exact-attention quadratic term where applicable."""
+    s = SHAPES[shape_name]
+    counts = param_counts(cfg)
+    n_act = counts["backbone_active"] + counts["embed"] + counts["head"]
+    if s.kind == "train":
+        tokens = s.batch * s.seq_len
+        mult = 6.0
+    elif s.kind == "prefill":
+        tokens = s.batch * s.seq_len
+        mult = 2.0
+    else:  # decode: one token per sequence
+        tokens = s.batch
+        mult = 2.0
+    base = mult * n_act * tokens
+    # causal attention quadratic term: 2*S_ctx*d per token per attn layer fwd
+    n_attn = sum(1 for sp in cfg.layer_pattern() if sp.mixer == "attn")
+    n_attn *= cfg.num_layers // len(cfg.layer_pattern())
+    Dh = cfg.resolved_head_dim
+    ctx = s.seq_len if s.kind != "train" else s.seq_len / 2  # causal average
+    if cfg.sliding_window:
+        ctx = min(ctx, cfg.sliding_window)
+    attn = (mult / 1.5) * 2 * ctx * cfg.num_heads * Dh * n_attn * tokens
+    return base + attn
+
+
+def analyze_record(rec: dict, cfg: ArchConfig) -> dict:
+    """Attach roofline terms + usefulness ratio to one dry-run JSONL record.
+    Memory term uses the fusion-optimistic `hbm_bytes` (TPU model); the raw
+    per-instruction `bytes` upper bound is kept in the record for reference."""
+    terms = roofline_terms(
+        flops=rec["flops"], bytes_hbm=rec.get("hbm_bytes", rec["bytes"]),
+        collective_bytes=rec.get("collective_bytes", 0.0),
+        links=2,  # bidirectional ring on one torus axis (conservative: v5e has 2D)
+    )
+    chips = 1
+    for v in rec.get("mesh", {}).values():
+        chips *= v
+    mf = model_flops(cfg, rec["shape"])
+    terms["model_flops_global"] = mf
+    terms["hlo_flops_global"] = rec["flops"] * chips
+    terms["useful_ratio"] = mf / (rec["flops"] * chips) if rec["flops"] > 0 else 0.0
+    return {**rec, **terms}
+
+
+def load_results(path: str | Path) -> list[dict]:
+    out = []
+    p = Path(path)
+    if not p.exists():
+        return out
+    # last record wins per (arch, shape, mesh, opts) key
+    seen: dict = {}
+    for ln in p.read_text().splitlines():
+        if not ln.strip():
+            continue
+        rec = json.loads(ln)
+        key = (rec.get("arch"), rec.get("shape"), rec.get("multi_pod"),
+               tuple(rec.get("opts", ())))
+        seen[key] = rec
+    return list(seen.values())

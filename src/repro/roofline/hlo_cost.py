@@ -1,0 +1,323 @@
+"""Loop-aware cost analysis over optimized HLO text.
+
+Why this exists: XLA's HloCostAnalysis (what `compiled.cost_analysis()` reports)
+counts every instruction ONCE — a lax.scan over 24 layer groups or a 4096-step
+SSM scan is undercounted by its trip count. The optimized HLO text carries
+`backend_config={"known_trip_count":{"n":"24"}}` on while ops, so this module
+re-walks the module with loop multipliers:
+
+    cost(while)  = trip_count * cost(body)            [flops, bytes, collectives]
+    cost(fusion) = flops: recurse into the called computation
+                   bytes: operands + outputs at the call site (fusion internals
+                          don't touch HBM — matches HloCostAnalysis semantics)
+    cost(dot)    = 2 * prod(out_shape) * prod(lhs contracting dims)
+    collectives  = output bytes per op kind, multiplied through enclosing loops
+
+Used by repro.launch.dryrun (records per-cell terms) and repro.roofline.analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "rsqrt", "sqrt", "power", "and", "or", "xor", "not", "compare",
+    "select", "clamp", "floor", "ceil", "round-nearest-afz", "sign", "convert",
+    "cosine", "sine", "atan2", "remainder", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "logistic", "cbrt", "erf", "is-finite",
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"calls=%([\w.\-]+)")
+_COND_BODY = re.compile(r"condition=%([\w.\-]+), body=%([\w.\-]+)")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_NAMES = re.compile(r"%([\w.\-]+)")
+_WINDOW_SIZE = re.compile(r"window=\{size=([\dx]+)")
+
+
+def _shape_info(type_str: str) -> tuple[int, int]:
+    """(total elements, total bytes) of a (possibly tuple) HLO type string."""
+    elems = 0
+    byts = 0
+    for dt, dims in _SHAPE_TOKEN.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_TOKEN.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0  # every instruction's operands+outputs (upper bound)
+    hbm_bytes: float = 0.0  # fusion-optimistic HBM traffic (TPU model, see below)
+    transcendentals: float = 0.0
+    collective_bytes: float = 0.0
+    per_collective: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    collective_count: float = 0.0
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.hbm_bytes += other.hbm_bytes
+        self.transcendentals += other.transcendentals
+        self.collective_bytes += other.collective_bytes
+        self.collective_count += other.collective_count
+        for k in _COLLECTIVES:
+            self.per_collective[k] += other.per_collective[k]
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(
+            self.flops * f, self.bytes * f, self.hbm_bytes * f,
+            self.transcendentals * f,
+            self.collective_bytes * f,
+            {k: v * f for k, v in self.per_collective.items()},
+            self.collective_count * f,
+        )
+
+    def as_dict(self) -> dict:
+        d = {
+            "flops": self.flops, "bytes": self.bytes,
+            "hbm_bytes": self.hbm_bytes,
+            "transcendentals": self.transcendentals,
+            "collective_bytes": self.collective_bytes,
+            "collective_count": self.collective_count,
+        }
+        d.update({f"bytes_{k}": v for k, v in self.per_collective.items()})
+        return d
+
+
+# Ops whose operand/output bytes are REAL HBM traffic on a TPU even under
+# perfect elementwise fusion: matmul boundaries (weights + activations),
+# data-dependent movement, reductions and cache updates. Elementwise chains
+# between these fuse into their producers/consumers on TPU — the XLA:CPU HLO
+# wraps each in a single-op fusion, which is why the raw `bytes` field
+# over-counts HBM by the chain length (DESIGN.md section 9).
+_HBM_OPS = {"dot", "convolution", "gather", "scatter", "reduce",
+            "reduce-window", "sort"}
+
+
+class HloModuleCost:
+    """Parses one HLO module text and computes loop-aware costs."""
+
+    def __init__(self, text: str):
+        self.computations: dict[str, list[str]] = {}
+        self.entry: str | None = None
+        self._parse(text)
+        self._memo: dict[str, Cost] = {}
+
+    def _parse(self, text: str):
+        cur: list[str] | None = None
+        name = None
+        for line in text.splitlines():
+            header = re.match(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->.*\{", line)
+            if header:
+                name = header.group(2)
+                cur = []
+                self.computations[name] = cur
+                if header.group(1):
+                    self.entry = name
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            if cur is not None:
+                cur.append(line)
+
+    # ------------------------------------------------------------------
+    def computation_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Cost()  # break cycles defensively
+        total = Cost()
+        shapes: dict[str, str] = {}
+        for line in self.computations.get(name, ()):  # first pass: symbol table
+            m = _INSTR.match(line)
+            if m:
+                shapes[m.group(1)] = m.group(2)
+            pm = re.match(r"^\s*%([\w.\-]+)\s*=\s*(.+?)\s+parameter\(", line)
+            if pm:
+                shapes[pm.group(1)] = pm.group(2)
+        for line in self.computations.get(name, ()):
+            m = _INSTR.match(line)
+            if not m:
+                continue
+            out_name, out_type, op, rest = m.groups()
+            total += self._instr_cost(op, out_type, rest, shapes)
+        self._memo[name] = total
+        return total
+
+    def _instr_cost(self, op: str, out_type: str, rest: str, shapes) -> Cost:
+        c = Cost()
+        out_elems, out_bytes = _shape_info(out_type)
+
+        def operand_bytes() -> int:
+            total = 0
+            args = rest.split("), ")[0]
+            for nm in _OPERAND_NAMES.findall(args):
+                if nm in shapes:
+                    total += _shape_info(shapes[nm])[1]
+            return total
+
+        if op == "while":
+            mb = _COND_BODY.search(rest)
+            trip = 1
+            tm = _TRIP.search(rest)
+            if tm:
+                trip = int(tm.group(1))
+            if mb:
+                body = self.computation_cost(mb.group(2)).scaled(trip)
+                cond = self.computation_cost(mb.group(1)).scaled(trip)
+                c += body
+                c += cond
+            return c
+        if op in ("fusion", "call", "map"):
+            cm = _CALLS.search(rest)
+            if cm:
+                inner = self.computation_cost(cm.group(1))
+                # flops/hbm recurse; raw bytes = call-site operands+outputs only
+                c.flops += inner.flops
+                c.hbm_bytes += inner.hbm_bytes
+                c.transcendentals += inner.transcendentals
+                c.collective_bytes += inner.collective_bytes
+                c.collective_count += inner.collective_count
+                for k in _COLLECTIVES:
+                    c.per_collective[k] += inner.per_collective[k]
+            c.bytes += out_bytes + operand_bytes()
+            return c
+        if op in ("conditional",):  # take max branch cost (upper bound)
+            branches = [self.computation_cost(n) for n in _CALLS.findall(rest)]
+            if branches:
+                best = max(branches, key=lambda b: b.flops)
+                c += best
+            c.bytes += out_bytes + operand_bytes()
+            return c
+
+        kind = next((k for k in _COLLECTIVES if op == k or op.startswith(k + ".")
+                     or (op.endswith("-start") and op[:-6] == k)), None)
+        if op.endswith("-done"):
+            return c  # paired with -start; avoid double count
+        if kind:
+            c.collective_bytes += out_bytes
+            c.per_collective[kind] += out_bytes
+            c.collective_count += 1
+            c.bytes += out_bytes + operand_bytes()
+            c.hbm_bytes += out_bytes + operand_bytes()
+            return c
+
+        if op == "dot":
+            cd = _LHS_CDIMS.search(rest)
+            contract = 1
+            if cd:
+                args = _OPERAND_NAMES.findall(rest.split("), ")[0])
+                if args and args[0] in shapes:
+                    lhs_dims = _shape_dims(shapes[args[0]])
+                    for idx in cd.group(1).split(","):
+                        if idx:
+                            contract *= lhs_dims[int(idx)]
+            c.flops += 2.0 * out_elems * contract
+            ob = out_bytes + operand_bytes()
+            c.bytes += ob
+            c.hbm_bytes += ob
+            return c
+        if op == "convolution":
+            wm = _WINDOW_SIZE.search(rest)
+            ksp = 1
+            if wm:
+                for d in wm.group(1).split("x"):
+                    ksp *= int(d)
+            c.flops += 2.0 * out_elems * ksp  # depthwise approximation
+            ob = out_bytes + operand_bytes()
+            c.bytes += ob
+            c.hbm_bytes += ob
+            return c
+        if op in ("reduce", "reduce-window"):
+            c.flops += operand_bytes() / 4.0  # ~1 op per input element
+            ob = out_bytes + operand_bytes()
+            c.bytes += ob
+            c.hbm_bytes += ob
+            return c
+        if op in _ELEMENTWISE:
+            c.flops += out_elems
+            if op in ("exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                      "logistic", "cosine", "sine", "erf", "cbrt"):
+                c.transcendentals += out_elems
+            c.bytes += out_bytes + operand_bytes()
+            return c
+        # data-movement ops: model ACTUAL traffic, not operand totals — a
+        # dynamic-slice inside a 4096-step scan reads one slice per step, not
+        # the whole stacked array (the naive count inflated SSM scans ~1000x).
+        if op in ("dynamic-slice", "slice"):
+            # scan xs slicing / tile gathers: fused into the consumer on TPU and
+            # the consumer (dot/reduce) already counts the slice as an operand —
+            # counting here would double-count. Raw `bytes` keeps an estimate.
+            c.bytes += 2 * out_bytes
+            return c
+        if op == "gather":
+            c.bytes += 2 * out_bytes
+            c.hbm_bytes += 2 * out_bytes  # embedding lookups: real traffic
+            return c
+        if op in ("dynamic-update-slice", "scatter"):
+            # scan ys/carry writes alias in place; traffic ~ update operand only,
+            # and the producer already counted its own output write => raw bytes
+            # only (decode cache writes are one token — negligible vs reads).
+            args = rest.split("), ")[0]
+            sizes = [
+                _shape_info(shapes[nm])[1]
+                for nm in _OPERAND_NAMES.findall(args)
+                if nm in shapes and _shape_info(shapes[nm])[1] > 8
+            ]
+            upd = min(sizes) if sizes else out_bytes
+            upd = min(upd, out_bytes)
+            c.bytes += 2 * upd
+            if op == "scatter":
+                c.hbm_bytes += 2 * upd  # data-dependent scatters don't fuse
+            return c
+        if op in ("concatenate", "pad", "reverse", "sort"):
+            c.bytes += 2 * out_bytes
+            if op == "sort":
+                c.hbm_bytes += 2 * out_bytes
+            return c
+        if op not in ("parameter", "constant", "tuple", "get-tuple-element", "bitcast"):
+            c.bytes += out_bytes + operand_bytes()
+            if op in _HBM_OPS:
+                c.hbm_bytes += out_bytes + operand_bytes()
+        return c
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            raise ValueError("no ENTRY computation found")
+        return self.computation_cost(self.entry)
+
+
+def analyze_hlo(text: str) -> dict:
+    return HloModuleCost(text).entry_cost().as_dict()

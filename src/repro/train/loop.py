@@ -1,0 +1,122 @@
+"""Fault-tolerant training loop.
+
+Production behaviors, all testable in this container:
+  * resume-from-latest on start (crash/preemption recovery) — the step counter,
+    params, optimizer state and data-position all come from the checkpoint;
+  * periodic async checkpoints (snapshot sync, serialize off-thread);
+  * straggler watchdog: per-step wall times vs a running median; a step slower
+    than `straggler_factor` x median raises a StragglerEvent record — on a real
+    pod this triggers slice rebalancing, here it is logged and surfaced to the
+    caller (tests assert detection fires);
+  * fault injection hook for tests (`fault_hook(step)` may raise);
+  * metrics JSONL log (loss, grad_norm, step time) next to the checkpoints.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import statistics
+import time
+from pathlib import Path
+from typing import Any, Callable, Iterator
+
+import jax
+
+from repro.distributed import checkpoint as ckpt_lib
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 20
+    keep_last: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    straggler_warmup: int = 5  # steps before the watchdog arms
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    step_time: float
+    median: float
+
+
+class TrainLoop:
+    def __init__(
+        self,
+        train_step: Callable,  # (params, opt_state, batch) -> (params, opt_state, metrics)
+        data_iter_factory: Callable[[int], Iterator],  # start_step -> iterator
+        ckpt_dir: str | Path,
+        loop_cfg: LoopConfig = LoopConfig(),
+        fault_hook: Callable[[int], None] | None = None,
+    ):
+        self.train_step = train_step
+        self.data_iter_factory = data_iter_factory
+        self.ckpt_dir = Path(ckpt_dir)
+        self.cfg = loop_cfg
+        self.fault_hook = fault_hook
+        self.checkpointer = ckpt_lib.AsyncCheckpointer(self.ckpt_dir, loop_cfg.keep_last)
+        self.straggler_events: list[StragglerEvent] = []
+        self._step_times: list[float] = []
+
+    # ------------------------------------------------------------------
+    def run(self, params, opt_state, shardings: dict | None = None):
+        """Run to total_steps, resuming from the latest checkpoint if present.
+        Returns (params, opt_state, history)."""
+        start = 0
+        resumed = ckpt_lib.latest_step(self.ckpt_dir)
+        if resumed is not None:
+            templates = {"params": params, "opt_state": opt_state}
+            start, trees = ckpt_lib.restore(
+                self.ckpt_dir, templates, shardings=shardings
+            )
+            params, opt_state = trees["params"], trees["opt_state"]
+        history: list[dict] = []
+        log_path = self.ckpt_dir / "metrics.jsonl"
+        self.ckpt_dir.mkdir(parents=True, exist_ok=True)
+        data = self.data_iter_factory(start)
+
+        step = start
+        try:
+            for step in range(start, self.cfg.total_steps):
+                if self.fault_hook is not None:
+                    self.fault_hook(step)
+                batch = next(data)
+                t0 = time.time()
+                params, opt_state, metrics = self.train_step(params, opt_state, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.time() - t0
+                self._watchdog(step, dt)
+                if step % self.cfg.log_every == 0 or step == self.cfg.total_steps - 1:
+                    rec = {
+                        "step": step,
+                        "time_s": round(dt, 4),
+                        **{k: float(v) for k, v in metrics.items()},
+                    }
+                    history.append(rec)
+                    with log_path.open("a") as f:
+                        f.write(json.dumps(rec) + "\n")
+                if (step + 1) % self.cfg.checkpoint_every == 0:
+                    self.checkpointer.save(
+                        step + 1, {"params": params, "opt_state": opt_state}
+                    )
+        finally:
+            self.checkpointer.wait()
+        # final checkpoint so a restart is a no-op
+        ckpt_lib.save(
+            self.ckpt_dir, self.cfg.total_steps,
+            {"params": params, "opt_state": opt_state}, keep_last=self.cfg.keep_last,
+        )
+        return params, opt_state, history
+
+    # ------------------------------------------------------------------
+    def _watchdog(self, step: int, dt: float):
+        self._step_times.append(dt)
+        if len(self._step_times) <= self.cfg.straggler_warmup:
+            return
+        med = statistics.median(self._step_times[:-1])
+        if dt > self.cfg.straggler_factor * med:
+            self.straggler_events.append(StragglerEvent(step, dt, med))

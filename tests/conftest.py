@@ -1,0 +1,24 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device forcing here — unit/smoke tests run
+on the single real CPU device; multi-device behaviour is exercised through
+subprocess tests (tests/test_distributed_subprocess.py) so the 8-device env var
+never leaks into this process."""
+import os
+import sys
+from pathlib import Path
+
+import jax
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture()
+def tmp_ckpt(tmp_path):
+    return tmp_path / "ckpt"

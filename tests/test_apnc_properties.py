@@ -1,0 +1,127 @@
+"""The four APNC properties (paper Section 4), as executable checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import nystrom, stable
+from repro.core.apnc import embed, pairwise_discrepancy
+from repro.core.kernels_fn import Kernel
+
+
+def _data(n=300, d=8, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, (n, d))
+
+
+def _kernel_space_dists(kern, X):
+    """||phi_i - phi_j|| via the kernel trick, upper triangle flattened."""
+    K = kern.gram(X, X)
+    diag = jnp.diagonal(K)
+    d2 = jnp.maximum(diag[:, None] - 2 * K + diag[None, :], 0)
+    iu = np.triu_indices(X.shape[0], k=1)
+    return np.sqrt(np.asarray(d2))[iu]
+
+
+def test_p41_linearity_linear_kernel():
+    """P4.1: f is a linear map. With the linear kernel, phi == x, so linearity is
+    directly testable in input space."""
+    X = _data()
+    coeffs = nystrom.fit(jax.random.PRNGKey(1), X, Kernel("linear"), l=64, m=32)
+    a, b = 0.7, -1.3
+    lhs = embed(a * X[:5] + b * X[5:10], coeffs)
+    rhs = a * embed(X[:5], coeffs) + b * embed(X[5:10], coeffs)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=3e-3)
+
+
+def test_p41_centroid_commutes_with_embedding():
+    """Centroid of embeddings == embedding of (kernel-space) centroid: checked
+    through the assignment objective — Z/g averaging is exactly what Algorithm 2
+    uses, and for the linear kernel we can compare against embedding the mean."""
+    X = _data()
+    coeffs = nystrom.fit(jax.random.PRNGKey(2), X, Kernel("linear"), l=64, m=32)
+    members = X[:50]
+    np.testing.assert_allclose(
+        jnp.mean(embed(members, coeffs), axis=0),
+        embed(jnp.mean(members, axis=0, keepdims=True), coeffs)[0],
+        rtol=1e-3, atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("method,fit_fn", [("nys", nystrom.fit), ("sd", stable.fit)])
+def test_p42_p43_structure(method, fit_fn):
+    """P4.2 kernelized (R acts on K_{L,i}); P4.3 block-diagonal R blocks."""
+    X = _data()
+    kern = Kernel("rbf", gamma=0.1)
+    q = 2
+    kw = dict(l=64, m=16, q=q)
+    coeffs = fit_fn(jax.random.PRNGKey(3), X, kern, **kw)
+    assert coeffs.landmarks.shape == (q, 32, X.shape[1])
+    assert coeffs.R.shape[0] == q and coeffs.R.shape[2] == 32
+    # embedding == concat of independent per-block embeddings (block-diagonality)
+    Y = embed(X[:10], coeffs)
+    from repro.core.apnc import embed_block
+
+    parts = [embed_block(X[:10], coeffs.landmarks[b], coeffs.R[b], kern) for b in range(q)]
+    np.testing.assert_allclose(Y, jnp.concatenate(parts, -1), rtol=1e-5, atol=1e-5)
+
+
+def test_p44_nystrom_distance_approximation():
+    """P4.4 for APNC-Nys: ||y_i - y_j||_2 ~ ||phi_i - phi_j||_2. With l == n and
+    m == n the Nystrom approximation is exact (up to clamped eigenvalues)."""
+    X = _data(n=120)
+    kern = Kernel("rbf", gamma=0.05)
+    coeffs = nystrom.fit(jax.random.PRNGKey(4), X, kern, l=120, m=120)
+    Y = embed(X, coeffs)
+    emb_d = np.asarray(pairwise_discrepancy(Y, Y, "l2"))[np.triu_indices(120, k=1)]
+    true_d = _kernel_space_dists(kern, X)
+    np.testing.assert_allclose(emb_d, true_d, rtol=5e-2, atol=5e-3)
+    # and at l << n the correlation stays high
+    coeffs_small = nystrom.fit(jax.random.PRNGKey(5), X, kern, l=60, m=60)
+    Ys = embed(X, coeffs_small)
+    emb_s = np.asarray(pairwise_discrepancy(Ys, Ys, "l2"))[np.triu_indices(120, k=1)]
+    corr = np.corrcoef(emb_s, true_d)[0, 1]
+    assert corr > 0.95, corr
+
+
+def test_p44_sd_distance_approximation():
+    """P4.4 for APNC-SD. The l1 estimator lives in span(L), so pairwise distances
+    are approximated only up to the captured subspace — corr ~0.7-0.8 at l=100 is
+    the method's realistic quality (the paper's own results rely on it only
+    through the ASSIGNMENT, Eq. 4). We therefore assert (a) directional
+    consistency of distances and (b) the property the name promises:
+    Approximate-Nearest-Centroid agreement with exact kernel distances."""
+    from repro.data.synthetic import gaussian_blobs
+    from repro.core.kernels_fn import self_tuned_rbf
+
+    X, labels = gaussian_blobs(jax.random.PRNGKey(7), 150, 8, 4, separation=3.0)
+    kern = self_tuned_rbf(X)
+    coeffs = stable.fit(jax.random.PRNGKey(6), X, kern, l=100, m=800)
+    Y = embed(X, coeffs)
+    emb_d = np.asarray(pairwise_discrepancy(Y, Y, "l1"))[np.triu_indices(150, k=1)]
+    true_d = _kernel_space_dists(kern, X)
+    corr = np.corrcoef(emb_d, true_d)[0, 1]
+    assert corr > 0.6, corr
+
+    # nearest-CENTROID agreement: exact kernel distance (Eq. 2) vs e (Eq. 4)
+    K = np.asarray(kern.gram(X, X))
+    onehot = np.eye(4)[np.asarray(labels)]
+    n_c = onehot.sum(0)
+    M = onehot / n_c
+    KM = K @ M
+    cc = np.einsum("nk,nk->k", M, KM)
+    d2_exact = np.diag(K)[:, None] - 2 * KM + cc[None, :]
+    exact_assign = d2_exact.argmin(1)
+
+    cent = np.stack([np.asarray(Y)[np.asarray(labels) == c].mean(0) for c in range(4)])
+    d_emb = np.asarray(pairwise_discrepancy(Y, jnp.asarray(cent), "l1"))
+    apnc_assign = d_emb.argmin(1)
+    agreement = (apnc_assign == exact_assign).mean()
+    assert agreement > 0.9, agreement
+
+
+def test_sd_discrepancy_is_l1_nys_is_l2():
+    X = _data(n=64)
+    kern = Kernel("rbf", gamma=0.1)
+    assert nystrom.fit(jax.random.PRNGKey(0), X, kern, l=32, m=16).discrepancy == "l2"
+    assert stable.fit(jax.random.PRNGKey(0), X, kern, l=32, m=16).discrepancy == "l1"

@@ -1,0 +1,84 @@
+"""Checkpointing: roundtrip, atomicity, async, keep_last, resume equivalence."""
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import checkpoint as ck
+
+
+def make_trees(seed=0):
+    k = jax.random.PRNGKey(seed)
+    params = {"a": jax.random.normal(k, (8, 4)),
+              "nested": {"b": jnp.arange(6, dtype=jnp.int32)}}
+    return {"params": params}
+
+
+def test_roundtrip(tmp_ckpt):
+    trees = make_trees()
+    ck.save(tmp_ckpt, 7, trees)
+    assert ck.latest_step(tmp_ckpt) == 7
+    step, out = ck.restore(tmp_ckpt, {"params": jax.eval_shape(lambda: trees["params"])})
+    assert step == 7
+    np.testing.assert_allclose(out["params"]["a"], trees["params"]["a"])
+    np.testing.assert_array_equal(out["params"]["nested"]["b"], trees["params"]["nested"]["b"])
+
+
+def test_latest_pointer_survives_partial_write(tmp_ckpt):
+    """A crashed (partial) later checkpoint must never shadow a good one."""
+    ck.save(tmp_ckpt, 10, make_trees())
+    # simulate a crash mid-write of step 20: tmp dir exists, no manifest swap
+    broken = Path(tmp_ckpt) / ".tmp_step_20_crashed"
+    broken.mkdir()
+    (broken / "params.npz").write_bytes(b"garbage")
+    assert ck.latest_step(tmp_ckpt) == 10
+    step, out = ck.restore(tmp_ckpt, {"params": jax.eval_shape(lambda: make_trees()["params"])})
+    assert step == 10
+
+
+def test_latest_pointer_is_validated(tmp_ckpt):
+    ck.save(tmp_ckpt, 5, make_trees())
+    # corrupt: pointer names a step whose dir is gone
+    shutil.rmtree(Path(tmp_ckpt) / "step_00000005")
+    assert ck.latest_step(tmp_ckpt) is None
+
+
+def test_keep_last(tmp_ckpt):
+    for s in (1, 2, 3, 4, 5):
+        ck.save(tmp_ckpt, s, make_trees(), keep_last=2)
+    dirs = sorted(p.name for p in Path(tmp_ckpt).glob("step_*"))
+    assert dirs == ["step_00000004", "step_00000005"]
+
+
+def test_async_checkpointer(tmp_ckpt):
+    acp = ck.AsyncCheckpointer(tmp_ckpt, keep_last=2)
+    trees = make_trees()
+    acp.save(3, trees)
+    acp.wait()
+    assert ck.latest_step(tmp_ckpt) == 3
+
+
+def test_restore_shape_mismatch_raises(tmp_ckpt):
+    ck.save(tmp_ckpt, 1, make_trees())
+    bad_template = {"params": {"a": jax.ShapeDtypeStruct((9, 9), jnp.float32),
+                               "nested": {"b": jax.ShapeDtypeStruct((6,), jnp.int32)}}}
+    with pytest.raises(ValueError, match="shape"):
+        ck.restore(tmp_ckpt, bad_template)
+
+
+def test_opt_state_namedtuple_roundtrip(tmp_ckpt):
+    from repro.optim import adamw
+    from repro.optim.adamw import AdamWConfig
+
+    params = make_trees()["params"]
+    st = adamw.init(params, AdamWConfig())
+    ck.save(tmp_ckpt, 2, {"opt": st})
+    _, out = ck.restore(tmp_ckpt, {"opt": jax.eval_shape(lambda: st)})
+    assert int(out["opt"].step) == 0
+    np.testing.assert_allclose(out["opt"].mu["a"], st.mu["a"])

@@ -1,0 +1,73 @@
+"""Kernel-function unit + property tests (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kernels_fn import Kernel, MNIST_KERNEL, USPS_KERNEL, self_tuned_rbf
+
+KERNELS = [
+    Kernel("rbf", gamma=0.07),
+    Kernel("poly", degree=3, coef0=1.0),
+    Kernel("tanh", scale=0.01, coef0=0.1),
+    Kernel("linear"),
+]
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=lambda k: k.name)
+def test_gram_matches_pointwise(kern):
+    key = jax.random.PRNGKey(0)
+    X = jax.random.normal(key, (7, 5))
+    Z = jax.random.normal(jax.random.fold_in(key, 1), (4, 5))
+    G = kern.gram(X, Z)
+    for i in range(7):
+        for j in range(4):
+            gij = kern.gram(X[i : i + 1], Z[j : j + 1])[0, 0]
+            np.testing.assert_allclose(G[i, j], gij, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=lambda k: k.name)
+def test_gram_symmetric_and_diag(kern):
+    X = jax.random.normal(jax.random.PRNGKey(1), (9, 6))
+    G = kern.gram(X, X)
+    np.testing.assert_allclose(G, G.T, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(jnp.diagonal(G), kern.diag(X), rtol=1e-5, atol=1e-5)
+
+
+def test_rbf_range_and_psd():
+    X = jax.random.normal(jax.random.PRNGKey(2), (32, 8))
+    G = Kernel("rbf", gamma=0.3).gram(X, X)
+    assert float(jnp.min(G)) > 0.0 and float(jnp.max(G)) <= 1.0 + 1e-6
+    eigs = np.linalg.eigvalsh(np.asarray(G, np.float64))
+    assert eigs.min() > -1e-5  # PSD up to roundoff
+
+
+def test_self_tuned_rbf_scales_with_data():
+    X = jax.random.normal(jax.random.PRNGKey(3), (256, 4))
+    g1 = self_tuned_rbf(X).gamma
+    g2 = self_tuned_rbf(X * 10.0).gamma
+    assert g1 > 0 and g2 > 0
+    assert g1 / g2 == pytest.approx(100.0, rel=0.05)  # gamma ~ 1/scale^2
+
+
+def test_paper_kernel_settings():
+    # Section 9: a=0.0045, b=0.11 (USPS neural); degree 5 (MNIST polynomial)
+    assert USPS_KERNEL.scale == pytest.approx(0.0045)
+    assert USPS_KERNEL.coef0 == pytest.approx(0.11)
+    assert MNIST_KERNEL.degree == 5
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 12), l=st.integers(1, 8), d=st.integers(1, 10),
+    seed=st.integers(0, 2**30),
+)
+def test_rbf_distance_identity(n, l, d, seed):
+    """exp(-gamma ||x-z||^2) recovered from the gram expansion for random shapes."""
+    key = jax.random.PRNGKey(seed)
+    X = jax.random.normal(key, (n, d))
+    Z = jax.random.normal(jax.random.fold_in(key, 1), (l, d))
+    G = Kernel("rbf", gamma=0.11).gram(X, Z)
+    direct = jnp.exp(-0.11 * jnp.sum((X[:, None, :] - Z[None, :, :]) ** 2, -1))
+    np.testing.assert_allclose(G, direct, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,146 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracle,
+sweeping shapes, dtypes, kernel functions and discrepancies (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import nystrom, stable
+from repro.core.kernels_fn import Kernel
+from repro.kernels import ops, ref
+
+KERNELS = [
+    Kernel("rbf", gamma=0.05),
+    Kernel("poly", degree=3, coef0=1.0),
+    Kernel("tanh", scale=0.01, coef0=0.1),
+    Kernel("linear"),
+]
+
+
+@pytest.mark.parametrize("kern", KERNELS, ids=lambda k: k.name)
+@pytest.mark.parametrize("shape", [(64, 32), (515, 77), (257, 130)])
+def test_embed_matches_oracle(kern, shape):
+    n, d = shape
+    X = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    coeffs = nystrom.fit(jax.random.PRNGKey(1), X, kern, l=48, m=17)
+    got = ops.apnc_embed(X, coeffs, interpret=True)
+    want = ref.apnc_embed_ref(X, coeffs.landmarks, coeffs.R, kern)
+    tol = 2e-3 if kern.name == "poly" else 2e-5  # poly amplifies roundoff
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * np.abs(want).max())
+
+
+def test_embed_multi_block_q2():
+    X = jax.random.normal(jax.random.PRNGKey(2), (200, 24))
+    kern = Kernel("rbf", gamma=0.1)
+    coeffs = stable.fit(jax.random.PRNGKey(3), X, kern, l=64, m=16, q=2)
+    got = ops.apnc_embed(X, coeffs, interpret=True)
+    want = ref.apnc_embed_ref(X, coeffs.landmarks, coeffs.R, kern)
+    assert got.shape == (200, 32)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embed_dtypes(dtype):
+    X = jax.random.normal(jax.random.PRNGKey(4), (96, 40)).astype(dtype)
+    kern = Kernel("rbf", gamma=0.05)
+    coeffs = nystrom.fit(jax.random.PRNGKey(5), X.astype(jnp.float32), kern, l=32, m=16)
+    got = ops.apnc_embed(X, coeffs, interpret=True)
+    want = ref.apnc_embed_ref(X, coeffs.landmarks, coeffs.R, kern)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    assert got.dtype == jnp.float32  # kernels accumulate f32
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("disc", ["l2", "l1"])
+@pytest.mark.parametrize("nk", [(64, 3), (515, 7), (130, 11)])
+def test_assign_matches_oracle(disc, nk):
+    n, k = nk
+    Y = jax.random.normal(jax.random.PRNGKey(6), (n, 70))
+    C = jax.random.normal(jax.random.PRNGKey(7), (k, 70)) * 2.0
+    Zp, gp, lp = ops.apnc_assign(Y, C, disc, interpret=True)
+    Zr, gr, lr = ref.apnc_assign_ref(Y, C, disc)
+    assert bool(jnp.all(lp == lr))
+    np.testing.assert_allclose(gp, gr)
+    np.testing.assert_allclose(Zp, Zr, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(3, 300),
+    m=st.integers(2, 160),
+    k=st.integers(2, 9),
+    disc=st.sampled_from(["l2", "l1"]),
+    seed=st.integers(0, 2**30),
+)
+def test_assign_property_sweep(n, m, k, disc, seed):
+    key = jax.random.PRNGKey(seed)
+    Y = jax.random.normal(key, (n, m))
+    C = jax.random.normal(jax.random.fold_in(key, 1), (k, m))
+    Zp, gp, lp = ops.apnc_assign(Y, C, disc, interpret=True)
+    Zr, gr, lr = ref.apnc_assign_ref(Y, C, disc)
+    # labels may differ only on exact distance ties (measure-zero for gaussians)
+    assert bool(jnp.all(lp == lr))
+    np.testing.assert_allclose(gp, gr)
+    assert float(jnp.sum(gp)) == n  # every row assigned exactly once
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(2, 200), d=st.integers(1, 90), l=st.integers(4, 40),
+    seed=st.integers(0, 2**30),
+)
+def test_embed_property_sweep(n, d, l, seed):
+    key = jax.random.PRNGKey(seed)
+    l = min(l, n)  # cannot sample more landmarks than points
+    X = jax.random.normal(key, (n, d))
+    m = max(1, l // 2)
+    coeffs = nystrom.fit(jax.random.fold_in(key, 1), X, Kernel("rbf", gamma=0.1), l=l, m=m)
+    got = ops.apnc_embed(X, coeffs, interpret=True)
+    want = ref.apnc_embed_ref(X, coeffs.landmarks, coeffs.R, Kernel("rbf", gamma=0.1))
+    assert got.shape == want.shape == (n, m)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+def test_blockspecs_are_lane_aligned():
+    """Structural TPU-readiness: default tiles are multiples of the 128 lane."""
+    from repro.kernels import apnc_assign as ka, apnc_embed as ke
+
+    assert ke.DEFAULT_BN % 128 == 0 and ke.DEFAULT_BL % 128 == 0
+    assert ke.DEFAULT_BD % 128 == 0 and ka.DEFAULT_BN % 128 == 0
+
+
+@pytest.mark.parametrize("window", [0, 100])
+@pytest.mark.parametrize("shape", [(2, 512, 3, 64), (1, 96, 2, 40), (2, 256, 4, 128)])
+def test_flash_attention_kernel_matches_oracle(window, shape):
+    """LM-side Pallas flash attention vs direct-softmax oracle (interpret mode)."""
+    B, S, H, Dh = shape
+    q, k, v = (jax.random.normal(jax.random.PRNGKey(i), (B, S, H, Dh))
+               for i in range(3))
+    got = ops.flash_attention(q, k, v, window=window, bq=64, bk=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, window)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    s_blocks=st.integers(1, 6), h=st.integers(1, 3), dh=st.integers(8, 96),
+    seed=st.integers(0, 2**30),
+)
+def test_flash_attention_property_sweep(s_blocks, h, dh, seed):
+    key = jax.random.PRNGKey(seed)
+    S = 32 * s_blocks
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (1, S, h, dh))
+               for i in range(3))
+    got = ops.flash_attention(q, k, v, bq=32, bk=32, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, 0)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-5)
+
+
+def test_flash_attention_bf16():
+    q, k, v = (jax.random.normal(jax.random.PRNGKey(i), (1, 128, 2, 64),
+               jnp.bfloat16) for i in range(3))
+    got = ops.flash_attention(q, k, v, bq=64, bk=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, 0)
+    np.testing.assert_allclose(got.astype(jnp.float32), want.astype(jnp.float32),
+                               rtol=5e-2, atol=5e-2)

@@ -1,0 +1,47 @@
+"""NMI / metrics properties (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.metrics import contingency, nmi, purity
+
+
+def test_perfect_match_is_one():
+    a = np.array([0, 0, 1, 1, 2, 2])
+    assert nmi(a, a) == 1.0
+
+
+def test_single_cluster_is_zero():
+    a = np.zeros(10, int)
+    b = np.arange(10) % 2
+    assert nmi(a, b) == 0.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 4), min_size=5, max_size=60),
+       st.integers(0, 4), st.integers(1, 4))
+def test_nmi_invariant_to_label_permutation(labels, shift, mult):
+    a = np.array(labels)
+    b = (a * mult + shift) % 5  # injective when mult coprime with 5
+    if len(set((x * mult) % 5 for x in range(5))) == 5:
+        assert abs(nmi(a, a) - nmi(a, b)) < 1e-9 or nmi(a, a) == 0.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 3), min_size=4, max_size=50),
+       st.lists(st.integers(0, 3), min_size=4, max_size=50))
+def test_nmi_symmetric_and_bounded(la, lb):
+    n = min(len(la), len(lb))
+    a, b = np.array(la[:n]), np.array(lb[:n])
+    v = nmi(a, b)
+    assert 0.0 <= v <= 1.0 + 1e-12
+    assert abs(v - nmi(b, a)) < 1e-9
+
+
+def test_contingency_counts():
+    M = contingency([0, 0, 1], [1, 1, 0])
+    assert M[0, 1] == 2 and M[1, 0] == 1 and M.sum() == 3
+
+
+def test_purity_upper_bound():
+    assert purity([0, 0, 1, 1], [0, 0, 1, 1]) == 1.0
+    assert purity([0, 0, 0, 0], [0, 0, 1, 1]) == 0.5

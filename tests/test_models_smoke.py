@@ -1,0 +1,281 @@
+"""Per-arch smoke tests (deliverable f): every assigned architecture instantiates
+a REDUCED same-family config, runs one forward/train step on CPU, asserts output
+shapes + no NaNs; plus decode-vs-full consistency and exactness of the TP head
+padding trick."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, list_archs, reduced
+from repro.models import model
+from repro.models.common import TEST_POLICY
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+from repro.train import step as step_lib
+
+B, S = 2, 16
+ARCHS = list_archs()
+
+
+def make_batch(cfg, key=1, with_mask=True):
+    batch = {}
+    if cfg.frontend == "audio_codes":
+        batch["codes"] = jax.random.randint(
+            jax.random.PRNGKey(key), (B, cfg.num_codebooks, S), 0, cfg.vocab_size)
+    elif cfg.frontend == "vision_prefix":
+        P = cfg.num_prefix_tokens
+        batch["tokens"] = jax.random.randint(
+            jax.random.PRNGKey(key), (B, S - P), 0, cfg.vocab_size)
+        batch["patch_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(key + 1), (B, P, cfg.d_model))
+    else:
+        batch["tokens"] = jax.random.randint(
+            jax.random.PRNGKey(key), (B, S), 0, cfg.vocab_size)
+    if with_mask:
+        batch["loss_mask"] = jnp.ones((B, S))
+    return batch
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+    assert {get_arch(a).family for a in ARCHS} == {
+        "dense", "moe", "ssm", "hybrid", "audio", "vlm"}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_arch(arch)
+    expected = {
+        "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151_936),
+        "llama3-8b": (32, 4096, 32, 8, 14_336, 128_256),
+        "command-r-plus-104b": (64, 12_288, 96, 8, 33_792, 256_000),
+        "qwen3-4b": (36, 2560, 32, 8, 9728, 151_936),
+        "rwkv6-3b": (32, 2560, 40, 40, 8960, 65_536),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24_576, 65_536),
+        "llava-next-34b": (60, 7168, 56, 8, 20_480, 64_000),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14_336, 32_000),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151_936),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected, (got, expected)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = reduced(get_arch(arch))
+    params = model.init(jax.random.PRNGKey(0), cfg, TEST_POLICY)
+    batch = make_batch(cfg)
+    loss, metrics = model.forward_train(params, cfg, TEST_POLICY, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    # one optimizer step moves the loss
+    opt_cfg = AdamWConfig(lr=1e-2)
+    opt_state = adamw.init(params, opt_cfg)
+    ts = step_lib.make_train_step(cfg, TEST_POLICY, opt_cfg, lambda s: 1.0)
+    p2, o2, m2 = jax.jit(ts)(params, opt_state, batch)
+    assert bool(jnp.isfinite(m2["loss"]))
+    l2, _ = model.forward_train(p2, cfg, TEST_POLICY, batch)
+    assert float(l2) < float(loss), (arch, float(loss), float(l2))
+    assert bool(jnp.all(jnp.isfinite(m2["grad_norm"])))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "mixtral-8x7b", "rwkv6-3b",
+                                  "jamba-1.5-large-398b", "musicgen-large",
+                                  "llava-next-34b"])
+def test_decode_matches_full_forward(arch):
+    cfg = reduced(get_arch(arch))
+    params = model.init(jax.random.PRNGKey(0), cfg, TEST_POLICY)
+    batch_full = make_batch(cfg, with_mask=False)
+
+    if cfg.frontend == "audio_codes":
+        pre = {"codes": batch_full["codes"][:, :, : S - 1]}
+        step = {"codes": batch_full["codes"][:, :, S - 1 :]}
+        seqlen = S - 1
+    elif cfg.frontend == "vision_prefix":
+        pre = {"tokens": batch_full["tokens"][:, :-1],
+               "patch_embeds": batch_full["patch_embeds"]}
+        step = {"tokens": batch_full["tokens"][:, -1:]}
+        seqlen = S - 1  # P patches + (S - P) text = S total positions
+    else:
+        pre = {"tokens": batch_full["tokens"][:, :-1]}
+        step = {"tokens": batch_full["tokens"][:, -1:]}
+        seqlen = S - 1
+
+    full_logits, _ = model.forward_prefill(params, cfg, TEST_POLICY, batch_full)
+    _, cache = model.forward_prefill(params, cfg, TEST_POLICY, pre)
+
+    def grow_kv(path, x):  # extend ONLY attention k/v caches by one slot
+        name = str(getattr(path[-1], "key", ""))
+        if name in ("k", "v") and x.ndim == 5:
+            return jnp.pad(x, ((0, 0), (0, 0), (0, 1), (0, 0), (0, 0)))
+        return x
+
+    cache = jax.tree_util.tree_map_with_path(grow_kv, cache)
+    step_logits, _ = model.forward_decode(
+        params, cfg, TEST_POLICY, step, cache, jnp.asarray(seqlen, jnp.int32))
+    err = float(jnp.max(jnp.abs(full_logits - step_logits)))
+    # MoE archs differ slightly: capacity-drop patterns depend on group size
+    tol = 5e-2 if cfg.moe is not None else 2e-3
+    assert err < tol, (arch, err)
+
+
+def test_padded_heads_exactness():
+    """A model with TP-padded heads (zero-init + masked) computes EXACTLY the
+    same function: embed the unpadded weights into the padded layout."""
+    base = reduced(get_arch("llama3-8b"))  # heads=4, kv=1 after reduction
+    padded = dataclasses.replace(base, padded_heads=8)
+    pu = model.init(jax.random.PRNGKey(0), base, TEST_POLICY)
+    pp = jax.tree.map(lambda x: x, model.init(jax.random.PRNGKey(0), padded, TEST_POLICY))
+    KV, Dh = base.num_kv_heads, base.resolved_head_dim
+    G, Gp = base.num_heads // KV, 8 // KV
+
+    def embed_q(wu):  # (d, H, Dh) -> (d, Hp, Dh), real heads at g < G per group
+        d = wu.shape[0]
+        w = jnp.zeros((d, 8, Dh), wu.dtype)
+        src = wu.reshape(d, KV, G, Dh)
+        return w.reshape(d, KV, Gp, Dh).at[:, :, :G, :].set(src).reshape(d, 8, Dh)
+
+    def embed_o(wu):  # (H, Dh, d) -> (Hp, Dh, d)
+        d = wu.shape[-1]
+        w = jnp.zeros((8, Dh, d), wu.dtype)
+        src = wu.reshape(KV, G, Dh, d)
+        return w.reshape(KV, Gp, Dh, d).at[:, :G].set(src).reshape(8, Dh, d)
+
+    for g in range(base.num_groups):
+        pass  # params are stacked; operate on the stacked arrays directly
+    mix_u = pu["groups"]["layer0"]["mixer"]
+    mix_p = pp["groups"]["layer0"]["mixer"]
+    mix_p["wq"] = jax.vmap(embed_q)(mix_u["wq"])
+    mix_p["wo"] = jax.vmap(embed_o)(mix_u["wo"])
+    for k in ("wk", "wv"):
+        mix_p[k] = mix_u[k]
+    for top in ("embed", "final_norm", "head"):
+        if top in pu:
+            pp[top] = pu[top]
+    pp["groups"]["layer0"]["ffn"] = pu["groups"]["layer0"]["ffn"]
+    pp["groups"]["layer0"]["norm1"] = pu["groups"]["layer0"]["norm1"]
+    pp["groups"]["layer0"]["norm2"] = pu["groups"]["layer0"]["norm2"]
+
+    batch = make_batch(base)
+    lu, _ = model.forward_train(pu, base, TEST_POLICY, batch)
+    lp, _ = model.forward_train(pp, padded, TEST_POLICY, batch)
+    np.testing.assert_allclose(float(lu), float(lp), rtol=1e-5)
+
+
+def test_chunked_ce_matches_direct():
+    """The memory-saving chunked CE == direct full-logits CE."""
+    from repro.models.model import LOSS_CHUNK, _chunked_ce, _head_logits
+    import repro.models.model as M
+
+    cfg = reduced(get_arch("qwen1.5-0.5b"))
+    params = model.init(jax.random.PRNGKey(0), cfg, TEST_POLICY)
+    batch = make_batch(cfg)
+    old = M.LOSS_CHUNK
+    try:
+        M.LOSS_CHUNK = 5  # force chunking with a ragged tail (S-1=15 -> 3x5)
+        l_chunked, _ = model.forward_train(params, cfg, TEST_POLICY, batch)
+    finally:
+        M.LOSS_CHUNK = old
+    l_direct, _ = model.forward_train(params, cfg, TEST_POLICY, batch)
+    np.testing.assert_allclose(float(l_chunked), float(l_direct), rtol=1e-5)
+
+
+def test_moe_capacity_and_aux():
+    from repro.models import moe as moe_lib
+
+    cfg = reduced(get_arch("mixtral-8x7b"))
+    params = model.init(jax.random.PRNGKey(0), cfg, TEST_POLICY)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    p0 = params["groups"]["layer0"]["ffn"]
+    p0 = jax.tree.map(lambda a: a[0], p0)
+    out, aux = moe_lib.apply(p0, cfg, TEST_POLICY, x)
+    assert out.shape == x.shape
+    assert float(aux) >= 0.0
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_sliding_window_masks_distant_tokens():
+    """Mixtral SWA: a token far outside the window cannot affect the output."""
+    cfg = dataclasses.replace(reduced(get_arch("mixtral-8x7b")), sliding_window=4)
+    params = model.init(jax.random.PRNGKey(0), cfg, TEST_POLICY)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, cfg.vocab_size)
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 7) % cfg.vocab_size)
+    l1, _ = model.forward_prefill(params, cfg, TEST_POLICY, {"tokens": toks})
+    l2, _ = model.forward_prefill(params, cfg, TEST_POLICY, {"tokens": toks2})
+    # last-position logits see only the last 4 tokens per layer; with 2 layers the
+    # receptive field is ~8 < 11, so changing token 0 must not change the output
+    np.testing.assert_allclose(l1, l2, rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_paths_match_direct_softmax():
+    """Multi-chunk rect + triangle-scan flash vs direct masked softmax — covers
+    the fully-masked-tile case (monotone running max) and sliding windows."""
+    from repro.models import attention
+
+    def direct(q, k, v, pos, window):
+        s = jnp.einsum("bqhd,bthd->bhqt", q, k) * (q.shape[-1] ** -0.5)
+        mask = pos[:, None] >= pos[None, :]
+        if window:
+            mask &= pos[:, None] - pos[None, :] < window
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        return jnp.einsum("bhqt,bthd->bqhd", jax.nn.softmax(s, -1), v)
+
+    Bq, Sq, H, Dh = 2, 256, 2, 16
+    q, k, v = (jax.random.normal(jax.random.PRNGKey(i), (Bq, Sq, H, Dh))
+               for i in range(3))
+    pos = jnp.arange(Sq)
+    for window in (0, 50):
+        ref = direct(q, k, v, pos, window)
+        rect = attention._flash_attention(q, k, v, pos, pos, window,
+                                          q_chunk=64, kv_chunk=32)
+        tri = attention._flash_attention_triangle(q, k, v, pos, window, 64)
+        np.testing.assert_allclose(rect, ref, rtol=2e-4, atol=2e-5)
+        np.testing.assert_allclose(tri, ref, rtol=2e-4, atol=2e-5)
+
+
+def test_int8_kv_cache_decode_close_to_fp():
+    """int8 per-(token, head) quantized KV cache: halves the decode memory-roofline
+    term; logits must stay close to the fp cache path."""
+    from repro.models import attention
+
+    cfg = reduced(get_arch("qwen3-4b"))
+    params = model.init(jax.random.PRNGKey(0), cfg, TEST_POLICY)
+    Bq, T = 2, 32
+    cache = model.init_cache(cfg, Bq, T, dtype=jnp.float32)
+    cache = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.PRNGKey(5), x.shape, x.dtype) * 0.3
+        if x.ndim == 5 else x, cache)
+    step = {"tokens": jnp.array([[3], [7]], jnp.int32)}
+    cl = jnp.asarray(T - 1, jnp.int32)
+    ref, _ = model.forward_decode(params, cfg, TEST_POLICY, step, cache, cl)
+    qcache = {}
+    for lname, c in cache.items():
+        kq, ks = jax.vmap(attention._quantize_kv)(c["k"])
+        vq, vs = jax.vmap(attention._quantize_kv)(c["v"])
+        qcache[lname] = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    got, new_cache = model.forward_decode(params, cfg, TEST_POLICY, step, qcache, cl)
+    assert new_cache["layer0"]["k"].dtype == jnp.int8  # stays quantized
+    assert float(jnp.max(jnp.abs(got - ref))) < 2e-2
+
+
+def test_chunked_wkv_matches_scan():
+    """Chunkwise-parallel WKV6 (hillclimb A) == the per-token recurrence."""
+    from repro.models import rwkv6
+
+    cfg = reduced(get_arch("rwkv6-3b"))
+    p = rwkv6.init_tmix(jax.random.PRNGKey(0), cfg, TEST_POLICY)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model)) * 0.5
+    ref = rwkv6.fwd_tmix_full(p, cfg, TEST_POLICY, x)
+    old = rwkv6.WKV_CHUNK
+    try:
+        for C in (8, 16, 32):
+            rwkv6.WKV_CHUNK = C
+            got = rwkv6.fwd_tmix_full(p, cfg, TEST_POLICY, x)
+            np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+    finally:
+        rwkv6.WKV_CHUNK = old

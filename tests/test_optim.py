@@ -1,0 +1,61 @@
+"""AdamW + schedule unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+from repro.optim.schedule import warmup_cosine
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0, grad_clip=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    st = adamw.init(params, cfg)
+
+    @jax.jit
+    def step(p, s):
+        g = jax.grad(lambda q: jnp.sum(q["w"] ** 2))(p)
+        return adamw.update(p, g, s, cfg)
+
+    for _ in range(300):
+        params, st, _ = step(params, st)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_grad_clip_bounds_update():
+    cfg = AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(3)}
+    st = adamw.init(params, cfg)
+    g = {"w": jnp.array([1e6, 0.0, 0.0])}
+    _, _, metrics = adamw.update(params, g, st, cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(1e6)
+
+
+def test_no_decay_for_1d_params():
+    cfg = AdamWConfig(lr=0.1, weight_decay=1.0, grad_clip=0.0)
+    params = {"scale": jnp.ones(4), "w": jnp.ones((4, 4))}
+    st = adamw.init(params, cfg)
+    zero_g = jax.tree.map(jnp.zeros_like, params)
+    p2, _, _ = adamw.update(params, zero_g, st, cfg)
+    np.testing.assert_allclose(p2["scale"], params["scale"])  # no decay
+    assert float(jnp.max(p2["w"])) < 1.0  # decayed
+
+
+def test_bf16_moments_mode_runs():
+    cfg = AdamWConfig(lr=0.05, moments_dtype="bfloat16")
+    params = {"w": jnp.full((8,), 3.0)}
+    st = adamw.init(params, cfg)
+    assert st.mu["w"].dtype == jnp.bfloat16
+    g = jax.grad(lambda q: jnp.sum(q["w"] ** 2))(params)
+    p2, st2, _ = adamw.update(params, g, st, cfg)
+    assert float(jnp.max(p2["w"])) < 3.0
+
+
+def test_schedule_shape():
+    assert float(warmup_cosine(0, warmup=10, total=100)) == 0.0
+    assert float(warmup_cosine(10, warmup=10, total=100)) == pytest.approx(1.0, abs=0.01)
+    assert float(warmup_cosine(100, warmup=10, total=100)) == pytest.approx(0.1, abs=0.01)
+    mid = float(warmup_cosine(55, warmup=10, total=100))
+    assert 0.1 < mid < 1.0
