@@ -7,6 +7,8 @@ Layers:
     repro.configs      -- assigned architecture configs + paper dataset configs
     repro.data         -- synthetic datasets + LM token pipeline
     repro.distributed  -- sharding rules, checkpointing, compression, pipeline
+    repro.stream       -- out-of-core block engine: blockstore, double-buffered
+                          map_reduce, streaming/mini-batch Lloyd, micro-batching
     repro.optim        -- AdamW + schedules
     repro.train        -- train/serve steps, fault-tolerant loop
     repro.launch       -- mesh, dry-run, train/serve CLIs, elastic restart

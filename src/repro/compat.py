@@ -1,0 +1,50 @@
+"""Shims over jax APIs that moved between releases.
+
+The repo targets current jax but must run on the container's pinned version:
+  * ``jax.shard_map``            (new)  vs ``jax.experimental.shard_map`` (old)
+  * ``jax.sharding.AxisType``    (new)  vs meshes without axis_types      (old)
+  * ``pltpu.CompilerParams``     (new)  vs ``pltpu.TPUCompilerParams``    (old)
+
+Everything importing these symbols goes through here so the version probe
+happens exactly once, at import time.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6: promoted to the top-level namespace
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(*args, **kwargs):  # type: ignore[no-redef]
+        if "check_vma" in kwargs:  # old spelling of the replication check
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map_old(*args, **kwargs)
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover
+    AxisType = None
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """jax.make_mesh with Auto axis types where the installed jax supports them."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def axis_size(axis_name):
+    """Size of a mapped mesh axis, inside shard_map/pmap contexts."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)  # old jax: counting psum
+
+
+def tpu_compiler_params(**kwargs):
+    """Build pallas TPU CompilerParams under either name."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

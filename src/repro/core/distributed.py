@@ -21,13 +21,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+
 from repro.core.apnc import (
     APNCCoefficients,
     Discrepancy,
     embed,
     pairwise_discrepancy,
-    sufficient_stats,
 )
+from repro.core.lloyd import assign_stats, centroid_update
 
 Array = jax.Array
 
@@ -58,7 +60,7 @@ def distributed_embed(
             return ops.apnc_embed(x_shard, c)
         return embed(x_shard, c)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         block,
         mesh=mesh,
         in_specs=(P(axes), P(), P()),
@@ -90,23 +92,16 @@ def distributed_lloyd(
 
     def shard_fn(y_shard, c0):
         def body(_, c):
-            if use_pallas:
-                from repro.kernels import ops
-
-                Z, g, _ = ops.apnc_assign(y_shard, c, discrepancy)
-            else:
-                D = pairwise_discrepancy(y_shard, c, discrepancy)
-                labels = jnp.argmin(D, axis=-1)
-                Z, g = sufficient_stats(y_shard, labels, k)
+            Z, g, _ = assign_stats(y_shard, c, k, discrepancy, use_pallas=use_pallas)
             Z = jax.lax.psum(Z, axes)
             g = jax.lax.psum(g, axes)
-            return jnp.where((g > 0)[:, None], Z / jnp.maximum(g, 1.0)[:, None], c)
+            return centroid_update(Z, g, c)
 
         c = jax.lax.fori_loop(0, iters, body, c0)
         D = pairwise_discrepancy(y_shard, c, discrepancy)
         return jnp.argmin(D, axis=-1).astype(jnp.int32), c
 
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(P(axes), P()),

@@ -29,6 +29,31 @@ class LloydResult(NamedTuple):
     iters: Array  # () iterations actually run
 
 
+def centroid_update(Z: Array, g: Array, prev: Array) -> Array:
+    """The reduce step shared by every Lloyd variant (single-program,
+    shard_map, and out-of-core streaming): Y_bar = Z / g, with empty clusters
+    keeping their previous centroid — the behaviour of a MapReduce reducer
+    that receives no values for key c."""
+    return jnp.where((g > 0)[:, None], Z / jnp.maximum(g, 1.0)[:, None], prev)
+
+
+def assign_stats(
+    Y: Array, centroids: Array, k: int, discrepancy: Discrepancy,
+    *, use_pallas: bool = False,
+) -> tuple[Array, Array, Array]:
+    """The map + combine step shared by every Lloyd variant: nearest-centroid
+    labels under e plus the (Z, g) sufficient statistics for one row batch."""
+    if use_pallas:
+        from repro.kernels import ops
+
+        Z, g, labels = ops.apnc_assign(Y, centroids, discrepancy)
+        return Z, g, labels.astype(jnp.int32)
+    D = pairwise_discrepancy(Y, centroids, discrepancy)
+    labels = jnp.argmin(D, axis=-1).astype(jnp.int32)
+    Z, g = sufficient_stats(Y, labels, k)
+    return Z, g, labels
+
+
 def kmeanspp_init(key: Array, Y: Array, k: int, discrepancy: Discrepancy) -> Array:
     """k-means++ seeding in embedding space with D(x)^2 weighting under e."""
     n = Y.shape[0]
@@ -73,13 +98,8 @@ def lloyd(
 
     def body(carry):
         i, centroids, labels, _ = carry
-        D = pairwise_discrepancy(Y, centroids, discrepancy)  # (n, k)
-        new_labels = jnp.argmin(D, axis=-1)
-        Z, g = sufficient_stats(Y, new_labels, k)  # (k, m), (k,)
-        # empty cluster -> keep old centroid (reducer receives no values for c)
-        new_centroids = jnp.where(
-            (g > 0)[:, None], Z / jnp.maximum(g, 1.0)[:, None], centroids
-        )
+        Z, g, new_labels = assign_stats(Y, centroids, k, discrepancy)
+        new_centroids = centroid_update(Z, g, centroids)
         changed = jnp.any(new_labels != labels)
         return i + 1, new_centroids, new_labels, changed
 

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.paper_datasets import PAPER_DATASETS, PaperDataset
 
@@ -54,6 +55,86 @@ def rings(key: Array, n: int, k: int = 3, noise: float = 0.05, gap: float = 2.0)
     X = jnp.stack([radius * jnp.cos(theta), radius * jnp.sin(theta)], axis=1)
     X = X + noise * jax.random.normal(kn2, (n, 2))
     return X.astype(jnp.float32), labels.astype(jnp.int32)
+
+
+def _blocked_pair(make_block, n: int, d: int, block_rows: int):
+    """Wrap a `make_block(i) -> (X_block, y_block)` generator as two BlockStores
+    (features, labels) sharing a tiny per-block cache so requesting X then y of
+    the same block only generates it once."""
+    from repro.stream.blockstore import BlockStore
+
+    cache: dict[int, tuple] = {}
+
+    def cached(i):
+        if i not in cache:
+            if len(cache) > 2:  # keep at most a couple of blocks resident
+                cache.clear()
+            cache[i] = make_block(i)
+        return cache[i]
+
+    X_store = BlockStore.from_generator(
+        lambda i: cached(i)[0], n=n, d=d, block_rows=block_rows
+    )
+    y_store = BlockStore.from_generator(
+        lambda i: cached(i)[1].reshape(-1, 1), n=n, d=1, block_rows=block_rows,
+        dtype=np.int32,
+    )
+    return X_store, y_store
+
+
+def gaussian_blobs_blocks(
+    seed: int, n: int, d: int, k: int, *, block_rows: int,
+    separation: float = 3.0, anisotropy: float = 0.5, warp: bool = False,
+):
+    """Blocked `gaussian_blobs`: same mixture, materialized one (block_rows, d)
+    numpy block at a time — the host-side generator for out-of-core runs.
+    Deterministic per (seed, block); blocks can be re-requested across Lloyd
+    iterations. Returns (X_store, labels_store)."""
+    base = np.random.default_rng(seed)
+    centers = (base.standard_normal((k, d)) * separation).astype(np.float32)
+    scales = (1.0 + anisotropy * base.random((k, d))).astype(np.float32)
+    if warp:
+        if d <= 2048:
+            W = (base.standard_normal((d, d)) / np.sqrt(d)).astype(np.float32)
+            UV = None
+        else:  # low-rank warp, same rationale as gaussian_blobs
+            r = 256
+            UV = (
+                (base.standard_normal((d, r)) / np.sqrt(d)).astype(np.float32),
+                (base.standard_normal((r, d)) / np.sqrt(r)).astype(np.float32),
+            )
+
+    def make_block(i: int):
+        rows = min(block_rows, n - i * block_rows)
+        rng = np.random.default_rng((seed, i))
+        labels = rng.integers(0, k, size=rows, dtype=np.int32)
+        X = centers[labels] + rng.standard_normal((rows, d)).astype(np.float32) * scales[labels]
+        if warp:
+            warped = np.tanh(X * 0.5)
+            X = (warped @ W if UV is None else (warped @ UV[0]) @ UV[1]) + 0.1 * X
+        return X.astype(np.float32), labels
+
+    return _blocked_pair(make_block, n, d, block_rows)
+
+
+def rings_blocks(
+    seed: int, n: int, k: int = 3, *, block_rows: int,
+    noise: float = 0.05, gap: float = 2.0,
+):
+    """Blocked `rings`: concentric 2-D shells, one block at a time.
+    Returns (X_store, labels_store)."""
+
+    def make_block(i: int):
+        rows = min(block_rows, n - i * block_rows)
+        rng = np.random.default_rng((seed, i))
+        labels = rng.integers(0, k, size=rows, dtype=np.int32)
+        radius = 1.0 + gap * labels.astype(np.float32)
+        theta = rng.random(rows).astype(np.float32) * 2 * np.pi
+        X = np.stack([radius * np.cos(theta), radius * np.sin(theta)], axis=1)
+        X = X + noise * rng.standard_normal((rows, 2)).astype(np.float32)
+        return X.astype(np.float32), labels
+
+    return _blocked_pair(make_block, n, 2, block_rows)
 
 
 def paper_standin(name: str, seed: int = 0, n_override: int = 0) -> tuple[Array, Array, PaperDataset]:

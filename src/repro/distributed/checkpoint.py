@@ -146,6 +146,60 @@ def restore(
     return manifest["step"], out
 
 
+def save_clustering_model(ckpt_dir: str | Path, coeffs, centroids, *, step: int = 0) -> Path:
+    """Persist a fitted embed-and-conquer model: the (R, L) coefficient arrays
+    plus final centroids, with the static kernel/discrepancy config in the
+    manifest meta — everything `repro.launch.cluster_serve` needs to assign
+    unseen points online."""
+    import dataclasses
+
+    trees = {
+        "coeffs": {"landmarks": coeffs.landmarks, "R": coeffs.R},
+        "centroids": {"centroids": centroids},
+    }
+    meta = {
+        "clustering": {
+            "kernel": dataclasses.asdict(coeffs.kernel),
+            "discrepancy": coeffs.discrepancy,
+        }
+    }
+    return save(ckpt_dir, step, trees, extra_meta=meta)
+
+
+def load_clustering_model(ckpt_dir: str | Path, *, step: int | None = None):
+    """Inverse of save_clustering_model: returns (APNCCoefficients, centroids)."""
+    from repro.core.apnc import APNCCoefficients
+    from repro.core.kernels_fn import Kernel
+
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    manifest = json.loads((ckpt_dir / f"step_{step:08d}" / "manifest.json").read_text())
+    meta = manifest["meta"]["clustering"]
+
+    def templates(tree_name):
+        spec = manifest["trees"][tree_name]
+        return {
+            k: jax.ShapeDtypeStruct(tuple(v["shape"]), np.dtype(v["dtype"]))
+            for k, v in spec.items()
+        }
+
+    _, out = restore(
+        ckpt_dir,
+        {"coeffs": templates("coeffs"), "centroids": templates("centroids")},
+        step=step,
+    )
+    coeffs = APNCCoefficients(
+        landmarks=out["coeffs"]["landmarks"],
+        R=out["coeffs"]["R"],
+        kernel=Kernel(**meta["kernel"]),
+        discrepancy=meta["discrepancy"],
+    )
+    return coeffs, out["centroids"]["centroids"]
+
+
 class AsyncCheckpointer:
     """Snapshot on the caller thread (device_get), serialize on a worker thread.
     `wait()` before the next save or at loop exit; errors re-raise there."""

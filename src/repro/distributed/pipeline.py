@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 Array = jax.Array
 
 
@@ -77,7 +79,7 @@ def pipelined_apply(
         outs = jnp.where(sid == n_stages - 1, outs, jnp.zeros_like(outs))
         return jax.lax.psum(outs, axis)[None]
 
-    fn = jax.shard_map(
+    fn = shard_map(
         per_stage,
         mesh=mesh,
         in_specs=(P(axis), P(None)),

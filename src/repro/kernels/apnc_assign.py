@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 Array = jax.Array
 
 DEFAULT_BN = 256
@@ -122,7 +124,7 @@ def apnc_assign_padded(
             jax.ShapeDtypeStruct((k, 1), jnp.float32),
             jax.ShapeDtypeStruct((n, 1), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 from repro.core.kernels_fn import Kernel
 
 Array = jax.Array
@@ -120,7 +122,7 @@ def apnc_embed_block(
             pltpu.VMEM((bn, 1), jnp.float32),
             pltpu.VMEM((1, bl), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,

@@ -106,6 +106,30 @@ def apnc_assign(
     return _assign_padded(Y, C, discrepancy, bn_eff, interpret)
 
 
+@partial(jax.jit, static_argnames=("use_pallas",))
+def apnc_embed_block_map(x: Array, coeffs: APNCCoefficients, *, use_pallas: bool = False) -> Array:
+    """Block-shaped embedding entry for the stream engine: one jit'd dispatch
+    per (block_rows, d) block, routed through the Pallas kernel on demand."""
+    from repro.core.kkmeans import apnc_embed as _dispatch  # single routing point
+
+    return _dispatch(x, coeffs, use_pallas)
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def apnc_embed_assign_block(
+    x: Array, coeffs: APNCCoefficients, centroids: Array, *, use_pallas: bool = False
+) -> tuple[Array, Array, Array]:
+    """Fused block map for streaming Lloyd and the assignment service: embed a
+    raw (block_rows, d) block and reduce it to (Z, g, labels) against the
+    current centroids — one device dispatch, nothing but the block resident."""
+    from repro.core.lloyd import assign_stats
+
+    y = apnc_embed_block_map(x, coeffs, use_pallas=use_pallas)
+    return assign_stats(
+        y, centroids, centroids.shape[0], coeffs.discrepancy, use_pallas=use_pallas
+    )
+
+
 def flash_attention(
     q: Array,
     k: Array,

@@ -1,0 +1,155 @@
+"""Online assignment service: the clustering analogue of launch/serve.py.
+
+    PYTHONPATH=src python -m repro.launch.cluster_serve --requests 10000 \
+        --micro-batch 256
+
+Loads a fitted (coefficients, centroids) clustering model — training one on
+blocked synthetic data first if no --ckpt is given, then round-tripping it
+through `distributed/checkpoint.py` so the served model always comes off disk
+(the train->serve loop) — and serves `predict` over a replayed request stream
+with micro-batching: up to B requests (or a deadline) are collected and
+assigned in ONE fused embed+assign dispatch. Reports p50/p99 per-request
+latency and throughput, then verifies every served label against
+`core.kkmeans.predict` on the replayed log.
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernels_fn import Kernel
+from repro.core.kkmeans import APNCConfig, predict
+from repro.distributed.checkpoint import load_clustering_model, save_clustering_model
+from repro.kernels import ops
+from repro.stream.microbatch import MicroBatcher
+
+
+def _fit_and_save(args, ckpt_dir: str) -> None:
+    """Train a clustering model on a blocked synthetic stream and persist it."""
+    from repro.data.synthetic import gaussian_blobs_blocks
+    from repro.stream.lloyd import stream_fit_predict
+
+    X_store, _ = gaussian_blobs_blocks(
+        args.seed, args.n_fit, args.d, args.k,
+        block_rows=args.block_rows, separation=4.0,
+    )
+    kern = Kernel("rbf", gamma=1.0 / args.d)
+    cfg = APNCConfig(method=args.method, l=args.l, m=args.m,
+                     iters=args.iters, use_pallas=args.use_pallas)
+    res, coeffs = stream_fit_predict(
+        jax.random.PRNGKey(args.seed + 1), X_store, kern, args.k, cfg, mode="exact",
+    )
+    print(f"[cluster-serve] fit: n={args.n_fit} blocks of {args.block_rows}, "
+          f"{res.iters} Lloyd iters, inertia {res.inertia:.1f}")
+    save_clustering_model(ckpt_dir, coeffs, res.centroids)
+
+
+def make_process_fn(coeffs, centroids, *, max_batch: int, use_pallas: bool):
+    """One fused embed+assign dispatch per micro-batch. Batches are padded to
+    max_batch so the service compiles exactly one program (stable latency)."""
+    centroids = jnp.asarray(centroids)
+
+    def process(X: np.ndarray) -> np.ndarray:
+        b = X.shape[0]
+        if b < max_batch:
+            X = np.pad(X, ((0, max_batch - b), (0, 0)))
+        _, _, labels = ops.apnc_embed_assign_block(
+            jnp.asarray(X), coeffs, centroids, use_pallas=use_pallas
+        )
+        return np.asarray(labels)[:b]
+
+    return process
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=10000)
+    ap.add_argument("--micro-batch", type=int, default=256)
+    ap.add_argument("--max-delay-ms", type=float, default=2.0)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="open-loop arrival rate (req/s); 0 = closed-loop replay")
+    ap.add_argument("--ckpt", default="", help="load model from here instead of fitting")
+    ap.add_argument("--n-fit", type=int, default=20000)
+    ap.add_argument("--block-rows", type=int, default=4096)
+    ap.add_argument("--d", type=int, default=16)
+    ap.add_argument("--k", type=int, default=5)
+    ap.add_argument("--method", default="nystrom")
+    ap.add_argument("--l", type=int, default=128)
+    ap.add_argument("--m", type=int, default=128)
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--use-pallas", action="store_true")
+    args = ap.parse_args(argv)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        ckpt_dir = args.ckpt or tmp
+        if not args.ckpt:
+            _fit_and_save(args, ckpt_dir)
+        coeffs, centroids = load_clustering_model(ckpt_dir)
+
+    # Request log: held-out rows from the fit distribution.
+    from repro.data.synthetic import gaussian_blobs_blocks
+
+    req_store, _ = gaussian_blobs_blocks(
+        args.seed + 7919, args.requests, coeffs.landmarks.shape[-1], args.k,
+        block_rows=max(args.requests, 1), separation=4.0,
+    )
+    X_req = req_store.get(0)
+
+    process = make_process_fn(
+        coeffs, centroids, max_batch=args.micro_batch, use_pallas=args.use_pallas
+    )
+    process(X_req[: args.micro_batch])  # warm the compile outside the timed loop
+
+    batcher = MicroBatcher(
+        process, max_batch=args.micro_batch, max_delay_s=args.max_delay_ms / 1e3
+    )
+    interarrival = 1.0 / args.rate if args.rate > 0 else 0.0
+    t0 = time.monotonic()
+    next_arrival = t0
+    for i in range(args.requests):
+        if interarrival:
+            next_arrival += interarrival
+            while True:  # honor pending deadlines while waiting for the arrival
+                now = time.monotonic()
+                deadline = batcher.next_deadline
+                target = next_arrival if deadline is None else min(next_arrival, deadline)
+                if target > now:
+                    time.sleep(target - now)
+                batcher.poll()
+                if time.monotonic() >= next_arrival:
+                    break
+        batcher.submit(i, X_req[i])
+    batcher.drain()
+    wall = time.monotonic() - t0
+
+    lat_ms = np.asarray([lat for _, _, lat in batcher.completed]) * 1e3
+    served = np.asarray([lab for _, lab, _ in batcher.completed], dtype=np.int32)
+    order = [rid for rid, _, _ in batcher.completed]
+    assert order == list(range(args.requests)), "micro-batcher reordered requests"
+
+    # Replay the request log through the reference path.
+    ref = np.asarray(predict(jnp.asarray(X_req), coeffs, centroids,
+                             use_pallas=args.use_pallas))
+    mismatches = int(np.sum(served != ref))
+    p50, p99 = np.percentile(lat_ms, 50), np.percentile(lat_ms, 99)
+    print(f"[cluster-serve] {args.requests} requests, micro-batch {args.micro_batch} "
+          f"(mean actual {np.mean(batcher.batch_sizes):.1f}), "
+          f"{args.requests / wall:.0f} req/s")
+    print(f"[cluster-serve] latency p50 {p50:.2f}ms p99 {p99:.2f}ms")
+    print(f"[cluster-serve] replay check vs core.kkmeans.predict: "
+          f"{args.requests - mismatches}/{args.requests} exact"
+          + (" [OK]" if mismatches == 0 else " [MISMATCH]"))
+    if mismatches:
+        raise SystemExit(1)
+    return {"p50_ms": float(p50), "p99_ms": float(p99),
+            "req_per_s": args.requests / wall, "mismatches": mismatches}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""repro.stream — out-of-core block engine for embed-and-conquer.
+
+The paper's premise is that data lives in HDFS blocks that never co-reside on
+one worker; this package is the single-host analogue: host-resident row blocks
+(`blockstore`), a MapReduce-style executor with double-buffered host->device
+transfer (`engine`), streaming Lloyd drivers (`lloyd`), reservoir sampling for
+landmark/seed selection over streams (`reservoir`), and the request
+micro-batcher used by the online assignment service (`microbatch`).
+"""
+from repro.stream.blockstore import BlockStore
+from repro.stream.engine import map_reduce
+from repro.stream.lloyd import (
+    StreamLloydResult,
+    minibatch_lloyd,
+    ooc_lloyd,
+    stream_embed,
+    stream_fit_predict,
+)
+from repro.stream.microbatch import MicroBatcher
+from repro.stream.reservoir import reservoir_sample
+
+__all__ = [
+    "BlockStore",
+    "map_reduce",
+    "MicroBatcher",
+    "StreamLloydResult",
+    "minibatch_lloyd",
+    "ooc_lloyd",
+    "reservoir_sample",
+    "stream_embed",
+    "stream_fit_predict",
+]

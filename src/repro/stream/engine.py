@@ -1,0 +1,103 @@
+"""MapReduce-style block executor with double-buffered host->device transfer.
+
+`map_reduce(store, map_fn, combine_fn, init)` is the generic program shape of
+the whole paper: an embarrassingly-parallel map over row blocks and a small
+associative combine. Embedding (Algorithm 1) and assignment (Algorithm 2's map
++ in-mapper combiner) are its two map_fns.
+
+Pipelining: a background producer thread pulls block i+1 from the store (this
+is where the real host cost lives — synthetic generation, memmap page-in) and
+`jax.device_put`s it while the device is busy with block i. jax dispatch is
+async, so the main thread only blocks when the bounded prefetch queue is empty
+— i.e. when the producer, not the device, is the bottleneck. `prefetch=0`
+degrades to the fully synchronous one-block-at-a-time baseline (get, transfer,
+compute, block_until_ready), which `benchmarks/stream_bench.py` uses as the
+overlap reference.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable
+
+import jax
+
+from repro.stream.blockstore import BlockStore
+
+_STOP = object()
+
+
+def _producer(store: BlockStore, q: "queue.Queue", stop: threading.Event):
+    try:
+        for i in range(store.num_blocks):
+            if stop.is_set():
+                return
+            blk = store.get(i)  # host-side cost: generation / disk read
+            dev = jax.device_put(blk)  # starts the H2D copy immediately
+            q.put((i, dev, None))
+        q.put(_STOP)
+    except BaseException as e:  # noqa: BLE001 - re-raised on the consumer side
+        q.put((None, None, e))
+
+
+def map_reduce(
+    store: BlockStore,
+    map_fn: Callable[[Any], Any],
+    combine_fn: Callable[[Any, Any], Any],
+    init: Any,
+    *,
+    prefetch: int = 2,
+    emit: Callable[[int, Any], None] | None = None,
+) -> Any:
+    """Fold `combine_fn(acc, map_fn(block))` over every block of `store`.
+
+    map_fn runs on device (jit it for anything hot); combine_fn must be
+    associative-enough that per-block accumulation matches the monolithic
+    computation (sums, counts, min/max — the paper's (Z, g) case).
+
+    emit(i, out), when given, receives each block's map output *before* the
+    combine — used to spill per-block results (labels, embeddings) back to a
+    host store. The emit callback runs on the consumer thread in block order.
+
+    prefetch: depth of the producer queue. 0 = synchronous baseline: every
+    block is fetched, transferred, computed and *waited on* before the next
+    block is touched.
+    """
+    if prefetch <= 0:
+        acc = init
+        for i in range(store.num_blocks):
+            dev = jax.device_put(store.get(i))
+            out = map_fn(dev)
+            if emit is not None:
+                emit(i, out)
+            acc = combine_fn(acc, out)
+            jax.block_until_ready(acc)
+        return acc
+
+    q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+    stop = threading.Event()
+    t = threading.Thread(target=_producer, args=(store, q, stop), daemon=True)
+    t.start()
+    acc = init
+    try:
+        while True:
+            item = q.get()
+            if item is _STOP:
+                break
+            i, dev, err = item
+            if err is not None:
+                raise err
+            out = map_fn(dev)
+            if emit is not None:
+                emit(i, out)
+            acc = combine_fn(acc, out)
+    finally:
+        stop.set()
+        # drain so a blocked producer can observe the stop flag and exit
+        while True:
+            try:
+                q.get_nowait()
+            except queue.Empty:
+                break
+        t.join()
+    return acc

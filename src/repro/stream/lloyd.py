@@ -1,0 +1,301 @@
+"""Streaming Lloyd drivers on top of the block engine.
+
+Two regimes, both memory-O(block) on device and both sharing the exact
+reduce step of `core.lloyd` (`centroid_update`):
+
+  * `ooc_lloyd`  — exact out-of-core Lloyd: per iteration, stream every block,
+    accumulate the global (Z, g), update centroids once. Same fixed point as
+    the in-memory `core.lloyd.lloyd` given the same init: the only difference
+    is the summation grouping of Z.
+  * `minibatch_lloyd` — single-pass streaming Lloyd with decayed sufficient
+    statistics Z <- gamma Z + Z_b (Chitta et al., approximate kernel k-means):
+    clustering cost decouples from n, for larger-than-disk / continuous-ingest
+    streams where "iterate until convergence" is not an option.
+
+Blocks may hold raw inputs X (pass `coeffs=`: each block is embedded on the
+fly, fused with assignment — the honest out-of-core path where not even the
+embedding Y is ever materialized) or precomputed embeddings Y (pass
+`discrepancy=`; see `stream_embed` for staging Y blocks to host RAM once when
+host memory allows — it saves re-embedding every iteration).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.apnc import APNCCoefficients, Discrepancy
+from repro.core.lloyd import centroid_update, kmeanspp_init
+from repro.kernels import ops
+from repro.stream.blockstore import BlockStore, WritableBlockStore
+from repro.stream.engine import map_reduce
+from repro.stream.reservoir import reservoir_sample
+
+Array = jax.Array
+
+
+class StreamLloydResult(NamedTuple):
+    labels: np.ndarray  # (n,) int32, host-resident
+    centroids: Array  # (k, m)
+    inertia: float  # sum of e(y_i, c_{pi(i)})
+    iters: int  # iterations actually run
+    rows_seen: int  # total rows streamed (epochs * n for exact)
+
+
+def _block_map(coeffs, discrepancy, centroids_cell, use_pallas):
+    """jit'd (Z, g, labels) map for one block; embeds first when coeffs given.
+    `centroids_cell` is a 1-element list so minibatch can swap centroids
+    between blocks without retracing."""
+    if coeffs is not None:
+        def fn(x):
+            return ops.apnc_embed_assign_block(
+                x, coeffs, centroids_cell[0], use_pallas=use_pallas
+            )
+        return fn
+
+    from repro.core.lloyd import assign_stats
+
+    @jax.jit
+    def assign(y, c):
+        return assign_stats(y, c, c.shape[0], discrepancy, use_pallas=use_pallas)
+
+    return lambda y: assign(y, centroids_cell[0])
+
+
+def stream_embed(
+    store: BlockStore,
+    coeffs: APNCCoefficients,
+    *,
+    use_pallas: bool = False,
+    prefetch: int = 2,
+) -> WritableBlockStore:
+    """Algorithm 1 over a block stream: X blocks in, Y blocks staged to host
+    RAM (O(n*m) host, still O(block) device). Use when host memory fits Y and
+    several Lloyd iterations will reuse it."""
+    out = BlockStore.empty(n=store.n, d=coeffs.m, block_rows=store.block_rows)
+
+    def emit(i, y):
+        # put by GLOBAL block id: a shard's local block i may be global block
+        # i * num_shards + shard_index
+        out.put(store.block_id(i), np.asarray(y))
+
+    map_reduce(
+        store,
+        lambda x: ops.apnc_embed_block_map(x, coeffs, use_pallas=use_pallas),
+        lambda acc, _: acc,
+        None,
+        prefetch=prefetch,
+        emit=emit,
+    )
+    return out
+
+
+def _resolve_init(store, coeffs, discrepancy, k, init, key, seed_sample, use_pallas):
+    if init is not None:
+        return jnp.asarray(init)
+    if key is None:
+        raise ValueError("provide key= for k-means++ init or init= centroids")
+    sample = jnp.asarray(reservoir_sample(store, seed_sample, seed=int(key[-1])))
+    if coeffs is not None:  # raw X rows -> embed the reservoir before seeding
+        sample = ops.apnc_embed_block_map(sample, coeffs, use_pallas=use_pallas)
+    return kmeanspp_init(key, sample, k, discrepancy)
+
+
+def ooc_lloyd(
+    store: BlockStore,
+    k: int,
+    *,
+    coeffs: APNCCoefficients | None = None,
+    discrepancy: Discrepancy | None = None,
+    iters: int = 20,
+    key: Array | None = None,
+    init: Array | None = None,
+    seed_sample: int = 1024,
+    use_pallas: bool = False,
+    prefetch: int = 2,
+) -> StreamLloydResult:
+    """Exact out-of-core Lloyd: identical update rule to `core.lloyd.lloyd`,
+    memory O(block). Stops early when no label changes (same criterion as the
+    in-memory loop). Labels live in a host int32 array (4n bytes)."""
+    if (coeffs is None) == (discrepancy is None):
+        raise ValueError("pass exactly one of coeffs= (raw X blocks) or discrepancy= (Y blocks)")
+    disc = coeffs.discrepancy if coeffs is not None else discrepancy
+    centroids_cell = [
+        _resolve_init(store, coeffs, disc, k, init, key, seed_sample, use_pallas)
+    ]
+    m = int(centroids_cell[0].shape[1])
+    map_fn = _block_map(coeffs, disc, centroids_cell, use_pallas)
+
+    labels_host = np.full(store.n, -1, dtype=np.int32)
+    changed_cell = [True]
+
+    def emit(i, out):
+        lo = store.row_offset(i)
+        new = np.asarray(out[2], dtype=np.int32)
+        sl = labels_host[lo:lo + new.shape[0]]
+        if not changed_cell[0] and not np.array_equal(new, sl):
+            changed_cell[0] = True
+        labels_host[lo:lo + new.shape[0]] = new
+
+    zero = (jnp.zeros((k, m), jnp.float32), jnp.zeros((k,), jnp.float32))
+    it = 0
+    while it < iters and changed_cell[0]:
+        changed_cell[0] = False
+        Z, g = map_reduce(
+            store, map_fn,
+            lambda acc, out: (acc[0] + out[0], acc[1] + out[1]),
+            zero, prefetch=prefetch, emit=emit,
+        )
+        centroids_cell[0] = centroid_update(Z, g, centroids_cell[0])
+        it += 1
+
+    # Final pass under the final centroids: labels + inertia (matches the
+    # post-loop assignment of core.lloyd at any fixed point).
+    inertia = _final_assign(
+        store, map_fn, coeffs, disc, centroids_cell, labels_host, prefetch, use_pallas
+    )
+    return StreamLloydResult(labels_host, centroids_cell[0], inertia, it, (it + 1) * store.n)
+
+
+def _final_assign(store, map_fn, coeffs, disc, centroids_cell, labels_host, prefetch, use_pallas=False):
+    from repro.core.apnc import pairwise_discrepancy
+
+    @jax.jit
+    def min_dist(y, c):
+        return jnp.sum(jnp.min(pairwise_discrepancy(y, c, disc), axis=-1))
+
+    def emit(i, out):
+        lo = store.row_offset(i)
+        labels_host[lo:lo + out[2].shape[0]] = np.asarray(out[2], dtype=np.int32)
+
+    if coeffs is not None:
+        from repro.core.lloyd import assign_stats
+
+        @jax.jit
+        def assign_with_inertia(x, c):  # embed ONCE, reuse y for stats + inertia
+            y = ops.apnc_embed_block_map(x, coeffs, use_pallas=use_pallas)
+            Z, g, labels = assign_stats(y, c, c.shape[0], disc, use_pallas=use_pallas)
+            return Z, g, labels, min_dist(y, c)
+
+        def map_with_inertia(x):
+            return assign_with_inertia(x, centroids_cell[0])
+    else:
+        from repro.core.lloyd import assign_stats
+
+        @jax.jit
+        def assign_with_inertia_y(y, c):  # one dispatch: XLA CSEs the shared D
+            Z, g, labels = assign_stats(y, c, c.shape[0], disc, use_pallas=use_pallas)
+            return Z, g, labels, min_dist(y, c)
+
+        def map_with_inertia(y):
+            return assign_with_inertia_y(y, centroids_cell[0])
+
+    inertia = map_reduce(
+        store, map_with_inertia, lambda acc, out: acc + out[3], jnp.asarray(0.0),
+        prefetch=prefetch, emit=emit,
+    )
+    return float(inertia)
+
+
+def minibatch_lloyd(
+    store: BlockStore,
+    k: int,
+    *,
+    coeffs: APNCCoefficients | None = None,
+    discrepancy: Discrepancy | None = None,
+    decay: float = 0.9,
+    epochs: int = 1,
+    key: Array | None = None,
+    init: Array | None = None,
+    seed_sample: int = 1024,
+    use_pallas: bool = False,
+    prefetch: int = 2,
+) -> StreamLloydResult:
+    """Single-pass (per epoch) streaming Lloyd with decayed sufficient stats:
+
+        Z <- decay * Z + Z_b,   g <- decay * g + g_b,   c = Z / g
+
+    Centroids move after *every* block, so one pass over the stream already
+    clusters; decay < 1 forgets stale assignments (and, on continuous-ingest
+    streams, drifting distributions). decay=1, epochs=iters recovers something
+    close to exact Lloyd but with block-staleness in the assignments."""
+    if (coeffs is None) == (discrepancy is None):
+        raise ValueError("pass exactly one of coeffs= (raw X blocks) or discrepancy= (Y blocks)")
+    disc = coeffs.discrepancy if coeffs is not None else discrepancy
+    centroids_cell = [
+        _resolve_init(store, coeffs, disc, k, init, key, seed_sample, use_pallas)
+    ]
+    m = int(centroids_cell[0].shape[1])
+    map_fn = _block_map(coeffs, disc, centroids_cell, use_pallas)
+
+    labels_host = np.full(store.n, -1, dtype=np.int32)
+
+    @jax.jit
+    def fold(Z, g, out, c):
+        Zn = decay * Z + out[0]
+        gn = decay * g + out[1]
+        return Zn, gn, centroid_update(Zn, gn, c)
+
+    state = [jnp.zeros((k, m), jnp.float32), jnp.zeros((k,), jnp.float32)]
+
+    def emit(i, out):
+        lo = store.row_offset(i)
+        labels_host[lo:lo + out[2].shape[0]] = np.asarray(out[2], dtype=np.int32)
+
+    def combine(acc, out):
+        state[0], state[1], centroids_cell[0] = fold(
+            state[0], state[1], out, centroids_cell[0]
+        )
+        return acc
+
+    for _ in range(epochs):
+        map_reduce(store, map_fn, combine, None, prefetch=prefetch, emit=emit)
+
+    inertia = _final_assign(
+        store, map_fn, coeffs, disc, centroids_cell, labels_host, prefetch, use_pallas
+    )
+    return StreamLloydResult(  # +1 pass: _final_assign streams everything again
+        labels_host, centroids_cell[0], inertia, epochs, (epochs + 1) * store.n
+    )
+
+
+def stream_fit_predict(
+    key: Array,
+    store: BlockStore,
+    kernel,
+    k: int,
+    cfg=None,
+    *,
+    mode: str = "exact",
+    landmark_sample: int = 4096,
+    decay: float = 0.9,
+    epochs: int = 1,
+    prefetch: int = 2,
+):
+    """End-to-end embed-and-conquer over a block stream:
+
+    1. reservoir-sample rows for landmark selection (one pass),
+    2. fit (R, L) on the sample — tiny and resident, as in the paper (P4.3),
+    3. cluster the stream: exact out-of-core Lloyd or single-pass mini-batch,
+       embedding fused into the per-block map (Y never materializes).
+
+    Returns (StreamLloydResult, APNCCoefficients).
+    """
+    from repro.core.kkmeans import APNCConfig, fit_coefficients
+
+    cfg = cfg or APNCConfig()
+    k_fit, k_cluster = jax.random.split(key)
+    sample = jnp.asarray(reservoir_sample(store, landmark_sample, seed=int(k_fit[-1])))
+    coeffs = fit_coefficients(k_fit, sample, kernel, cfg)
+    common = dict(
+        coeffs=coeffs, key=k_cluster, use_pallas=cfg.use_pallas, prefetch=prefetch,
+    )
+    if mode == "exact":
+        res = ooc_lloyd(store, k, iters=cfg.iters, **common)
+    elif mode == "minibatch":
+        res = minibatch_lloyd(store, k, decay=decay, epochs=epochs, **common)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    return res, coeffs

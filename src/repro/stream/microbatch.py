@@ -1,0 +1,95 @@
+"""Request micro-batching for the online assignment service.
+
+Single-row dispatches waste the device (one (1, d) embed per request); the
+micro-batcher collects up to `max_batch` requests or waits at most
+`max_delay_s` past the oldest pending request, then runs ONE fused
+embed+assign dispatch for the whole batch. Responses are delivered in
+submission order regardless of batching boundaries — the property
+tests/test_stream.py pins down.
+
+The batcher is clock-injectable so replay harnesses (and tests) can drive it
+with simulated time.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+
+@dataclass
+class _Pending:
+    request_id: Any
+    x: np.ndarray
+    t_submit: float
+    t_done: float = field(default=0.0)
+    label: int = field(default=-1)
+
+
+class MicroBatcher:
+    """Collects rows, flushes them through `process_fn` as one batch.
+
+    process_fn: (B, d) float32 -> (B,) int labels (one device dispatch).
+    Completed responses accumulate in `.completed` as
+    (request_id, label, latency_seconds) tuples, in submission order.
+    """
+
+    def __init__(
+        self,
+        process_fn: Callable[[np.ndarray], np.ndarray],
+        *,
+        max_batch: int = 256,
+        max_delay_s: float = 0.002,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        if max_batch <= 0:
+            raise ValueError("max_batch must be positive")
+        self.process_fn = process_fn
+        self.max_batch = max_batch
+        self.max_delay_s = max_delay_s
+        self.clock = clock
+        self._queue: list[_Pending] = []
+        self.completed: list[tuple[Any, int, float]] = []
+        self.batch_sizes: list[int] = []
+
+    def submit(self, request_id: Any, x) -> None:
+        """Enqueue one request; flushes immediately when the batch fills."""
+        self._queue.append(_Pending(request_id, np.asarray(x), self.clock()))
+        if len(self._queue) >= self.max_batch:
+            self.flush()
+
+    @property
+    def next_deadline(self) -> float | None:
+        """Absolute time the oldest pending request must flush by (None when
+        nothing is pending) — open-loop drivers sleep until min(next arrival,
+        this) so sparse traffic still honors max_delay_s."""
+        if not self._queue:
+            return None
+        return self._queue[0].t_submit + self.max_delay_s
+
+    def poll(self) -> None:
+        """Deadline check: flush a partial batch whose oldest request has
+        waited longer than max_delay_s."""
+        if self._queue and self.clock() - self._queue[0].t_submit >= self.max_delay_s:
+            self.flush()
+
+    def flush(self) -> None:
+        """Run one fused dispatch over everything pending (in order)."""
+        if not self._queue:
+            return
+        batch, self._queue = self._queue[: self.max_batch], self._queue[self.max_batch:]
+        X = np.stack([p.x for p in batch]).astype(np.float32)
+        labels = np.asarray(self.process_fn(X)).astype(np.int32)
+        now = self.clock()
+        for p, lab in zip(batch, labels):
+            self.completed.append((p.request_id, int(lab), now - p.t_submit))
+        self.batch_sizes.append(len(batch))
+        if len(self._queue) >= self.max_batch:  # spillover from a burst
+            self.flush()
+
+    def drain(self) -> None:
+        """Flush until nothing is pending (end of request stream)."""
+        while self._queue:
+            self.flush()

@@ -1,0 +1,36 @@
+"""Reservoir sampling over a block stream (Vitter's Algorithm R, block form).
+
+Landmark selection (Algorithm 3/4's map phase) and k-means++ seeding both need
+a uniform row sample, but the stream's n may be unknown up front and the data
+never co-resides. A reservoir gives an exactly-uniform `size`-row sample in one
+pass with O(size * d) memory, independent of n.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.stream.blockstore import BlockStore
+
+
+def reservoir_sample(store: BlockStore, size: int, *, seed: int = 0) -> np.ndarray:
+    """One pass over `store`; returns (min(size, n), d) rows, uniformly without
+    replacement over all rows seen. Deterministic given seed."""
+    rng = np.random.default_rng(seed)
+    reservoir = np.zeros((min(size, store.n), store.d), dtype=store.dtype)
+    seen = 0
+    for b in range(store.num_blocks):
+        blk = store.get(b)
+        rows = blk.shape[0]
+        take = min(max(size - seen, 0), rows)
+        if take:  # fill phase: first `size` rows go straight in
+            reservoir[seen:seen + take] = blk[:take]
+        # replace phase: row t (0-based global) enters with prob size/(t+1)
+        t = np.arange(seen + take, seen + rows)
+        accept = rng.random(rows - take) < size / (t + 1)
+        idx = np.nonzero(accept)[0]
+        if idx.size:
+            slots = rng.integers(0, size, size=idx.size)
+            # later rows must overwrite earlier ones landing in the same slot
+            reservoir[slots] = blk[take + idx]
+        seen += rows
+    return reservoir

@@ -19,6 +19,8 @@ from pathlib import Path
 
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-minute subprocess suite; run via -m ""
+
 HERE = Path(__file__).resolve().parent
 
 
@@ -30,7 +32,20 @@ def report():
         [sys.executable, str(HERE / "distributed_checks.py")],
         capture_output=True, text=True, timeout=1200, env=env,
     )
-    assert proc.returncode == 0, proc.stderr[-4000:]
+    if proc.returncode != 0 or not proc.stdout.strip():
+        # surface the child's actual failure, not just a JSON decode error
+        print("--- distributed_checks.py stdout ---")
+        print(proc.stdout[-4000:])
+        print("--- distributed_checks.py stderr ---")
+        print(proc.stderr[-4000:])
+    assert proc.returncode == 0, (
+        f"distributed_checks.py exited {proc.returncode}; "
+        f"stderr tail:\n{proc.stderr[-4000:]}"
+    )
+    assert proc.stdout.strip(), (
+        f"distributed_checks.py exited 0 but printed no JSON report; "
+        f"stderr tail:\n{proc.stderr[-4000:]}"
+    )
     line = proc.stdout.strip().splitlines()[-1]
     return json.loads(line)
 

@@ -1,5 +1,8 @@
 """NMI / metrics properties (hypothesis)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep: see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core.metrics import contingency, nmi, purity

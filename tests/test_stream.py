@@ -1,0 +1,269 @@
+"""Tests for the out-of-core stream subsystem (repro.stream + cluster_serve).
+
+The load-bearing claims:
+  * blockstore round-trips rows exactly (array / generator / memmap backings);
+  * exact out-of-core Lloyd reaches the same fixed point as the in-memory
+    core.lloyd.lloyd given the same init (identical labels, centroids equal to
+    summation-order tolerance);
+  * mini-batch Lloyd clusters rings to NMI within 0.05 of exact;
+  * the micro-batcher preserves request order and matches core.kkmeans.predict;
+  * the clustering checkpoint round-trips (coeffs, centroids).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.apnc import embed
+from repro.core.kernels_fn import Kernel
+from repro.core.kkmeans import APNCConfig, fit_coefficients, predict
+from repro.core.lloyd import kmeanspp_init, lloyd
+from repro.core.metrics import nmi
+from repro.data.synthetic import gaussian_blobs_blocks, rings, rings_blocks
+from repro.stream import (
+    BlockStore,
+    MicroBatcher,
+    map_reduce,
+    minibatch_lloyd,
+    ooc_lloyd,
+    reservoir_sample,
+    stream_embed,
+    stream_fit_predict,
+)
+
+
+# ---------------------------------------------------------------- blockstore
+
+
+def test_blockstore_roundtrip_array_and_generator():
+    Xs, ys = gaussian_blobs_blocks(0, 1000, 8, 3, block_rows=128)
+    assert Xs.num_blocks == 8 and Xs.rows_of(7) == 1000 - 7 * 128
+    M = Xs.materialize()
+    assert M.shape == (1000, 8)
+    assert np.array_equal(M, Xs.materialize()), "generator blocks must be deterministic"
+    arr = BlockStore.from_array(M, 128)
+    for i in range(arr.num_blocks):
+        assert np.array_equal(arr.get(i), Xs.get(i))
+    assert ys.materialize().shape == (1000, 1)
+
+
+def test_blockstore_memmap_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((300, 6)).astype(np.float32)
+    path = tmp_path / "x.bin"
+    path.write_bytes(np.ascontiguousarray(X).tobytes())
+    store = BlockStore.from_memmap(path, d=6, block_rows=64)
+    assert store.n == 300 and store.num_blocks == 5
+    assert np.array_equal(store.materialize(), X)
+
+
+def test_blockstore_shard_round_robin():
+    Xs, _ = gaussian_blobs_blocks(1, 512, 4, 2, block_rows=64)
+    shards = [Xs.shard(i, 3) for i in range(3)]
+    assert sum(s.num_blocks for s in shards) == Xs.num_blocks
+    # shard 1 of 3 holds global blocks 1, 4, 7 (round-robin)
+    assert np.array_equal(shards[1].get(0), Xs.get(1))
+    assert np.array_equal(shards[1].get(1), Xs.get(4))
+    rows = sum(s.rows_of(i) for s in shards for i in range(s.num_blocks))
+    assert rows == Xs.n
+
+
+def test_writable_store_guards_unwritten_reads():
+    out = BlockStore.empty(n=100, d=4, block_rows=32)
+    with pytest.raises(ValueError, match="before it was written"):
+        out.get(1)
+    out.put(1, np.ones((32, 4), np.float32))
+    assert np.array_equal(out.get(1), np.ones((32, 4)))
+
+
+# ------------------------------------------------------------------- engine
+
+
+def test_map_reduce_matches_sync_and_preserves_block_order():
+    Xs, _ = gaussian_blobs_blocks(2, 700, 5, 3, block_rows=128)
+    fn = jax.jit(lambda x: jnp.sum(x, axis=0))
+    ref = np.asarray(Xs.materialize().sum(axis=0))
+    seen = []
+    for prefetch in (0, 2):
+        got = map_reduce(
+            Xs, fn, lambda a, b: a + b, jnp.zeros(5),
+            prefetch=prefetch, emit=lambda i, _: seen.append(i),
+        )
+        np.testing.assert_allclose(np.asarray(got), ref, rtol=1e-5)
+    assert seen == list(range(Xs.num_blocks)) * 2, "emit must run in block order"
+
+
+def test_map_reduce_propagates_producer_errors():
+    store = BlockStore.from_generator(
+        lambda i: (_ for _ in ()).throw(RuntimeError("boom")),
+        n=100, d=2, block_rows=50,
+    )
+    with pytest.raises(RuntimeError, match="boom"):
+        map_reduce(store, lambda x: x, lambda a, b: b, None, prefetch=2)
+
+
+# ---------------------------------------------------------------- reservoir
+
+
+def test_reservoir_sample_uniform_and_deterministic():
+    Xs, _ = gaussian_blobs_blocks(3, 5000, 3, 2, block_rows=512)
+    r1 = reservoir_sample(Xs, 200, seed=7)
+    r2 = reservoir_sample(Xs, 200, seed=7)
+    assert r1.shape == (200, 3)
+    assert np.array_equal(r1, r2)
+    # every reservoir row is a real dataset row
+    M = Xs.materialize()
+    for row in r1[:20]:
+        assert (np.abs(M - row).sum(axis=1) < 1e-6).any()
+    # asking for more rows than exist returns everything
+    small = reservoir_sample(Xs, 6000, seed=0)
+    assert small.shape == (5000, 3)
+
+
+# ------------------------------------------------------- out-of-core Lloyd
+
+
+def _fit_rings(n=600, l=64, m=64):
+    X, y = rings(jax.random.PRNGKey(0), n, k=2, noise=0.05, gap=2.0)
+    coeffs = fit_coefficients(
+        jax.random.PRNGKey(1), X, Kernel("rbf", gamma=1.0), APNCConfig(l=l, m=m)
+    )
+    return X, y, coeffs
+
+
+def test_ooc_lloyd_matches_in_memory_fixed_point():
+    """Same init => same fixed point as core.lloyd.lloyd: identical labels,
+    centroids equal up to per-block float-summation order."""
+    X, _, coeffs = _fit_rings()
+    Y = embed(X, coeffs)
+    init = kmeanspp_init(jax.random.PRNGKey(2), Y, 2, coeffs.discrepancy)
+    ref = lloyd(Y, 2, discrepancy=coeffs.discrepancy, iters=30, init=init)
+
+    store = BlockStore.from_array(np.asarray(X), 100)
+    res = ooc_lloyd(store, 2, coeffs=coeffs, iters=30, init=init)
+    assert np.array_equal(res.labels, np.asarray(ref.labels))
+    np.testing.assert_allclose(
+        np.asarray(res.centroids), np.asarray(ref.centroids), atol=1e-5
+    )
+    assert res.inertia == pytest.approx(float(ref.inertia), rel=1e-4)
+    # and the staged-Y path agrees with the fused embed+assign path
+    Ystore = stream_embed(store, coeffs)
+    res_y = ooc_lloyd(Ystore, 2, discrepancy=coeffs.discrepancy, iters=30, init=init)
+    assert np.array_equal(res_y.labels, res.labels)
+
+
+def test_ooc_lloyd_block_size_invariance():
+    X, _, coeffs = _fit_rings(n=500)
+    Y = embed(X, coeffs)
+    init = kmeanspp_init(jax.random.PRNGKey(3), Y, 2, coeffs.discrepancy)
+    labels = None
+    for br in (100, 250, 500):  # including the single-block degenerate case
+        res = ooc_lloyd(
+            BlockStore.from_array(np.asarray(X), br), 2,
+            coeffs=coeffs, iters=30, init=init,
+        )
+        if labels is None:
+            labels = res.labels
+        assert np.array_equal(res.labels, labels), f"block_rows={br} diverged"
+
+
+def test_stream_embed_sharded_blocks_land_at_global_offsets():
+    """A shard's local block i is a different GLOBAL block: its embedded rows
+    must land at the global offset, not at i * block_rows."""
+    X, _, coeffs = _fit_rings(n=500)
+    store = BlockStore.from_array(np.asarray(X), 100)
+    full = stream_embed(store, coeffs).materialize()
+    shard = store.shard(1, 2)  # global blocks 1, 3
+    out = stream_embed(shard, coeffs)
+    for global_i in (1, 3):
+        np.testing.assert_array_equal(
+            out.get(global_i), full[global_i * 100:(global_i + 1) * 100]
+        )
+
+
+def test_minibatch_lloyd_within_005_nmi_of_exact_on_rings():
+    kern = Kernel("rbf", gamma=1.0)
+    Xs, ys = rings_blocks(3, 8000, 2, block_rows=1024, noise=0.05, gap=2.0)
+    truth = ys.materialize().ravel()
+    cfg = APNCConfig(l=64, m=64)
+    mb, _ = stream_fit_predict(
+        jax.random.PRNGKey(4), Xs, kern, 2, cfg, mode="minibatch", decay=0.95,
+    )
+    ex, _ = stream_fit_predict(jax.random.PRNGKey(4), Xs, kern, 2, cfg, mode="exact")
+    nmi_mb, nmi_ex = nmi(mb.labels, truth), nmi(ex.labels, truth)
+    assert nmi_ex > 0.9, nmi_ex
+    assert nmi_mb >= nmi_ex - 0.05, (nmi_mb, nmi_ex)
+
+
+# ------------------------------------------------------------- microbatcher
+
+
+def test_microbatcher_preserves_request_order():
+    clock = [0.0]
+
+    def process(X):
+        return X[:, 0].astype(np.int32)  # identity on the payload
+
+    mb = MicroBatcher(process, max_batch=16, max_delay_s=0.5, clock=lambda: clock[0])
+    n = 103  # deliberately not a multiple of the batch size
+    for i in range(n):
+        mb.submit(i, np.full((3,), i, np.float32))
+        clock[0] += 0.01
+    mb.poll()  # nothing pending long enough yet? advance past the deadline:
+    clock[0] += 1.0
+    mb.poll()
+    mb.drain()
+    ids = [rid for rid, _, _ in mb.completed]
+    labels = [lab for _, lab, _ in mb.completed]
+    assert ids == list(range(n)), "responses must come back in submission order"
+    assert labels == list(range(n)), "labels must map to their own request's row"
+    assert all(s <= 16 for s in mb.batch_sizes)
+    assert sum(mb.batch_sizes) == n
+
+
+def test_microbatcher_deadline_flush():
+    clock = [0.0]
+    mb = MicroBatcher(lambda X: np.zeros(len(X), np.int32),
+                      max_batch=64, max_delay_s=0.002, clock=lambda: clock[0])
+    mb.submit("a", np.zeros(2, np.float32))
+    mb.poll()
+    assert not mb.completed, "deadline not reached: nothing should flush"
+    clock[0] += 0.01
+    mb.poll()
+    assert [rid for rid, _, _ in mb.completed] == ["a"]
+
+
+# ----------------------------------------------------- checkpoint + serving
+
+
+def test_clustering_checkpoint_roundtrip(tmp_path):
+    from repro.distributed.checkpoint import (
+        load_clustering_model,
+        save_clustering_model,
+    )
+
+    X, _, coeffs = _fit_rings(n=300)
+    centroids = jnp.asarray(np.random.default_rng(0).standard_normal((2, coeffs.m)),
+                            jnp.float32)
+    save_clustering_model(tmp_path / "ck", coeffs, centroids)
+    coeffs2, centroids2 = load_clustering_model(tmp_path / "ck")
+    assert np.array_equal(np.asarray(coeffs2.landmarks), np.asarray(coeffs.landmarks))
+    assert np.array_equal(np.asarray(coeffs2.R), np.asarray(coeffs.R))
+    assert coeffs2.kernel == coeffs.kernel
+    assert coeffs2.discrepancy == coeffs.discrepancy
+    assert np.array_equal(np.asarray(centroids2), np.asarray(centroids))
+
+
+def test_cluster_serve_cli_matches_predict(tmp_path):
+    """The serving acceptance path at test scale: micro-batched serving must
+    agree exactly with core.kkmeans.predict on the replayed request log (the
+    CLI raises SystemExit(1) on any mismatch)."""
+    from repro.launch import cluster_serve
+
+    stats = cluster_serve.main([
+        "--requests", "600", "--micro-batch", "64", "--n-fit", "2000",
+        "--block-rows", "512", "--d", "8", "--k", "3", "--l", "48", "--m", "32",
+        "--iters", "8",
+    ])
+    assert stats["mismatches"] == 0
+    assert stats["p99_ms"] >= stats["p50_ms"] > 0

@@ -4,8 +4,11 @@ plus an end-to-end reduced LM training run through the public launcher."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import Kernel, nmi
+
+pytestmark = pytest.mark.slow  # minutes-long end-to-end suite; run via -m ""
 from repro.core.kkmeans import APNCConfig, fit_predict, predict
 from repro.data.synthetic import rings
 

@@ -4,6 +4,9 @@ schedule wiring inside the train step."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep: see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_arch, reduced
