@@ -1,4 +1,4 @@
-"""Out-of-core scale benchmark for repro.stream.
+"""Out-of-core scale benchmark for repro.stream, driven through repro.api.
 
     PYTHONPATH=src python benchmarks/stream_bench.py --n 1000000 --d 54
 
@@ -10,8 +10,14 @@ arrays are one block of X, one of Y, and the (k, m)/(k,) statistics). Reports:
     double-buffered engine (prefetch=2) — the overlap speedup is the point of
     the engine: block i+1's ingest + H2D transfer hides behind block i's
     device compute;
-  * exact out-of-core Lloyd rows/s per iteration;
-  * single-pass mini-batch Lloyd rows/s.
+  * exact out-of-core Lloyd rows/s per iteration, via the public
+    `KernelKMeans(backend="stream")` facade;
+  * single-pass mini-batch Lloyd rows/s, via `backend="minibatch"`;
+  * facade dispatch overhead: the same exact fit through
+    `KernelKMeans.fit` vs calling `stream_fit_predict` directly — recorded to
+    BENCH_api.json; the facade must cost <1% (in practice it is cheaper: its
+    k-means++ seeding reuses the landmark sample instead of streaming a
+    second reservoir pass).
 
 Ingest model: in the paper's setting mappers pull blocks from HDFS over the
 network; `--ingest-delay-ms` models that per-block storage/network latency
@@ -21,7 +27,7 @@ work cannot physically overlap XLA compute here (on a real TPU host the
 device computes while the host generates; the same engine hides both). Set
 --ingest-delay-ms 0 to benchmark raw generator throughput instead.
 
-Results go to BENCH_stream.json next to this file.
+Results go to BENCH_stream.json / BENCH_api.json next to this file's parent.
 """
 from __future__ import annotations
 
@@ -38,14 +44,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ComputePolicy, KernelKMeans
 from repro.core.kernels_fn import Kernel
 from repro.core.kkmeans import APNCConfig, fit_coefficients
-from repro.core.lloyd import kmeanspp_init
 from repro.data.synthetic import gaussian_blobs_blocks
 from repro.kernels import ops
 from repro.stream.blockstore import BlockStore
 from repro.stream.engine import map_reduce
-from repro.stream.lloyd import minibatch_lloyd, ooc_lloyd
+from repro.stream.lloyd import stream_fit_predict
 from repro.stream.reservoir import reservoir_sample
 
 
@@ -76,6 +82,7 @@ def main(argv=None):
     ap.add_argument("--prefetch", type=int, default=2)
     ap.add_argument("--ingest-delay-ms", type=float, default=60.0)
     ap.add_argument("--out", default=str(Path(__file__).parent.parent / "BENCH_stream.json"))
+    ap.add_argument("--api-out", default=str(Path(__file__).parent.parent / "BENCH_api.json"))
     args = ap.parse_args(argv)
 
     assert args.n >= 4 * args.block_rows, "dataset must dwarf the resident block"
@@ -105,14 +112,13 @@ def main(argv=None):
     else:
         store = disk_store
 
-    # Fit on a reservoir sample (one pass), seed from its embedding.
+    kern = Kernel("rbf", gamma=1.0 / args.d)
+    policy = ComputePolicy(prefetch=args.prefetch)
+
+    # Engine micro-bench: coefficients fit once on a reservoir sample.
     sample = jnp.asarray(reservoir_sample(store, 4096, seed=1))
-    cfg = APNCConfig(l=args.l, m=args.m)
-    coeffs = fit_coefficients(jax.random.PRNGKey(1), sample, Kernel("rbf", gamma=1.0 / args.d), cfg)
-    init = kmeanspp_init(
-        jax.random.PRNGKey(2), ops.apnc_embed_block_map(sample, coeffs), args.k,
-        coeffs.discrepancy,
-    )
+    coeffs = fit_coefficients(jax.random.PRNGKey(1), sample, kern,
+                              APNCConfig(l=args.l, m=args.m))
 
     block_mb = args.block_rows * args.d * 4 / 1e6
     print(f"[stream-bench] n={args.n} d={args.d} in {store.num_blocks} blocks of "
@@ -126,41 +132,112 @@ def main(argv=None):
     print(f"[stream-bench] embed async  {asyn/1e6:.2f}M rows/s "
           f"(overlap speedup {asyn/sync:.2f}x)")
 
-    t0 = time.perf_counter()
-    res = ooc_lloyd(store, args.k, coeffs=coeffs, iters=args.iters, init=init,
-                    prefetch=args.prefetch)
-    t_ooc = time.perf_counter() - t0
-    passes = res.iters + 1  # +1 for the final assignment pass
-    ooc_rows = args.n * passes / t_ooc
-    print(f"[stream-bench] exact ooc Lloyd: {res.iters} iters in {t_ooc:.1f}s "
-          f"({ooc_rows/1e6:.2f}M rows/s/iter, inertia {res.inertia:.0f})")
+    def make_est(backend, **kw):
+        return KernelKMeans(
+            args.k, kernel=kern, backend=backend, l=args.l, m=args.m,
+            iters=args.iters, n_init=1, policy=policy, **kw,
+        )
 
-    t0 = time.perf_counter()
-    mb = minibatch_lloyd(store, args.k, coeffs=coeffs, decay=0.95, epochs=1,
-                         init=init, prefetch=args.prefetch)
-    t_mb = time.perf_counter() - t0
+    def timed(fn, repeats=2):
+        """Warm once (jit compiles), then best-of-`repeats` wall time."""
+        out = fn()
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            out = fn()
+            best = min(best, time.perf_counter() - t0)
+        return best, out
+
+    key = jax.random.PRNGKey(3)
+
+    # Exact out-of-core Lloyd through the public facade.
+    t_facade, est = timed(lambda: make_est("stream").fit(store, key=key))
+    passes = est.n_iter_ + 1  # +1 for the final assignment pass
+    ooc_rows = args.n * passes / t_facade
+    print(f"[stream-bench] exact ooc Lloyd (facade): {est.n_iter_} iters in "
+          f"{t_facade:.1f}s ({ooc_rows/1e6:.2f}M rows/s/iter, "
+          f"inertia {est.inertia_:.0f})")
+
+    # Dispatch overhead: the hand-rolled driver sequence the facade's stream
+    # backend performs — same key, bitwise-identical work, no estimator layer.
+    def hand_rolled():
+        from repro.core.lloyd import kmeanspp_init
+        from repro.stream.lloyd import ooc_lloyd
+
+        k_fit, k_seed = jax.random.split(key)
+        s = jnp.asarray(reservoir_sample(store, 4096, seed=int(k_fit[-1])))
+        cf = fit_coefficients(k_fit, s, kern, APNCConfig(l=args.l, m=args.m))
+        pool = ops.apnc_embed_block_map(s[:1024], cf, policy=policy)
+        init = kmeanspp_init(jax.random.fold_in(k_seed, 0), pool, args.k,
+                             cf.discrepancy)
+        return ooc_lloyd(store, args.k, coeffs=cf, iters=args.iters, init=init,
+                         policy=policy)
+
+    t_hand, hand = timed(hand_rolled)
+    assert np.array_equal(hand.labels, est.labels_), "facade must replay the drivers"
+    dispatch_pct = 100.0 * (t_facade - t_hand) / t_hand
+    print(f"[stream-bench] hand-rolled drivers: {hand.iters} iters in "
+          f"{t_hand:.1f}s -> facade dispatch overhead {dispatch_pct:+.2f}%")
+
+    # End-to-end vs the legacy one-shot driver (NOT identical work: its
+    # k-means++ seeding streams a second reservoir pass, and the different
+    # init can change the iteration count).
+    t_direct, res = timed(lambda: stream_fit_predict(
+        key, store, kern, args.k,
+        APNCConfig(l=args.l, m=args.m, iters=args.iters),
+        mode="exact", prefetch=args.prefetch,
+    ))
+    res = res[0]
+    e2e_pct = 100.0 * (t_facade - t_direct) / t_direct
+    print(f"[stream-bench] direct stream_fit_predict: {res.iters} iters in "
+          f"{t_direct:.1f}s -> facade end-to-end {e2e_pct:+.2f}%")
+
+    # Same warm best-of-2 methodology as the exact path above.
+    t_mb, mb = timed(lambda: make_est("minibatch", decay=0.95)
+                     .fit(store, key=jax.random.PRNGKey(3)))
     mb_rows = 2 * args.n / t_mb  # one clustering pass + one final-assign pass
-    print(f"[stream-bench] minibatch Lloyd: 1 pass in {t_mb:.1f}s "
-          f"({mb_rows/1e6:.2f}M rows/s, inertia {mb.inertia:.0f})")
+    print(f"[stream-bench] minibatch Lloyd (facade): 1 pass in {t_mb:.1f}s "
+          f"({mb_rows/1e6:.2f}M rows/s, inertia {mb.inertia_:.0f})")
 
+    config = {k: getattr(args, k.replace("-", "_"))
+              for k in ("n", "d", "k", "l", "m", "iters", "prefetch")} \
+             | {"block_rows": args.block_rows,
+                "blocks": store.num_blocks,
+                "scale_vs_resident": args.n // args.block_rows,
+                "ingest_delay_ms_simulated": args.ingest_delay_ms}
     result = {
-        "config": {k: getattr(args, k.replace("-", "_"))
-                   for k in ("n", "d", "k", "l", "m", "iters", "prefetch")}
-                  | {"block_rows": args.block_rows,
-                     "blocks": store.num_blocks,
-                     "scale_vs_resident": args.n // args.block_rows,
-                     "ingest_delay_ms_simulated": args.ingest_delay_ms},
+        "config": config,
         "embed_sync_rows_per_s": sync,
         "embed_async_rows_per_s": asyn,
         "overlap_speedup": asyn / sync,
         "ooc_lloyd_rows_per_s_per_iter": ooc_rows,
-        "ooc_lloyd_inertia": res.inertia,
+        "ooc_lloyd_inertia": est.inertia_,
         "minibatch_rows_per_s": mb_rows,
-        "minibatch_inertia": mb.inertia,
+        "minibatch_inertia": mb.inertia_,
     }
     Path(args.out).write_text(json.dumps(result, indent=2))
     print(f"[stream-bench] wrote {args.out}")
-    return result
+
+    api_result = {
+        "config": config,
+        "facade_fit_s": t_facade,
+        "hand_rolled_drivers_s": t_hand,
+        "facade_dispatch_overhead_pct": dispatch_pct,
+        "direct_stream_fit_predict_s": t_direct,
+        "facade_vs_stream_fit_predict_pct": e2e_pct,
+        "facade_iters": est.n_iter_,
+        "direct_iters": res.iters,
+        "facade_inertia": est.inertia_,
+        "direct_inertia": res.inertia,
+        "note": "dispatch overhead compares the facade against the identical "
+                "hand-rolled driver sequence (same key, same init, best-of-2 "
+                "warm runs); stream_fit_predict is NOT identical work — its "
+                "seeding streams a second reservoir pass and its different "
+                "init can change the Lloyd iteration count",
+    }
+    Path(args.api_out).write_text(json.dumps(api_result, indent=2))
+    print(f"[stream-bench] wrote {args.api_out}")
+    return result, api_result
 
 
 if __name__ == "__main__":

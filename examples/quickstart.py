@@ -1,42 +1,51 @@
-"""Quickstart: embed-and-conquer in ~20 lines.
+"""Quickstart: the unified KernelKMeans estimator on an IN-MEMORY array.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Clusters concentric rings (the case vanilla k-means cannot solve) with both
-APNC instances and prints NMI vs ground truth + vs plain k-means.
+Deliberately the same code shape as examples/stream_quickstart.py — the ONLY
+difference is the input (a resident Array here, an out-of-core BlockStore
+there): `backend="auto"` resolves to "local" for an Array, and the rest of the
+lifecycle (fit, predict, save/load round-trip) is identical because every
+backend produces the same ClusterModel artifact.
 """
 import sys
+import tempfile
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
+import numpy as np
 
-from repro.core import Kernel, nmi, self_tuned_rbf
-from repro.core.baselines import _vector_kmeans
-from repro.core.kkmeans import APNCConfig, fit_predict, predict
-from repro.data.synthetic import gaussian_blobs, rings
+from repro.api import KernelKMeans
+from repro.core.metrics import nmi
 
 
 def main():
-    # --- rings: kernel geometry required ------------------------------------
-    X, y = rings(jax.random.PRNGKey(0), 1000, k=2, noise=0.05, gap=2.0)
-    kern = Kernel("rbf", gamma=1.0)
-    res, coeffs = fit_predict(jax.random.PRNGKey(1), X, kern, 2,
-                              APNCConfig(method="nystrom", l=200, m=128))
-    km = _vector_kmeans(jax.random.PRNGKey(1), X, 2, 20)
-    print(f"[rings]  APNC-Nys NMI = {nmi(res.labels, y):.3f}   "
-          f"plain k-means NMI = {nmi(km.labels, y):.3f}")
+    # --- the input: gaussian blobs as a resident (n, d) array ---------------
+    from repro.data.synthetic import gaussian_blobs
 
-    # --- blobs: both instances, plus online assignment ----------------------
-    X, y = gaussian_blobs(jax.random.PRNGKey(2), 2000, 16, 6, separation=4.0)
-    kern = self_tuned_rbf(X)
-    for method, m in (("nystrom", 128), ("sd", 384)):
-        res, coeffs = fit_predict(jax.random.PRNGKey(3), X[:1500], kern, 6,
-                                  APNCConfig(method=method, l=192, m=m))
-        held = predict(X[1500:], coeffs, res.centroids)
-        print(f"[blobs]  APNC-{method:8s} train NMI = {nmi(res.labels, y[:1500]):.3f}   "
-              f"held-out NMI = {nmi(held, y[1500:]):.3f}")
+    X, y = gaussian_blobs(jax.random.PRNGKey(0), 2000, 16, 6, separation=4.0)
+    truth = np.asarray(y)
+    queries = np.asarray(X)[:200]
+
+    # --- identical from here on in both quickstarts -------------------------
+    # no gamma given -> sigma self-tunes on the landmark sample (Section 9)
+    est = KernelKMeans(6, kernel="rbf", l=128, m=64, n_init=4)
+    est.fit(X)
+    print(f"[fit]   backend={est.backend_} ({est.n_iter_} Lloyd iters), "
+          f"inertia {est.inertia_:.1f}, NMI {nmi(est.labels_, truth):.3f}")
+
+    served = est.predict(queries)
+    print(f"[serve] {len(served)} online assignments, "
+          f"{int((served == est.labels_[:200]).sum())}/{len(served)} match fit labels")
+
+    with tempfile.TemporaryDirectory() as tmp:
+        est.save(tmp)
+        reloaded = KernelKMeans.load(tmp)
+        replay = reloaded.predict(queries)
+    print(f"[ckpt]  save/load round-trip: "
+          f"{int((replay == served).sum())}/{len(served)} identical predictions")
 
 
 if __name__ == "__main__":

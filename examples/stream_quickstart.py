@@ -1,69 +1,53 @@
-"""Out-of-core quickstart: cluster a stream that never co-resides in memory.
+"""Quickstart: the unified KernelKMeans estimator on an OUT-OF-CORE stream.
 
     PYTHONPATH=src python examples/stream_quickstart.py
 
-Walks the full embed-and-conquer stream pipeline at toy scale:
-  1. a blocked synthetic dataset (blocks materialized on demand),
-  2. reservoir-sampled landmarks -> APNC coefficients (one pass),
-  3. exact out-of-core Lloyd vs single-pass mini-batch Lloyd,
-  4. checkpoint the model, reload it, serve micro-batched assignments.
+Deliberately the same code shape as examples/quickstart.py — the ONLY
+difference is the input (a blocked BlockStore here, a resident Array there):
+`backend="auto"` resolves to "stream" for a BlockStore, so the data is
+clustered by exact out-of-core Lloyd with only one block ever resident on
+device, and the rest of the lifecycle (fit, predict, save/load round-trip) is
+identical because every backend produces the same ClusterModel artifact.
 """
-from __future__ import annotations
-
+import sys
 import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
 import numpy as np
 
-from repro.core.kernels_fn import Kernel
-from repro.core.kkmeans import APNCConfig, predict
+from repro.api import KernelKMeans
 from repro.core.metrics import nmi
-from repro.data.synthetic import rings_blocks
-from repro.distributed.checkpoint import load_clustering_model, save_clustering_model
-from repro.kernels import ops
-from repro.stream import MicroBatcher, stream_fit_predict
 
 
 def main():
-    # 8000 rows in 1024-row blocks: only one block (plus the tiny (Z, g)
-    # statistics) is ever resident on device.
-    X_store, y_store = rings_blocks(3, 8000, 2, block_rows=1024, noise=0.05, gap=2.0)
+    # --- the input: gaussian blobs as 1024-row blocks, never co-resident ----
+    from repro.data.synthetic import gaussian_blobs_blocks
+
+    X, y_store = gaussian_blobs_blocks(3, 8000, 16, 6, block_rows=1024,
+                                       separation=4.0)
     truth = y_store.materialize().ravel()
-    kern = Kernel("rbf", gamma=1.0)
-    cfg = APNCConfig(l=64, m=64)
+    queries = X.get(0)[:200]
 
-    exact, coeffs = stream_fit_predict(
-        jax.random.PRNGKey(4), X_store, kern, 2, cfg, mode="exact",
-    )
-    print(f"[stream] exact ooc Lloyd:  {exact.iters} iters, "
-          f"NMI {nmi(exact.labels, truth):.3f}, inertia {exact.inertia:.1f}")
+    # --- identical from here on in both quickstarts -------------------------
+    # no gamma given -> sigma self-tunes on the landmark sample (Section 9)
+    est = KernelKMeans(6, kernel="rbf", l=128, m=64, n_init=4)
+    est.fit(X)
+    print(f"[fit]   backend={est.backend_} ({est.n_iter_} Lloyd iters), "
+          f"inertia {est.inertia_:.1f}, NMI {nmi(est.labels_, truth):.3f}")
 
-    mb, _ = stream_fit_predict(
-        jax.random.PRNGKey(4), X_store, kern, 2, cfg, mode="minibatch", decay=0.95,
-    )
-    print(f"[stream] minibatch (1 pass): NMI {nmi(mb.labels, truth):.3f}, "
-          f"inertia {mb.inertia:.1f}")
+    served = est.predict(queries)
+    print(f"[serve] {len(served)} online assignments, "
+          f"{int((served == est.labels_[:200]).sum())}/{len(served)} match fit labels")
 
-    # train -> serve: persist, reload, micro-batch online assignments.
     with tempfile.TemporaryDirectory() as tmp:
-        save_clustering_model(tmp, coeffs, exact.centroids)
-        coeffs2, centroids2 = load_clustering_model(tmp)
-
-    def process(X):
-        _, _, labels = ops.apnc_embed_assign_block(
-            jax.numpy.asarray(X), coeffs2, centroids2
-        )
-        return np.asarray(labels)
-
-    batcher = MicroBatcher(process, max_batch=64, max_delay_s=0.002)
-    Xq = X_store.get(0)[:200]
-    for i, row in enumerate(Xq):
-        batcher.submit(i, row)
-    batcher.drain()
-    served = np.asarray([lab for _, lab, _ in batcher.completed])
-    ref = np.asarray(predict(jax.numpy.asarray(Xq), coeffs2, centroids2))
-    print(f"[serve] {len(served)} micro-batched assignments, "
-          f"{int((served == ref).sum())}/{len(served)} match offline predict")
+        est.save(tmp)
+        reloaded = KernelKMeans.load(tmp)
+        replay = reloaded.predict(queries)
+    print(f"[ckpt]  save/load round-trip: "
+          f"{int((replay == served).sum())}/{len(served)} identical predictions")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,9 @@
 """repro: Embed-and-Conquer (APNC kernel k-means) as a production JAX framework.
 
 Layers:
+    repro.api          -- PUBLIC facade: KernelKMeans estimator, backend/kernel/
+                          method registries, the ClusterModel artifact
+    repro.policy       -- ComputePolicy (pallas routing, precision, prefetch)
     repro.core         -- the paper: APNC embeddings + MapReduce->shard_map kernel k-means
     repro.kernels      -- Pallas TPU kernels for the APNC hot loops (+ jnp oracles)
     repro.models       -- LM model zoo substrate (dense/GQA/MoE/Mamba/RWKV6/hybrid)

@@ -1,0 +1,52 @@
+"""repro.api — the public estimator facade for embed-and-conquer.
+
+One estimator, four execution regimes, one artifact:
+
+    from repro.api import KernelKMeans
+
+    est = KernelKMeans(k=5, kernel="rbf", l=128, m=64)
+    est.fit(X)            # Array -> local; BlockStore -> exact out-of-core
+    labels = est.predict(X_new)
+    est.save("ckpt/")     # canonical ClusterModel, backend-agnostic
+    est2 = KernelKMeans.load("ckpt/")
+
+Extend by registering, not by editing: `register_backend`, `register_kernel`,
+`register_method`. Execution knobs (Pallas routing, precision, prefetch) live
+in one `ComputePolicy` — the old scattered `use_pallas` booleans are
+deprecated shims over it.
+"""
+from repro.api.model import ClusterModel, FitMeta
+from repro.api.registry import (
+    BACKENDS,
+    KERNELS,
+    METHODS,
+    available_backends,
+    get_backend,
+    register_backend,
+    register_kernel,
+    register_method,
+    resolve_kernel,
+)
+from repro.api import backends as _backends  # noqa: F401  (registers built-ins)
+from repro.api.backends import BackendFit, FitContext
+from repro.api.estimator import AUTO_STREAM_ROWS, KernelKMeans
+from repro.policy import ComputePolicy
+
+__all__ = [
+    "AUTO_STREAM_ROWS",
+    "BACKENDS",
+    "BackendFit",
+    "ClusterModel",
+    "ComputePolicy",
+    "FitContext",
+    "FitMeta",
+    "KERNELS",
+    "KernelKMeans",
+    "METHODS",
+    "available_backends",
+    "get_backend",
+    "register_backend",
+    "register_kernel",
+    "register_method",
+    "resolve_kernel",
+]

@@ -1,0 +1,170 @@
+"""The four built-in execution backends behind `KernelKMeans`.
+
+Each backend receives the SAME prepared inputs (a FitContext: block store
+and/or resident array, fitted coefficients, the k-means++ init centroids per
+restart, policy) and returns the SAME result shape (a BackendFit), so the
+estimator can swap engines without the result type fracturing:
+
+  local      in-memory embed + lax.while Lloyd (core.lloyd) — small data
+  shard_map  Algorithm 1 + 2 as SPMD programs on a device mesh (core.distributed)
+  stream     exact out-of-core Lloyd over blocks (stream.ooc_lloyd) — same
+             fixed point as local given the same init, memory O(block)
+  minibatch  single-pass streaming Lloyd with decayed (Z, g) (stream.minibatch)
+
+Because every backend clusters from the same coefficients and the same init
+centroids, local and stream produce identical labels (the exact out-of-core
+fixed-point claim, asserted through the public API in tests/test_api.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.registry import register_backend
+from repro.core.apnc import APNCCoefficients
+from repro.core.lloyd import lloyd
+from repro.policy import ComputePolicy
+from repro.stream.blockstore import BlockStore
+from repro.stream.lloyd import minibatch_lloyd, ooc_lloyd
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class FitContext:
+    """Everything a clustering backend needs, prepared once by the estimator
+    (identically for every backend — that is what makes them interchangeable)."""
+
+    store: BlockStore  # blocked view of the data (always present)
+    array: Array | None  # the resident array, when the input was in-memory
+    coeffs: APNCCoefficients
+    k: int
+    inits: list[Array]  # k-means++ init centroids, one per restart
+    iters: int
+    policy: ComputePolicy
+    decay: float  # minibatch: sufficient-stat decay
+    epochs: int  # minibatch: passes over the stream
+    mesh: Any | None  # shard_map: jax Mesh (1-device fallback if None)
+
+
+@dataclasses.dataclass
+class BackendFit:
+    """Uniform raw result of one backend run (the estimator wraps it into the
+    canonical ClusterModel artifact)."""
+
+    labels: np.ndarray  # (n,) int32, host-resident
+    centroids: Array  # (k, m)
+    inertia: float
+    iters: int
+    rows_seen: int
+
+
+def _materialize(ctx: FitContext) -> Array:
+    if ctx.array is not None:
+        return ctx.array
+    return jnp.asarray(ctx.store.materialize())
+
+
+def _run_restarts(ctx: FitContext, run_one) -> BackendFit:
+    """The shared restart loop: run every init, keep the lowest-inertia fit,
+    total rows_seen over ALL restarts (it is documented as total rows visited
+    during clustering, not the winner's). One place to change restart
+    semantics for every backend."""
+    fits = [run_one(init) for init in ctx.inits]
+    best = min(fits, key=lambda f: f.inertia)
+    return dataclasses.replace(best, rows_seen=sum(f.rows_seen for f in fits))
+
+
+def _from_stream(res) -> BackendFit:
+    """StreamLloydResult -> BackendFit (shared by stream and minibatch)."""
+    return BackendFit(
+        labels=res.labels, centroids=res.centroids,
+        inertia=res.inertia, iters=res.iters, rows_seen=res.rows_seen,
+    )
+
+
+@register_backend("local")
+def fit_local(ctx: FitContext) -> BackendFit:
+    """Single-program path: embed everything, lax.while Lloyd per restart."""
+    from repro.core.kkmeans import apnc_embed
+
+    X = _materialize(ctx)
+    Y = apnc_embed(X, ctx.coeffs, ctx.policy)
+
+    def run_one(init):
+        res = lloyd(
+            Y, ctx.k, discrepancy=ctx.coeffs.discrepancy, iters=ctx.iters,
+            init=init, policy=ctx.policy,
+        )
+        return BackendFit(
+            labels=np.asarray(res.labels, np.int32),
+            centroids=res.centroids,
+            inertia=float(res.inertia),
+            iters=int(res.iters),
+            rows_seen=(int(res.iters) + 1) * int(X.shape[0]),
+        )
+
+    return _run_restarts(ctx, run_one)
+
+
+@register_backend("stream")
+def fit_stream(ctx: FitContext) -> BackendFit:
+    """Exact out-of-core Lloyd: identical update rule (and fixed point) to
+    `local`, memory O(block)."""
+    return _run_restarts(ctx, lambda init: _from_stream(ooc_lloyd(
+        ctx.store, ctx.k, coeffs=ctx.coeffs, iters=ctx.iters, init=init,
+        policy=ctx.policy,
+    )))
+
+
+@register_backend("minibatch")
+def fit_minibatch(ctx: FitContext) -> BackendFit:
+    """Single-pass streaming Lloyd with decayed (Z, g): clustering cost
+    decoupled from n, for larger-than-disk / continuous-ingest streams."""
+    return _run_restarts(ctx, lambda init: _from_stream(minibatch_lloyd(
+        ctx.store, ctx.k, coeffs=ctx.coeffs, decay=ctx.decay,
+        epochs=ctx.epochs, init=init, policy=ctx.policy,
+    )))
+
+
+@register_backend("shard_map")
+def fit_shard_map(ctx: FitContext) -> BackendFit:
+    """Algorithm 1 + 2 as SPMD mesh programs — the paper's MapReduce jobs.
+    Uses ctx.mesh, or a 1-device mesh so the path stays reachable everywhere."""
+    from repro.core.distributed import data_axes_of, distributed_embed, distributed_lloyd
+    from repro.launch.mesh import make_mesh
+
+    mesh = ctx.mesh if ctx.mesh is not None else make_mesh((1, 1), ("data", "model"))
+    n_shards = int(np.prod([mesh.shape[a] for a in data_axes_of(mesh)]))
+    X = _materialize(ctx)
+    if X.shape[0] % n_shards:
+        raise ValueError(
+            f"shard_map backend needs n ({X.shape[0]}) divisible by the mesh's "
+            f"data extent ({n_shards}); pad the input or pick another backend"
+        )
+    Y = distributed_embed(mesh, X, ctx.coeffs, policy=ctx.policy)
+    disc = ctx.coeffs.discrepancy
+
+    def inertia_of(c):
+        from repro.core.lloyd import block_cost
+
+        return block_cost(Y, c, disc)
+
+    def run_one(init):
+        labels, centroids = distributed_lloyd(
+            mesh, Y, init, k=ctx.k, discrepancy=disc, iters=ctx.iters,
+            policy=ctx.policy,
+        )
+        return BackendFit(
+            labels=np.asarray(labels, np.int32),
+            centroids=centroids,
+            inertia=float(inertia_of(centroids)),
+            iters=ctx.iters,  # fori_loop runs the full budget on-mesh
+            rows_seen=(ctx.iters + 1) * int(X.shape[0]),
+        )
+
+    return _run_restarts(ctx, run_one)

@@ -1,0 +1,414 @@
+"""`KernelKMeans`: the unified estimator over every execution regime.
+
+The paper's whole point is ONE embedding definition (APNC, Section 4) that
+makes every execution strategy share the same math. This facade makes the API
+match: one estimator with the full lifecycle
+
+    fit(X_or_BlockStore) / partial_fit / predict / transform / score / save / load
+
+dispatching to interchangeable backends ("local", "shard_map", "stream",
+"minibatch"; "auto" picks by input type, data size and mesh availability) and
+producing one canonical `ClusterModel` artifact regardless of backend.
+
+Phase 1 (coefficient fit + seeding) runs HERE, identically for every backend:
+a reservoir sample over the blocked view of the data selects landmarks, fits
+(R, L), and seeds k-means++ restarts — so backends differ only in how they run
+the Lloyd iterations, and `local` and `stream` reach the identical fixed point
+from the identical init (asserted in tests/test_api.py).
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.backends import FitContext
+from repro.api.model import ClusterModel, FitMeta
+from repro.api.registry import get_backend, get_method, resolve_kernel
+from repro.core.kernels_fn import Kernel, self_tuned_rbf
+from repro.core.lloyd import block_cost, centroid_update, kmeanspp_init
+from repro.kernels import ops
+from repro.policy import ComputePolicy
+from repro.stream.blockstore import BlockStore
+from repro.stream.reservoir import reservoir_sample
+
+Array = jax.Array
+
+# backend="auto": in-memory arrays at or beyond this many rows are clustered
+# out-of-core (wrapped in a BlockStore) instead of fully embedded on device.
+AUTO_STREAM_ROWS = 2_000_000
+
+
+class KernelKMeans:
+    """Kernel k-means via APNC embeddings (the paper's embed-and-conquer),
+    scikit-learn-shaped, with pluggable execution backends.
+
+    Parameters mirror `APNCConfig` (paper Section 9) plus the execution axes:
+
+    k:               number of clusters.
+    kernel:          registered kernel name ("rbf"|"poly"|"tanh"|"linear") or a
+                     `Kernel` instance. With kernel="rbf" and no gamma in
+                     kernel_params, sigma is self-tuned on the landmark sample.
+    kernel_params:   keyword params for a string kernel (gamma, degree, ...).
+    method:          APNC instance: "nystrom" (l2) or "sd" (l1).
+    backend:         "local" | "shard_map" | "stream" | "minibatch" | "auto".
+                     auto -> "stream" for a BlockStore input, "shard_map" when
+                     a mesh was given, "stream" for arrays with >=
+                     AUTO_STREAM_ROWS rows, else "local".
+    l, m, t, q:      landmark count, embedding dim per block, SD subset size,
+                     ensemble blocks — as in the paper.
+    iters, n_init:   Lloyd cap and k-means++ restarts (best inertia wins).
+    decay, epochs:   minibatch backend: sufficient-stat decay and stream passes.
+    block_rows:      blocking used when wrapping an in-memory array.
+    landmark_sample: reservoir size for landmark/coefficient fitting.
+    seed_sample:     rows of the landmark sample used for k-means++ seeding.
+    policy:          `ComputePolicy` (pallas routing, precision, prefetch).
+    mesh:            jax Mesh for the shard_map backend.
+    random_state:    seed used when fit() is not given an explicit key.
+
+    After fit: `model_` (the ClusterModel artifact), `labels_`, `inertia_`,
+    `n_iter_`, `kernel_` (the resolved Kernel), `backend_` (the backend that
+    actually ran).
+    """
+
+    def __init__(
+        self,
+        k: int,
+        *,
+        kernel: str | Kernel = "rbf",
+        kernel_params: dict | None = None,
+        method: str = "nystrom",
+        backend: str = "auto",
+        l: int = 300,
+        m: int = 200,
+        t: int | None = None,
+        q: int = 1,
+        iters: int = 20,
+        n_init: int = 1,
+        decay: float = 0.9,
+        epochs: int = 1,
+        block_rows: int = 4096,
+        landmark_sample: int = 4096,
+        seed_sample: int = 1024,
+        policy: ComputePolicy | None = None,
+        mesh: Any | None = None,
+        random_state: int = 0,
+    ):
+        self.k = int(k)
+        self.kernel = kernel
+        self.kernel_params = dict(kernel_params or {})
+        self.method = method
+        self.backend = backend
+        self.l, self.m, self.t, self.q = l, m, t, q
+        self.iters, self.n_init = iters, n_init
+        self.decay, self.epochs = decay, epochs
+        self.block_rows = block_rows
+        self.landmark_sample = landmark_sample
+        self.seed_sample = seed_sample
+        self.policy = policy if policy is not None else ComputePolicy()
+        self.mesh = mesh
+        self.random_state = random_state
+
+        self.model_: ClusterModel | None = None
+        self.labels_: np.ndarray | None = None
+        self.inertia_: float | None = None
+        self.n_iter_: int | None = None
+        self.kernel_: Kernel | None = None
+        self.backend_: str | None = None
+        self._pf_state: tuple[Array, Array, int] | None = None  # (Z, g, rows)
+
+    # ------------------------------------------------------------- dispatch
+
+    def _choose_backend(self, X) -> str:
+        if self.backend != "auto":
+            return self.backend
+        if isinstance(X, BlockStore):
+            return "stream"
+        if self.mesh is not None:
+            return "shard_map"
+        if int(np.asarray(X.shape[0] if hasattr(X, "shape") else len(X))) >= AUTO_STREAM_ROWS:
+            return "stream"
+        return "local"
+
+    def _resolve_kernel(self, sample: np.ndarray) -> Kernel:
+        # Self-tune ONLY when no params were given at all — any explicit
+        # kernel_params (including typos) must reach the registry factory,
+        # which validates them.
+        if not isinstance(self.kernel, Kernel) and self.kernel == "rbf" \
+                and not self.kernel_params:
+            # paper Section 9 self-tuning, estimated on the landmark sample
+            return self_tuned_rbf(jnp.asarray(sample), seed=self.random_state)
+        return resolve_kernel(self.kernel, self.kernel_params)
+
+    # ------------------------------------------------------------ lifecycle
+
+    def _fit_coeffs_and_pool(self, sample: Array, k_fit: Array):
+        """The shared front half of phase 1: resolve the kernel, fit the APNC
+        coefficients on the sample, embed the seeding pool. Used identically
+        by fit() (reservoir sample) and partial_fit() (first block)."""
+        self.kernel_ = self._resolve_kernel(sample)
+        coeffs = get_method(self.method)(
+            k_fit, sample, self.kernel_, l=self.l, m=self.m, t=self.t, q=self.q
+        )
+        pool = ops.apnc_embed_block_map(
+            sample[: self.seed_sample], coeffs, policy=self.policy
+        )
+        return coeffs, pool
+
+    def _prepare(self, X, key: Array, backend_name: str) -> FitContext:
+        """Phase 1, shared by every backend: blocked view, landmark sample,
+        coefficient fit, k-means++ seeding."""
+        if isinstance(X, BlockStore):
+            self._reject_sharded(X, "fit")
+            store, array = X, None
+        else:
+            # Only the resident backends want the whole matrix on device; the
+            # streaming ones must stay O(block) in device memory. jnp.asarray
+            # is a no-op for an already-device-resident f32 array, and for
+            # host numpy f32 input the host view is zero-copy. The host copy
+            # for device-array input is deliberate: sampling through the SAME
+            # BlockStore blocking on every backend is what makes phase 1 (and
+            # therefore local-vs-stream labels) bitwise identical.
+            array = (jnp.asarray(X, jnp.float32)
+                     if backend_name in ("local", "shard_map") else None)
+            X_np = (np.asarray(X, np.float32) if isinstance(X, np.ndarray)
+                    else np.asarray(array if array is not None else X,
+                                    dtype=np.float32))
+            store = BlockStore.from_array(X_np, self.block_rows)
+        k_fit, k_seed = jax.random.split(key)
+        sample = jnp.asarray(
+            reservoir_sample(store, self.landmark_sample, seed=int(k_fit[-1]))
+        )
+        coeffs, pool = self._fit_coeffs_and_pool(sample, k_fit)
+        inits = [
+            kmeanspp_init(
+                jax.random.fold_in(k_seed, r), pool, self.k, coeffs.discrepancy
+            )
+            for r in range(max(1, self.n_init))
+        ]
+        return FitContext(
+            store=store, array=array, coeffs=coeffs, k=self.k, inits=inits,
+            iters=self.iters, policy=self.policy, decay=self.decay,
+            epochs=self.epochs, mesh=self.mesh,
+        )
+
+    def fit(self, X, y=None, *, key: Array | None = None) -> "KernelKMeans":
+        """Fit on an in-memory array or a BlockStore; backend per `backend=`."""
+        key = key if key is not None else jax.random.PRNGKey(self.random_state)
+        name = self._choose_backend(X)
+        backend = get_backend(name)  # fail fast, before the coefficient fit
+        get_method(self.method)  # likewise: reject typos before streaming data
+        ctx = self._prepare(X, key, name)
+        out = backend(ctx)
+        self._finish(ctx.coeffs, out, name)
+        self._pf_state = None
+        return self
+
+    def fit_predict(self, X, *, key: Array | None = None) -> np.ndarray:
+        return self.fit(X, key=key).labels_
+
+    def partial_fit(self, X, *, key: Array | None = None) -> "KernelKMeans":
+        """Online face of the minibatch backend: one decayed (Z, g) update per
+        call. On a cold estimator the first call fits coefficients and seeds
+        centroids from that block; on a fitted or loaded estimator it
+        continues from the existing ClusterModel (fresh decayed stats, the
+        restored centroids as the assignment anchor). Either way, later calls
+        just embed + assign + update — O(block) forever."""
+        Xb = jnp.asarray(np.asarray(X, np.float32))
+        if self.model_ is None:
+            if Xb.shape[0] < self.l:
+                raise ValueError(
+                    f"partial_fit cold start needs the first block to hold at "
+                    f"least l={self.l} rows to fit coefficients, got "
+                    f"{Xb.shape[0]}; buffer a larger first block or lower l"
+                )
+            key = key if key is not None else jax.random.PRNGKey(self.random_state)
+            k_fit, k_seed = jax.random.split(key)
+            coeffs, pool = self._fit_coeffs_and_pool(
+                Xb[: self.landmark_sample], k_fit
+            )
+            centroids = kmeanspp_init(k_seed, pool, self.k, coeffs.discrepancy)
+            self._pf_state = (
+                jnp.zeros((self.k, coeffs.m), jnp.float32),
+                jnp.zeros((self.k,), jnp.float32),
+                0,
+            )
+        else:
+            coeffs, centroids = self.model_.coeffs, self.model_.centroids
+            if self._pf_state is None:  # warm start from fit()/load()
+                self._pf_state = (
+                    jnp.zeros((self.k, coeffs.m), jnp.float32),
+                    jnp.zeros((self.k,), jnp.float32),
+                    self.model_.meta.rows_seen,
+                )
+        Z, g, rows = self._pf_state
+        y = ops.apnc_embed_block_map(Xb, coeffs, policy=self.policy)
+        from repro.core.lloyd import assign_stats
+
+        Z_b, g_b, labels = assign_stats(
+            y, centroids, self.k, coeffs.discrepancy, policy=self.policy
+        )
+        Z = self.decay * Z + Z_b
+        g = self.decay * g + g_b
+        centroids = centroid_update(Z, g, centroids)
+        inertia = float(block_cost(y, centroids, coeffs.discrepancy))
+        rows += int(Xb.shape[0])
+        self._pf_state = (Z, g, rows)
+        out_meta = self._fit_meta(backend="minibatch", rows_seen=rows, n_init=1)
+        self.model_ = ClusterModel(
+            coeffs=coeffs, centroids=centroids,
+            inertia=jnp.asarray(inertia, jnp.float32), meta=out_meta,
+        )
+        self.labels_ = np.asarray(labels, np.int32)
+        self.inertia_ = inertia
+        self.n_iter_ = 0
+        self.backend_ = "minibatch"
+        return self
+
+    def _fit_meta(self, **kw) -> FitMeta:
+        return FitMeta(
+            k=self.k, method=self.method, kernel_name=self.kernel_.name,
+            l=self.l, m=self.m, t=self.t, q=self.q, iters_cap=self.iters,
+            decay=self.decay, epochs=self.epochs,
+            landmark_sample=self.landmark_sample, seed_sample=self.seed_sample,
+            block_rows=self.block_rows, random_state=self.random_state,
+            **kw,
+        )
+
+    def _finish(self, coeffs, out, backend_name: str) -> None:
+        meta = self._fit_meta(
+            backend=backend_name, iters=int(out.iters),
+            rows_seen=int(out.rows_seen), n_init=max(1, self.n_init),
+        )
+        self.model_ = ClusterModel(
+            coeffs=coeffs, centroids=jnp.asarray(out.centroids),
+            inertia=jnp.asarray(out.inertia, jnp.float32), meta=meta,
+        )
+        self.labels_ = np.asarray(out.labels, np.int32)
+        self.inertia_ = float(out.inertia)
+        self.n_iter_ = int(out.iters)
+        self.backend_ = backend_name
+
+    # ------------------------------------------------------------ inference
+
+    def _require_model(self) -> ClusterModel:
+        if self.model_ is None:
+            raise RuntimeError("estimator is not fitted; call fit() or load()")
+        return self.model_
+
+    @staticmethod
+    def _reject_sharded(store: BlockStore, op: str) -> None:
+        """A shard() of a store covers only a subset of global rows; a dense
+        (n,)-shaped answer would silently hold -1 for every unvisited row."""
+        covered = sum(store.rows_of(i) for i in range(store.num_blocks))
+        if covered != store.n:
+            raise ValueError(
+                f"{op} got a sharded BlockStore covering {covered} of "
+                f"{store.n} rows; run {op} per shard (each worker fills its "
+                "own global offsets) or pass the unsharded store"
+            )
+
+    def predict(self, X) -> np.ndarray:
+        """Nearest-centroid assignment of unseen points (array or BlockStore).
+        Blocked inputs stream through the double-buffered engine at the
+        policy's prefetch depth."""
+        model = self._require_model()
+        if isinstance(X, BlockStore):
+            from repro.stream.engine import map_reduce
+
+            self._reject_sharded(X, "predict")
+            labels = np.full(X.n, -1, dtype=np.int32)
+
+            def emit(i, out):
+                lo = X.row_offset(i)
+                labels[lo:lo + out.shape[0]] = np.asarray(out, np.int32)
+
+            map_reduce(
+                X,
+                lambda blk: ops.apnc_predict_block(  # labels only: no (Z, g)
+                    blk, model.coeffs, model.centroids, policy=self.policy
+                ),
+                lambda acc, _: acc, None,
+                prefetch=self.policy.prefetch, emit=emit,
+            )
+            return labels
+        return np.asarray(model.predict(X, policy=self.policy), np.int32)
+
+    def transform(self, X):
+        """APNC embedding Y = f(X). Arrays map to an (n, m) array; a BlockStore
+        maps to a host-staged BlockStore of embedded blocks (still O(block) on
+        device)."""
+        model = self._require_model()
+        if isinstance(X, BlockStore):
+            from repro.stream.lloyd import stream_embed
+
+            return stream_embed(X, model.coeffs, policy=self.policy)
+        from repro.core.kkmeans import apnc_embed
+
+        return apnc_embed(jnp.asarray(X, jnp.float32), model.coeffs, self.policy)
+
+    def score(self, X) -> float:
+        """Negative clustering inertia of X under the fitted centroids
+        (higher is better, sklearn convention)."""
+        model = self._require_model()
+        disc = model.discrepancy
+        if isinstance(X, BlockStore):
+            from repro.stream.engine import map_reduce
+
+            self._reject_sharded(X, "score")
+            total = map_reduce(
+                X,
+                lambda blk: block_cost(
+                    ops.apnc_embed_block_map(blk, model.coeffs, policy=self.policy),
+                    model.centroids, disc,
+                ),
+                lambda acc, c: acc + c, jnp.asarray(0.0),
+                prefetch=self.policy.prefetch,
+            )
+            return -float(total)
+        from repro.core.kkmeans import apnc_embed
+
+        Y = apnc_embed(jnp.asarray(X, jnp.float32), model.coeffs, self.policy)
+        return -float(block_cost(Y, model.centroids, disc))
+
+    # ---------------------------------------------------------- persistence
+
+    def save(self, ckpt_dir: str | Path, *, step: int = 0) -> Path:
+        """Persist the ClusterModel artifact (crash-atomic, elastic restore)."""
+        from repro.distributed.checkpoint import save_cluster_model
+
+        return save_cluster_model(ckpt_dir, self._require_model(), step=step)
+
+    @classmethod
+    def load(cls, ckpt_dir: str | Path, *, step: int | None = None,
+             policy: ComputePolicy | None = None) -> "KernelKMeans":
+        """Rebuild a serving-ready estimator from a persisted ClusterModel —
+        regardless of which backend fit it."""
+        from repro.distributed.checkpoint import load_cluster_model
+
+        model = load_cluster_model(ckpt_dir, step=step)
+        meta = model.meta
+        est = cls(
+            model.k, kernel=model.coeffs.kernel, method=meta.method,
+            backend=meta.backend if meta.backend != "unknown" else "auto",
+            # restore the recorded fit hyperparameters so a keyless refit on
+            # the same data reproduces the original fit (the kernel comes back
+            # fully resolved from the coefficients; legacy artifacts recorded
+            # none of these — fall back to shapes / constructor defaults)
+            l=meta.l or model.coeffs.l, m=meta.m or model.coeffs.R.shape[1],
+            t=meta.t, q=meta.q, iters=meta.iters_cap or 20,
+            n_init=max(1, meta.n_init), decay=meta.decay, epochs=meta.epochs,
+            landmark_sample=meta.landmark_sample or 4096,
+            seed_sample=meta.seed_sample or 1024,
+            block_rows=meta.block_rows or 4096,
+            random_state=meta.random_state, policy=policy,
+        )
+        est.kernel_ = model.coeffs.kernel
+        est.model_ = model
+        est.inertia_ = float(model.inertia)
+        est.n_iter_ = model.meta.iters
+        est.backend_ = model.meta.backend
+        return est

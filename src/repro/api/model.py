@@ -1,0 +1,85 @@
+"""ClusterModel: the one canonical artifact a fit produces.
+
+Every backend — local, shard_map, stream, minibatch — returns the same pytree:
+the (R, L) coefficient blocks of Property 4.2/4.3, the final centroids in
+embedding space, the achieved inertia, and static fit metadata. It is what the
+checkpoint layer persists (`distributed/checkpoint.save_cluster_model`), what
+the online assignment service loads, and what `KernelKMeans.predict/transform/
+score` consume — so a model fit by the stream backend serves byte-identically
+on the local backend and vice versa.
+
+Registered as a jax pytree: the array leaves (landmarks, R, centroids,
+inertia) flow through jit/shard_map; `meta` is static.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.core.apnc import APNCCoefficients, Discrepancy
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FitMeta:
+    """Static provenance of a fit — everything needed to audit or rebuild the
+    estimator that produced the model (hashable, so ClusterModel stays a valid
+    static-field pytree)."""
+
+    k: int = 0
+    backend: str = "unknown"  # which registered backend ran the clustering
+    method: str = "unknown"  # APNC instance: "nystrom" | "sd"
+    kernel_name: str = ""
+    iters: int = 0  # Lloyd iterations actually run (best restart)
+    rows_seen: int = 0  # total rows streamed/visited during clustering
+    n_init: int = 0  # restarts evaluated
+    l: int = 0  # landmark count (0 = unrecorded legacy artifact)
+    m: int = 0  # embedding dim per block (0 = unrecorded legacy artifact)
+    t: int | None = None  # APNC-SD subset size
+    q: int = 1  # ensemble blocks
+    iters_cap: int = 0  # Lloyd iteration budget (iters above = actually run)
+    decay: float = 0.9  # minibatch sufficient-stat decay
+    epochs: int = 1  # minibatch stream passes
+    landmark_sample: int = 0  # reservoir size for coefficient fitting
+    seed_sample: int = 0  # rows used for k-means++ seeding
+    block_rows: int = 0  # blocking used when wrapping in-memory arrays
+    random_state: int = 0  # default PRNG seed of the fitting estimator
+    version: int = 1  # schema version of the persisted artifact
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ClusterModel:
+    """A fitted embed-and-conquer clustering: coefficients + centroids +
+    inertia + fit metadata. The single artifact of `KernelKMeans.fit`."""
+
+    coeffs: APNCCoefficients
+    centroids: Array  # (k, m) in embedding space
+    # () sum of e(y_i, c_{pi(i)}). Full-data for every fit() backend (the
+    # streaming ones run a final full pass); for partial_fit the cost of the
+    # most recent block only — compare artifacts across regimes accordingly.
+    inertia: Array
+    meta: FitMeta = dataclasses.field(
+        metadata=dict(static=True), default_factory=FitMeta
+    )
+
+    @property
+    def k(self) -> int:
+        return int(self.centroids.shape[0])
+
+    @property
+    def m(self) -> int:  # embedding dimensionality
+        return int(self.centroids.shape[1])
+
+    @property
+    def discrepancy(self) -> Discrepancy:
+        return self.coeffs.discrepancy
+
+    def predict(self, X, *, policy=None) -> Array:
+        """Assign unseen points: embed then nearest centroid under e — the
+        online path of Property 4.4, independent of which backend fit us."""
+        from repro.core.kkmeans import predict as _predict
+
+        return _predict(X, self.coeffs, self.centroids, policy=policy)

@@ -1,0 +1,118 @@
+"""String-keyed registries: backends, kernels, APNC methods.
+
+The paper's point is one embedding definition with interchangeable execution
+regimes; the registries make that literal — `KernelKMeans(backend=..., kernel=
+..., method=...)` resolves every axis of variation by name, and downstream
+code (new execution engines, new kernels kappa, new coefficient fits) extends
+the estimator by registering, not by editing the facade.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from repro.core import nystrom, stable
+from repro.core.apnc import APNCCoefficients
+from repro.core.kernels_fn import Kernel
+
+Array = jax.Array
+
+# --------------------------------------------------------------- backends
+
+# A backend maps a FitContext (see api/backends.py) to a BackendFit.
+BACKENDS: dict[str, Callable] = {}
+
+
+def register_backend(name: str):
+    """Decorator: `@register_backend("local")` adds a clustering engine."""
+
+    def deco(fn):
+        BACKENDS[name] = fn
+        return fn
+
+    return deco
+
+
+def available_backends() -> list[str]:
+    return sorted(BACKENDS)
+
+
+def get_backend(name: str):
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {available_backends()}"
+        ) from None
+
+
+# ---------------------------------------------------------------- kernels
+
+# A kernel factory maps keyword params to a Kernel instance.
+KERNELS: dict[str, Callable[..., Kernel]] = {
+    "rbf": lambda **kw: Kernel("rbf", **kw),
+    "poly": lambda **kw: Kernel("poly", **kw),
+    "tanh": lambda **kw: Kernel("tanh", **kw),
+    "linear": lambda **kw: Kernel("linear", **kw),
+}
+
+
+def register_kernel(name: str, factory: Callable[..., Kernel] | None = None):
+    """Register a kernel factory; usable as decorator or plain call."""
+    if factory is not None:
+        KERNELS[name] = factory
+        return factory
+
+    def deco(fn):
+        KERNELS[name] = fn
+        return fn
+
+    return deco
+
+
+def resolve_kernel(kernel: str | Kernel, params: dict | None = None) -> Kernel:
+    """A Kernel instance passes through; a string resolves via the registry."""
+    if isinstance(kernel, Kernel):
+        if params:
+            raise ValueError("kernel_params= only applies to string kernel names")
+        return kernel
+    try:
+        factory = KERNELS[kernel]
+    except KeyError:
+        raise ValueError(
+            f"unknown kernel {kernel!r}; registered: {sorted(KERNELS)}"
+        ) from None
+    return factory(**(params or {}))
+
+
+# ---------------------------------------------------------------- methods
+
+# A method fits APNC coefficients: (key, X, kernel, *, l, m, t, q) -> coeffs.
+METHODS: dict[str, Callable[..., APNCCoefficients]] = {
+    "nystrom": lambda key, X, kernel, *, l, m, t=None, q=1: nystrom.fit(
+        key, X, kernel, l=l, m=m, q=q
+    ),
+    "sd": lambda key, X, kernel, *, l, m, t=None, q=1: stable.fit(
+        key, X, kernel, l=l, m=m, t=t, q=q
+    ),
+}
+
+
+def register_method(name: str):
+    """Decorator: add an APNC coefficient-fitting method."""
+
+    def deco(fn):
+        METHODS[name] = fn
+        return fn
+
+    return deco
+
+
+def get_method(name: str):
+    try:
+        return METHODS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown APNC method {name!r}; registered: {sorted(METHODS)}"
+        ) from None

@@ -1,10 +1,16 @@
 """Core library: the paper's contribution (APNC embeddings + scalable kernel k-means).
 
-Public API:
+The PUBLIC entry point is `repro.api`: the unified `KernelKMeans` estimator
+(fit / partial_fit / predict / transform / score / save / load) dispatching to
+interchangeable backends ("local", "shard_map", "stream", "minibatch") and
+producing one canonical `ClusterModel` artifact, with execution knobs in a
+single `ComputePolicy`. The functions below are the algorithmic layer the
+facade's backends are built on — stable, but driver-shaped:
+
     Kernel, make_kernel, self_tuned_rbf      -- kernel functions kappa(.,.)
     APNCCoefficients, embed, assign          -- the APNC family (Section 4)
     nystrom.fit / stable.fit                 -- the two instances (Sections 6-7)
-    APNCConfig, fit_predict, predict         -- single-program drivers
+    APNCConfig, fit_predict, predict         -- single-program drivers (shims)
     distributed_fit_predict                  -- the MapReduce->shard_map programs
     lloyd                                    -- Lloyd-on-embeddings (Algorithm 2)
     baselines                                -- exact KKM / ApproxKKM / RFF / SV-RFF / 2-stage

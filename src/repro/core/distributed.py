@@ -26,10 +26,10 @@ from repro.compat import shard_map
 from repro.core.apnc import (
     APNCCoefficients,
     Discrepancy,
-    embed,
     pairwise_discrepancy,
 )
 from repro.core.lloyd import assign_stats, centroid_update
+from repro.policy import ComputePolicy, resolve_policy
 
 Array = jax.Array
 
@@ -46,19 +46,21 @@ def shard_rows(mesh: Mesh) -> NamedSharding:
 
 
 def distributed_embed(
-    mesh: Mesh, X: Array, coeffs: APNCCoefficients, *, use_pallas: bool = False
+    mesh: Mesh, X: Array, coeffs: APNCCoefficients, *,
+    policy: ComputePolicy | None = None, use_pallas: bool | None = None,
 ) -> Array:
     """Algorithm 1 on the mesh. X is row-sharded; (R, L) replicated. Map-only:
     the lowered program contains no collectives (asserted in tests)."""
     axes = data_axes_of(mesh)
+    pol = resolve_policy(policy, use_pallas, owner="distributed_embed: ")
 
     def block(x_shard, landmarks, R):
-        c = APNCCoefficients(landmarks, R, coeffs.kernel, coeffs.discrepancy)
-        if use_pallas:
-            from repro.kernels import ops
+        # route through the single policy dispatch point so pallas AND
+        # precision behave exactly as on the local/stream paths
+        from repro.core.kkmeans import apnc_embed
 
-            return ops.apnc_embed(x_shard, c)
-        return embed(x_shard, c)
+        c = APNCCoefficients(landmarks, R, coeffs.kernel, coeffs.discrepancy)
+        return apnc_embed(x_shard, c, pol)
 
     fn = shard_map(
         block,
@@ -69,7 +71,6 @@ def distributed_embed(
     return fn(X, coeffs.landmarks, coeffs.R)
 
 
-@partial(jax.jit, static_argnames=("mesh", "k", "discrepancy", "iters", "use_pallas"))
 def distributed_lloyd(
     mesh: Mesh,
     Y: Array,
@@ -78,7 +79,8 @@ def distributed_lloyd(
     k: int,
     discrepancy: Discrepancy,
     iters: int = 20,
-    use_pallas: bool = False,
+    policy: ComputePolicy | None = None,
+    use_pallas: bool | None = None,
 ) -> tuple[Array, Array]:
     """Algorithm 2 on the mesh. Per iteration, each shard:
       map:     assign its rows to the nearest centroid under e  (Eq. 4)
@@ -88,11 +90,33 @@ def distributed_lloyd(
 
     Returns (labels row-sharded, final centroids replicated).
     """
+    pallas = resolve_policy(
+        policy, use_pallas, owner="distributed_lloyd: "
+    ).resolve_pallas()
+    return _distributed_lloyd(
+        mesh, Y, init_centroids, k=k, discrepancy=discrepancy, iters=iters,
+        pallas=pallas,
+    )
+
+
+@partial(jax.jit, static_argnames=("mesh", "k", "discrepancy", "iters", "pallas"))
+def _distributed_lloyd(
+    mesh: Mesh,
+    Y: Array,
+    init_centroids: Array,
+    *,
+    k: int,
+    discrepancy: Discrepancy,
+    iters: int,
+    pallas: bool,
+) -> tuple[Array, Array]:
     axes = data_axes_of(mesh)
 
     def shard_fn(y_shard, c0):
         def body(_, c):
-            Z, g, _ = assign_stats(y_shard, c, k, discrepancy, use_pallas=use_pallas)
+            Z, g, _ = assign_stats(
+                y_shard, c, k, discrepancy, policy=ComputePolicy(pallas=pallas)
+            )
             Z = jax.lax.psum(Z, axes)
             g = jax.lax.psum(g, axes)
             return centroid_update(Z, g, c)
@@ -142,7 +166,7 @@ def distributed_fit_predict(
     # Landmark sample + coefficient fit: small, replicated everywhere.
     coeffs = fit_coefficients(k_land, X, kernel, cfg)
 
-    Y = distributed_embed(mesh, X, coeffs, use_pallas=cfg.use_pallas)
+    Y = distributed_embed(mesh, X, coeffs, policy=cfg.compute)
 
     # Seed on a bounded global sample so seeding cost is O(sample * k), not O(n k).
     sample = sample_rows_global(k_seed, Y, min(Y.shape[0], 16 * k))
@@ -150,6 +174,6 @@ def distributed_fit_predict(
 
     labels, centroids = distributed_lloyd(
         mesh, Y, c0, k=k, discrepancy=coeffs.discrepancy, iters=cfg.iters,
-        use_pallas=cfg.use_pallas,
+        policy=cfg.compute,
     )
     return labels, centroids, coeffs

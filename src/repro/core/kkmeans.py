@@ -1,10 +1,15 @@
 """Top-level drivers: fit an APNC embedding then cluster it (the paper's two-phase
 pipeline), single-program version. The distributed version lives in distributed.py
 and reuses the same fit functions (coefficients are tiny and mesh-replicated).
+
+These are now thin shims over the unified estimator layer (`repro.api`): the
+facade owns backend dispatch and the ClusterModel artifact; these functions
+keep the original call shape for existing call sites.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Literal
 
 import jax
@@ -14,6 +19,7 @@ from repro.core import nystrom, stable
 from repro.core.apnc import APNCCoefficients, embed
 from repro.core.kernels_fn import Kernel
 from repro.core.lloyd import LloydResult, lloyd
+from repro.policy import ComputePolicy, as_policy, resolve_policy
 
 Array = jax.Array
 Method = Literal["nystrom", "sd"]
@@ -21,7 +27,11 @@ Method = Literal["nystrom", "sd"]
 
 @dataclasses.dataclass(frozen=True)
 class APNCConfig:
-    """Hyperparameters of the paper's experiments (Section 9)."""
+    """Hyperparameters of the paper's experiments (Section 9).
+
+    Execution knobs live in `policy` (a ComputePolicy); the old `use_pallas`
+    boolean is a deprecated alias for policy=ComputePolicy(pallas=...).
+    """
 
     method: Method = "nystrom"
     l: int = 300  # landmark sample size
@@ -30,7 +40,25 @@ class APNCConfig:
     q: int = 1  # number of R blocks (ensemble)
     iters: int = 20  # Lloyd cap; the paper fixes 20
     n_init: int = 4  # k-means++ restarts; lowest-inertia run wins
-    use_pallas: bool = False  # route hot loops through the Pallas kernels
+    use_pallas: bool | None = None  # DEPRECATED: use policy=
+    policy: ComputePolicy | None = None
+
+    def __post_init__(self):
+        if self.use_pallas is not None:
+            warnings.warn(
+                "APNCConfig.use_pallas is deprecated; pass "
+                "policy=ComputePolicy(pallas=...) instead",
+                DeprecationWarning, stacklevel=3,
+            )
+
+    @property
+    def compute(self) -> ComputePolicy:
+        """The effective execution policy (folds in the deprecated flag)."""
+        if self.policy is not None:
+            return self.policy
+        if self.use_pallas is not None:
+            return ComputePolicy(pallas=bool(self.use_pallas))
+        return ComputePolicy()
 
 
 def fit_coefficients(key: Array, X: Array, kernel: Kernel, cfg: APNCConfig) -> APNCCoefficients:
@@ -41,11 +69,22 @@ def fit_coefficients(key: Array, X: Array, kernel: Kernel, cfg: APNCConfig) -> A
     raise ValueError(f"unknown APNC method {cfg.method!r}")
 
 
-def apnc_embed(X: Array, coeffs: APNCCoefficients, use_pallas: bool = False) -> Array:
-    if use_pallas:
+def apnc_embed(
+    X: Array, coeffs: APNCCoefficients, policy: ComputePolicy | bool | None = None
+) -> Array:
+    """Policy-routed embedding dispatch: Pallas kernel or jnp reference, with
+    optional bf16 compute (f32 out). A legacy positional bool still works."""
+    pol = as_policy(policy)
+    if pol.resolve_pallas():
         from repro.kernels import ops  # local import: kernels are optional at runtime
 
         return ops.apnc_embed(X, coeffs)
+    if pol.precision == "bf16":
+        c16 = APNCCoefficients(
+            coeffs.landmarks.astype(jnp.bfloat16), coeffs.R.astype(jnp.bfloat16),
+            coeffs.kernel, coeffs.discrepancy,
+        )
+        return embed(X.astype(jnp.bfloat16), c16).astype(jnp.float32)
     return embed(X, coeffs)
 
 
@@ -61,20 +100,29 @@ def fit_predict(
     cfg = cfg or APNCConfig()
     k_fit, k_cluster = jax.random.split(key)
     coeffs = fit_coefficients(k_fit, X, kernel, cfg)
-    Y = apnc_embed(X, coeffs, cfg.use_pallas)
+    Y = apnc_embed(X, coeffs, cfg.compute)
     best = None
     for r in range(max(1, cfg.n_init)):  # restarts: kernel k-means is init-sensitive
         res = lloyd(Y, k, discrepancy=coeffs.discrepancy, iters=cfg.iters,
-                    key=jax.random.fold_in(k_cluster, r))
+                    key=jax.random.fold_in(k_cluster, r), policy=cfg.compute)
         if best is None or float(res.inertia) < float(best.inertia):
             best = res
     return best, coeffs
 
 
-def predict(X: Array, coeffs: APNCCoefficients, centroids: Array, use_pallas: bool = False) -> Array:
+def predict(
+    X: Array,
+    coeffs: APNCCoefficients,
+    centroids: Array,
+    use_pallas: bool | None = None,
+    *,
+    policy: ComputePolicy | None = None,
+) -> Array:
     """Assign unseen points: embed then nearest centroid under e — the online path
-    a serving system uses (Property 4.4)."""
+    a serving system uses (Property 4.4). Routing resolves through the same
+    ComputePolicy as fit_predict (use_pallas= is a deprecated alias)."""
     from repro.core.apnc import assign
 
-    Y = apnc_embed(X, coeffs, use_pallas)
+    pol = resolve_policy(policy, use_pallas, owner="core.kkmeans.predict: ")
+    Y = apnc_embed(X, coeffs, pol)
     return assign(Y, centroids, coeffs.discrepancy)

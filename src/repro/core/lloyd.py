@@ -12,14 +12,24 @@ Design notes:
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.apnc import Discrepancy, pairwise_discrepancy, sufficient_stats
+from repro.policy import ComputePolicy, as_policy
 
 Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("discrepancy",))
+def block_cost(Y: Array, centroids: Array, discrepancy: Discrepancy) -> Array:
+    """Sum of min e(y_i, c) over a row batch — the inertia contribution of one
+    block. The ONE definition every driver (local, shard_map, stream,
+    estimator.score/partial_fit) reports inertia with."""
+    return jnp.sum(jnp.min(pairwise_discrepancy(Y, centroids, discrepancy), axis=-1))
 
 
 class LloydResult(NamedTuple):
@@ -39,11 +49,12 @@ def centroid_update(Z: Array, g: Array, prev: Array) -> Array:
 
 def assign_stats(
     Y: Array, centroids: Array, k: int, discrepancy: Discrepancy,
-    *, use_pallas: bool = False,
+    *, policy: ComputePolicy | bool | None = None,
 ) -> tuple[Array, Array, Array]:
     """The map + combine step shared by every Lloyd variant: nearest-centroid
-    labels under e plus the (Z, g) sufficient statistics for one row batch."""
-    if use_pallas:
+    labels under e plus the (Z, g) sufficient statistics for one row batch.
+    `policy` routes the fused kernel (a legacy bool is accepted, deprecated)."""
+    if as_policy(policy).resolve_pallas():
         from repro.kernels import ops
 
         Z, g, labels = ops.apnc_assign(Y, centroids, discrepancy)
@@ -85,11 +96,13 @@ def lloyd(
     key: Array | None = None,
     init: Array | None = None,
     tol: float = 0.0,
+    policy: ComputePolicy | None = None,
 ) -> LloydResult:
     """Run `iters` Lloyd iterations of Algorithm 2 on embeddings Y (n, m).
 
     Stops early when the label vector stops changing (tol == 0 exact-fixed-point)
     — the paper fixes 20 iterations in Section 9, which is our default cap.
+    `policy` routes the per-iteration assignment like every other Lloyd variant.
     """
     if init is None:
         if key is None:
@@ -98,7 +111,7 @@ def lloyd(
 
     def body(carry):
         i, centroids, labels, _ = carry
-        Z, g, new_labels = assign_stats(Y, centroids, k, discrepancy)
+        Z, g, new_labels = assign_stats(Y, centroids, k, discrepancy, policy=policy)
         new_centroids = centroid_update(Z, g, centroids)
         changed = jnp.any(new_labels != labels)
         return i + 1, new_centroids, new_labels, changed
@@ -109,7 +122,11 @@ def lloyd(
 
     n = Y.shape[0]
     state = (jnp.asarray(0), init, jnp.full((n,), -1, jnp.int32), jnp.asarray(True))
-    it, centroids, labels, _ = jax.lax.while_loop(cond, body, state)
-    D = pairwise_discrepancy(Y, centroids, discrepancy)
-    inertia = jnp.sum(jnp.min(D, axis=-1))
-    return LloydResult(labels.astype(jnp.int32), centroids, inertia, it)
+    it, centroids, _, _ = jax.lax.while_loop(cond, body, state)
+    # Labels AND inertia under the FINAL centroids (the loop's labels lag one
+    # update), routed through the SAME policy as the in-loop assignments —
+    # mirrors the streaming variants' final pass, so a budget-capped (or
+    # Pallas-routed) run still matches ooc_lloyd label-for-label.
+    _, _, labels = assign_stats(Y, centroids, k, discrepancy, policy=policy)
+    inertia = block_cost(Y, centroids, discrepancy)
+    return LloydResult(labels, centroids, inertia, it)

@@ -146,28 +146,38 @@ def restore(
     return manifest["step"], out
 
 
-def save_clustering_model(ckpt_dir: str | Path, coeffs, centroids, *, step: int = 0) -> Path:
-    """Persist a fitted embed-and-conquer model: the (R, L) coefficient arrays
-    plus final centroids, with the static kernel/discrepancy config in the
+def save_cluster_model(ckpt_dir: str | Path, model, *, step: int = 0) -> Path:
+    """Persist the canonical `repro.api.ClusterModel` artifact: the (R, L)
+    coefficient arrays plus final centroids as npz trees, with the static
+    kernel/discrepancy config, achieved inertia and fit metadata in the
     manifest meta — everything `repro.launch.cluster_serve` needs to assign
-    unseen points online."""
+    unseen points online, regardless of which backend fit the model."""
     import dataclasses
 
+    import math
+
     trees = {
-        "coeffs": {"landmarks": coeffs.landmarks, "R": coeffs.R},
-        "centroids": {"centroids": centroids},
+        "coeffs": {"landmarks": model.coeffs.landmarks, "R": model.coeffs.R},
+        "centroids": {"centroids": model.centroids},
     }
+    inertia = float(model.inertia)
     meta = {
         "clustering": {
-            "kernel": dataclasses.asdict(coeffs.kernel),
-            "discrepancy": coeffs.discrepancy,
+            "kernel": dataclasses.asdict(model.coeffs.kernel),
+            "discrepancy": model.coeffs.discrepancy,
+            # None, not NaN/Infinity: the manifest must stay strict-JSON parseable
+            "inertia": inertia if math.isfinite(inertia) else None,
+            "fit": dataclasses.asdict(model.meta),
         }
     }
     return save(ckpt_dir, step, trees, extra_meta=meta)
 
 
-def load_clustering_model(ckpt_dir: str | Path, *, step: int | None = None):
-    """Inverse of save_clustering_model: returns (APNCCoefficients, centroids)."""
+def load_cluster_model(ckpt_dir: str | Path, *, step: int | None = None):
+    """Inverse of save_cluster_model: returns a `repro.api.ClusterModel`."""
+    import jax.numpy as jnp
+
+    from repro.api.model import ClusterModel, FitMeta
     from repro.core.apnc import APNCCoefficients
     from repro.core.kernels_fn import Kernel
 
@@ -197,7 +207,37 @@ def load_clustering_model(ckpt_dir: str | Path, *, step: int | None = None):
         kernel=Kernel(**meta["kernel"]),
         discrepancy=meta["discrepancy"],
     )
-    return coeffs, out["centroids"]["centroids"]
+    fit_meta = FitMeta(**meta["fit"]) if "fit" in meta else FitMeta()
+    raw_inertia = meta.get("inertia")
+    return ClusterModel(
+        coeffs=coeffs,
+        centroids=out["centroids"]["centroids"],
+        inertia=jnp.asarray(
+            float("nan") if raw_inertia is None else raw_inertia, jnp.float32
+        ),
+        meta=fit_meta,
+    )
+
+
+def save_clustering_model(ckpt_dir: str | Path, coeffs, centroids, *, step: int = 0) -> Path:
+    """Legacy shim over save_cluster_model for (coeffs, centroids) call sites."""
+    import jax.numpy as jnp
+
+    from repro.api.model import ClusterModel, FitMeta
+
+    model = ClusterModel(
+        coeffs=coeffs,
+        centroids=jnp.asarray(centroids),
+        inertia=jnp.asarray(float("nan"), jnp.float32),
+        meta=FitMeta(k=int(centroids.shape[0]), kernel_name=coeffs.kernel.name),
+    )
+    return save_cluster_model(ckpt_dir, model, step=step)
+
+
+def load_clustering_model(ckpt_dir: str | Path, *, step: int | None = None):
+    """Legacy shim over load_cluster_model: returns (APNCCoefficients, centroids)."""
+    model = load_cluster_model(ckpt_dir, step=step)
+    return model.coeffs, model.centroids
 
 
 class AsyncCheckpointer:

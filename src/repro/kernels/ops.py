@@ -15,6 +15,7 @@ from repro.core.apnc import APNCCoefficients
 from repro.core.kernels_fn import Kernel
 from repro.kernels import apnc_assign as _assign
 from repro.kernels import apnc_embed as _embed
+from repro.policy import ComputePolicy, resolve_policy
 
 Array = jax.Array
 
@@ -106,28 +107,66 @@ def apnc_assign(
     return _assign_padded(Y, C, discrepancy, bn_eff, interpret)
 
 
-@partial(jax.jit, static_argnames=("use_pallas",))
-def apnc_embed_block_map(x: Array, coeffs: APNCCoefficients, *, use_pallas: bool = False) -> Array:
-    """Block-shaped embedding entry for the stream engine: one jit'd dispatch
-    per (block_rows, d) block, routed through the Pallas kernel on demand."""
+@partial(jax.jit, static_argnames=("policy",))
+def _embed_block_map(x: Array, coeffs: APNCCoefficients, policy: ComputePolicy) -> Array:
     from repro.core.kkmeans import apnc_embed as _dispatch  # single routing point
 
-    return _dispatch(x, coeffs, use_pallas)
+    return _dispatch(x, coeffs, policy)
 
 
-@partial(jax.jit, static_argnames=("use_pallas",))
+def apnc_embed_block_map(
+    x: Array, coeffs: APNCCoefficients, *,
+    policy: ComputePolicy | None = None, use_pallas: bool | None = None,
+) -> Array:
+    """Block-shaped embedding entry for the stream engine: one jit'd dispatch
+    per (block_rows, d) block, routed per ComputePolicy (use_pallas= is a
+    deprecated alias)."""
+    pol = resolve_policy(policy, use_pallas, owner="ops.apnc_embed_block_map: ")
+    return _embed_block_map(x, coeffs, pol)
+
+
+@partial(jax.jit, static_argnames=("policy",))
+def _embed_assign_block(
+    x: Array, coeffs: APNCCoefficients, centroids: Array, policy: ComputePolicy
+) -> tuple[Array, Array, Array]:
+    from repro.core.lloyd import assign_stats
+
+    y = _embed_block_map(x, coeffs, policy)
+    return assign_stats(
+        y, centroids, centroids.shape[0], coeffs.discrepancy, policy=policy
+    )
+
+
 def apnc_embed_assign_block(
-    x: Array, coeffs: APNCCoefficients, centroids: Array, *, use_pallas: bool = False
+    x: Array, coeffs: APNCCoefficients, centroids: Array, *,
+    policy: ComputePolicy | None = None, use_pallas: bool | None = None,
 ) -> tuple[Array, Array, Array]:
     """Fused block map for streaming Lloyd and the assignment service: embed a
     raw (block_rows, d) block and reduce it to (Z, g, labels) against the
     current centroids — one device dispatch, nothing but the block resident."""
-    from repro.core.lloyd import assign_stats
+    pol = resolve_policy(policy, use_pallas, owner="ops.apnc_embed_assign_block: ")
+    return _embed_assign_block(x, coeffs, centroids, pol)
 
-    y = apnc_embed_block_map(x, coeffs, use_pallas=use_pallas)
-    return assign_stats(
-        y, centroids, centroids.shape[0], coeffs.discrepancy, use_pallas=use_pallas
-    )
+
+@partial(jax.jit, static_argnames=("policy",))
+def _embed_predict_block(
+    x: Array, coeffs: APNCCoefficients, centroids: Array, policy: ComputePolicy
+) -> Array:
+    from repro.core.apnc import assign
+
+    y = _embed_block_map(x, coeffs, policy)
+    return assign(y, centroids, coeffs.discrepancy)
+
+
+def apnc_predict_block(
+    x: Array, coeffs: APNCCoefficients, centroids: Array, *,
+    policy: ComputePolicy | None = None,
+) -> Array:
+    """Labels-ONLY fused block map for serving: embed + nearest-centroid in
+    one jit'd dispatch, without building the (Z, g) sufficient statistics the
+    training maps need — the cheapest per-request path."""
+    pol = resolve_policy(policy, owner="ops.apnc_predict_block: ")
+    return _embed_predict_block(x, coeffs, centroids, pol)
 
 
 def flash_attention(

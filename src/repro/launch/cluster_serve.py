@@ -3,13 +3,14 @@
     PYTHONPATH=src python -m repro.launch.cluster_serve --requests 10000 \
         --micro-batch 256
 
-Loads a fitted (coefficients, centroids) clustering model — training one on
-blocked synthetic data first if no --ckpt is given, then round-tripping it
-through `distributed/checkpoint.py` so the served model always comes off disk
-(the train->serve loop) — and serves `predict` over a replayed request stream
-with micro-batching: up to B requests (or a deadline) are collected and
-assigned in ONE fused embed+assign dispatch. Reports p50/p99 per-request
-latency and throughput, then verifies every served label against
+Loads a fitted `ClusterModel` — training one through the unified
+`repro.api.KernelKMeans` estimator on blocked synthetic data first if no
+--ckpt is given, then round-tripping it through
+`distributed/checkpoint.save_cluster_model` so the served model always comes
+off disk (the train->serve loop) — and serves `predict` over a replayed
+request stream with micro-batching: up to B requests (or a deadline) are
+collected and assigned in ONE fused embed+assign dispatch. Reports p50/p99
+per-request latency and throughput, then verifies every served label against
 `core.kkmeans.predict` on the replayed log.
 """
 from __future__ import annotations
@@ -22,44 +23,49 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.kernels_fn import Kernel
-from repro.core.kkmeans import APNCConfig, predict
-from repro.distributed.checkpoint import load_clustering_model, save_clustering_model
+from repro.api import ComputePolicy, KernelKMeans
+from repro.core.kkmeans import predict
+from repro.distributed.checkpoint import load_cluster_model
 from repro.kernels import ops
 from repro.stream.microbatch import MicroBatcher
+
+
+def _policy_of(args) -> ComputePolicy:
+    # --use-pallas forces the kernels on; default keeps the auto routing
+    return ComputePolicy(pallas=True if args.use_pallas else None)
 
 
 def _fit_and_save(args, ckpt_dir: str) -> None:
     """Train a clustering model on a blocked synthetic stream and persist it."""
     from repro.data.synthetic import gaussian_blobs_blocks
-    from repro.stream.lloyd import stream_fit_predict
 
     X_store, _ = gaussian_blobs_blocks(
         args.seed, args.n_fit, args.d, args.k,
         block_rows=args.block_rows, separation=4.0,
     )
-    kern = Kernel("rbf", gamma=1.0 / args.d)
-    cfg = APNCConfig(method=args.method, l=args.l, m=args.m,
-                     iters=args.iters, use_pallas=args.use_pallas)
-    res, coeffs = stream_fit_predict(
-        jax.random.PRNGKey(args.seed + 1), X_store, kern, args.k, cfg, mode="exact",
+    est = KernelKMeans(
+        args.k, kernel="rbf", kernel_params={"gamma": 1.0 / args.d},
+        method=args.method, backend="stream", l=args.l, m=args.m,
+        iters=args.iters, policy=_policy_of(args),
     )
+    est.fit(X_store, key=jax.random.PRNGKey(args.seed + 1))
     print(f"[cluster-serve] fit: n={args.n_fit} blocks of {args.block_rows}, "
-          f"{res.iters} Lloyd iters, inertia {res.inertia:.1f}")
-    save_clustering_model(ckpt_dir, coeffs, res.centroids)
+          f"backend={est.backend_}, {est.n_iter_} Lloyd iters, "
+          f"inertia {est.inertia_:.1f}")
+    est.save(ckpt_dir)
 
 
-def make_process_fn(coeffs, centroids, *, max_batch: int, use_pallas: bool):
+def make_process_fn(model, *, max_batch: int, policy: ComputePolicy):
     """One fused embed+assign dispatch per micro-batch. Batches are padded to
     max_batch so the service compiles exactly one program (stable latency)."""
-    centroids = jnp.asarray(centroids)
+    centroids = jnp.asarray(model.centroids)
 
     def process(X: np.ndarray) -> np.ndarray:
         b = X.shape[0]
         if b < max_batch:
             X = np.pad(X, ((0, max_batch - b), (0, 0)))
-        _, _, labels = ops.apnc_embed_assign_block(
-            jnp.asarray(X), coeffs, centroids, use_pallas=use_pallas
+        labels = ops.apnc_predict_block(  # labels only: no (Z, g) build
+            jnp.asarray(X), model.coeffs, centroids, policy=policy
         )
         return np.asarray(labels)[:b]
 
@@ -90,20 +96,19 @@ def main(argv=None):
         ckpt_dir = args.ckpt or tmp
         if not args.ckpt:
             _fit_and_save(args, ckpt_dir)
-        coeffs, centroids = load_clustering_model(ckpt_dir)
+        model = load_cluster_model(ckpt_dir)
+    policy = _policy_of(args)
 
     # Request log: held-out rows from the fit distribution.
     from repro.data.synthetic import gaussian_blobs_blocks
 
     req_store, _ = gaussian_blobs_blocks(
-        args.seed + 7919, args.requests, coeffs.landmarks.shape[-1], args.k,
+        args.seed + 7919, args.requests, model.coeffs.landmarks.shape[-1], args.k,
         block_rows=max(args.requests, 1), separation=4.0,
     )
     X_req = req_store.get(0)
 
-    process = make_process_fn(
-        coeffs, centroids, max_batch=args.micro_batch, use_pallas=args.use_pallas
-    )
+    process = make_process_fn(model, max_batch=args.micro_batch, policy=policy)
     process(X_req[: args.micro_batch])  # warm the compile outside the timed loop
 
     batcher = MicroBatcher(
@@ -134,8 +139,8 @@ def main(argv=None):
     assert order == list(range(args.requests)), "micro-batcher reordered requests"
 
     # Replay the request log through the reference path.
-    ref = np.asarray(predict(jnp.asarray(X_req), coeffs, centroids,
-                             use_pallas=args.use_pallas))
+    ref = np.asarray(predict(jnp.asarray(X_req), model.coeffs, model.centroids,
+                             policy=policy))
     mismatches = int(np.sum(served != ref))
     p50, p99 = np.percentile(lat_ms, 50), np.percentile(lat_ms, 99)
     print(f"[cluster-serve] {args.requests} requests, micro-batch {args.micro_batch} "

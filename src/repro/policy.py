@@ -1,0 +1,88 @@
+"""ComputePolicy: one object for every "how should this math execute" knob.
+
+Before this module existed, a raw ``use_pallas: bool`` was threaded through
+~20 call sites across core/, stream/ and kernels/ops.py, and the single-program
+and online paths could silently disagree (APNCConfig.use_pallas governed
+fit_predict while predict took its own defaulted-False flag). Every driver now
+resolves execution through one frozen, hashable dataclass — hashable so it can
+ride through ``jax.jit`` as a static argument unchanged.
+
+The old ``use_pallas=`` keywords survive as deprecated shims: passing them
+emits a DeprecationWarning and folds the boolean into a ComputePolicy here, in
+exactly one place.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Literal
+
+import jax
+
+Precision = Literal["f32", "bf16"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputePolicy:
+    """Execution policy shared by every backend and driver.
+
+    pallas:    route the APNC hot loops (embed / assign) through the Pallas
+               kernels. None = auto: Pallas on TPU, jnp reference elsewhere.
+    precision: compute precision for the jnp embedding path ("f32" | "bf16");
+               outputs are always materialized as f32. The Pallas kernels
+               accumulate in f32 regardless.
+    prefetch:  block prefetch depth of the stream engine (0 = synchronous).
+    """
+
+    pallas: bool | None = None
+    precision: Precision = "f32"
+    prefetch: int = 2
+
+    def __post_init__(self):
+        if self.precision not in ("f32", "bf16"):
+            raise ValueError(f"unknown precision {self.precision!r}")
+        if self.prefetch < 0:
+            raise ValueError(f"prefetch must be >= 0, got {self.prefetch}")
+
+    def resolve_pallas(self) -> bool:
+        """Concrete kernel routing: explicit wins, else Pallas on TPU only."""
+        if self.pallas is None:
+            return jax.default_backend() == "tpu"
+        return bool(self.pallas)
+
+
+def as_policy(policy: "ComputePolicy | bool | None") -> ComputePolicy:
+    """Coerce legacy values: None -> defaults, bool -> pallas flag (deprecated)."""
+    if policy is None:
+        return ComputePolicy()
+    if isinstance(policy, ComputePolicy):
+        return policy
+    if isinstance(policy, (bool, int)):
+        warnings.warn(
+            "passing a bare use_pallas bool is deprecated; pass "
+            "policy=ComputePolicy(pallas=...) instead",
+            DeprecationWarning, stacklevel=3,
+        )
+        return ComputePolicy(pallas=bool(policy))
+    raise TypeError(f"expected ComputePolicy, bool or None, got {type(policy)!r}")
+
+
+def resolve_policy(
+    policy: ComputePolicy | None = None,
+    use_pallas: bool | None = None,
+    *,
+    owner: str = "",
+) -> ComputePolicy:
+    """The single shim point for the deprecated ``use_pallas=`` keywords.
+
+    `use_pallas` wins over `policy.pallas` when both are given (the explicit
+    legacy keyword is what old call sites meant), but warns either way.
+    """
+    if use_pallas is not None:
+        warnings.warn(
+            f"{owner}use_pallas= is deprecated; pass "
+            "policy=ComputePolicy(pallas=...) instead",
+            DeprecationWarning, stacklevel=3,
+        )
+        return dataclasses.replace(policy or ComputePolicy(), pallas=bool(use_pallas))
+    return policy if policy is not None else ComputePolicy()

@@ -17,6 +17,10 @@ fly, fused with assignment — the honest out-of-core path where not even the
 embedding Y is ever materialized) or precomputed embeddings Y (pass
 `discrepancy=`; see `stream_embed` for staging Y blocks to host RAM once when
 host memory allows — it saves re-embedding every iteration).
+
+Execution (Pallas routing, prefetch depth) resolves through one ComputePolicy;
+the old `use_pallas=` keyword is a deprecated alias. These drivers back the
+"stream" and "minibatch" backends of `repro.api.KernelKMeans`.
 """
 from __future__ import annotations
 
@@ -29,6 +33,7 @@ import numpy as np
 from repro.core.apnc import APNCCoefficients, Discrepancy
 from repro.core.lloyd import centroid_update, kmeanspp_init
 from repro.kernels import ops
+from repro.policy import ComputePolicy, resolve_policy
 from repro.stream.blockstore import BlockStore, WritableBlockStore
 from repro.stream.engine import map_reduce
 from repro.stream.reservoir import reservoir_sample
@@ -44,14 +49,14 @@ class StreamLloydResult(NamedTuple):
     rows_seen: int  # total rows streamed (epochs * n for exact)
 
 
-def _block_map(coeffs, discrepancy, centroids_cell, use_pallas):
+def _block_map(coeffs, discrepancy, centroids_cell, pol: ComputePolicy):
     """jit'd (Z, g, labels) map for one block; embeds first when coeffs given.
     `centroids_cell` is a 1-element list so minibatch can swap centroids
     between blocks without retracing."""
     if coeffs is not None:
         def fn(x):
             return ops.apnc_embed_assign_block(
-                x, coeffs, centroids_cell[0], use_pallas=use_pallas
+                x, coeffs, centroids_cell[0], policy=pol
             )
         return fn
 
@@ -59,7 +64,7 @@ def _block_map(coeffs, discrepancy, centroids_cell, use_pallas):
 
     @jax.jit
     def assign(y, c):
-        return assign_stats(y, c, c.shape[0], discrepancy, use_pallas=use_pallas)
+        return assign_stats(y, c, c.shape[0], discrepancy, policy=pol)
 
     return lambda y: assign(y, centroids_cell[0])
 
@@ -68,12 +73,15 @@ def stream_embed(
     store: BlockStore,
     coeffs: APNCCoefficients,
     *,
-    use_pallas: bool = False,
-    prefetch: int = 2,
+    policy: ComputePolicy | None = None,
+    use_pallas: bool | None = None,
+    prefetch: int | None = None,
 ) -> WritableBlockStore:
     """Algorithm 1 over a block stream: X blocks in, Y blocks staged to host
     RAM (O(n*m) host, still O(block) device). Use when host memory fits Y and
     several Lloyd iterations will reuse it."""
+    pol = resolve_policy(policy, use_pallas, owner="stream.stream_embed: ")
+    prefetch = pol.prefetch if prefetch is None else prefetch
     out = BlockStore.empty(n=store.n, d=coeffs.m, block_rows=store.block_rows)
 
     def emit(i, y):
@@ -83,7 +91,7 @@ def stream_embed(
 
     map_reduce(
         store,
-        lambda x: ops.apnc_embed_block_map(x, coeffs, use_pallas=use_pallas),
+        lambda x: ops.apnc_embed_block_map(x, coeffs, policy=pol),
         lambda acc, _: acc,
         None,
         prefetch=prefetch,
@@ -92,14 +100,14 @@ def stream_embed(
     return out
 
 
-def _resolve_init(store, coeffs, discrepancy, k, init, key, seed_sample, use_pallas):
+def _resolve_init(store, coeffs, discrepancy, k, init, key, seed_sample, pol):
     if init is not None:
         return jnp.asarray(init)
     if key is None:
         raise ValueError("provide key= for k-means++ init or init= centroids")
     sample = jnp.asarray(reservoir_sample(store, seed_sample, seed=int(key[-1])))
     if coeffs is not None:  # raw X rows -> embed the reservoir before seeding
-        sample = ops.apnc_embed_block_map(sample, coeffs, use_pallas=use_pallas)
+        sample = ops.apnc_embed_block_map(sample, coeffs, policy=pol)
     return kmeanspp_init(key, sample, k, discrepancy)
 
 
@@ -113,20 +121,23 @@ def ooc_lloyd(
     key: Array | None = None,
     init: Array | None = None,
     seed_sample: int = 1024,
-    use_pallas: bool = False,
-    prefetch: int = 2,
+    policy: ComputePolicy | None = None,
+    use_pallas: bool | None = None,
+    prefetch: int | None = None,
 ) -> StreamLloydResult:
     """Exact out-of-core Lloyd: identical update rule to `core.lloyd.lloyd`,
     memory O(block). Stops early when no label changes (same criterion as the
     in-memory loop). Labels live in a host int32 array (4n bytes)."""
     if (coeffs is None) == (discrepancy is None):
         raise ValueError("pass exactly one of coeffs= (raw X blocks) or discrepancy= (Y blocks)")
+    pol = resolve_policy(policy, use_pallas, owner="stream.ooc_lloyd: ")
+    prefetch = pol.prefetch if prefetch is None else prefetch
     disc = coeffs.discrepancy if coeffs is not None else discrepancy
     centroids_cell = [
-        _resolve_init(store, coeffs, disc, k, init, key, seed_sample, use_pallas)
+        _resolve_init(store, coeffs, disc, k, init, key, seed_sample, pol)
     ]
     m = int(centroids_cell[0].shape[1])
-    map_fn = _block_map(coeffs, disc, centroids_cell, use_pallas)
+    map_fn = _block_map(coeffs, disc, centroids_cell, pol)
 
     labels_host = np.full(store.n, -1, dtype=np.int32)
     changed_cell = [True]
@@ -154,17 +165,16 @@ def ooc_lloyd(
     # Final pass under the final centroids: labels + inertia (matches the
     # post-loop assignment of core.lloyd at any fixed point).
     inertia = _final_assign(
-        store, map_fn, coeffs, disc, centroids_cell, labels_host, prefetch, use_pallas
+        store, map_fn, coeffs, disc, centroids_cell, labels_host, prefetch, pol
     )
     return StreamLloydResult(labels_host, centroids_cell[0], inertia, it, (it + 1) * store.n)
 
 
-def _final_assign(store, map_fn, coeffs, disc, centroids_cell, labels_host, prefetch, use_pallas=False):
-    from repro.core.apnc import pairwise_discrepancy
+def _final_assign(store, map_fn, coeffs, disc, centroids_cell, labels_host, prefetch, pol):
+    from repro.core.lloyd import block_cost
 
-    @jax.jit
     def min_dist(y, c):
-        return jnp.sum(jnp.min(pairwise_discrepancy(y, c, disc), axis=-1))
+        return block_cost(y, c, disc)
 
     def emit(i, out):
         lo = store.row_offset(i)
@@ -175,8 +185,8 @@ def _final_assign(store, map_fn, coeffs, disc, centroids_cell, labels_host, pref
 
         @jax.jit
         def assign_with_inertia(x, c):  # embed ONCE, reuse y for stats + inertia
-            y = ops.apnc_embed_block_map(x, coeffs, use_pallas=use_pallas)
-            Z, g, labels = assign_stats(y, c, c.shape[0], disc, use_pallas=use_pallas)
+            y = ops.apnc_embed_block_map(x, coeffs, policy=pol)
+            Z, g, labels = assign_stats(y, c, c.shape[0], disc, policy=pol)
             return Z, g, labels, min_dist(y, c)
 
         def map_with_inertia(x):
@@ -186,7 +196,7 @@ def _final_assign(store, map_fn, coeffs, disc, centroids_cell, labels_host, pref
 
         @jax.jit
         def assign_with_inertia_y(y, c):  # one dispatch: XLA CSEs the shared D
-            Z, g, labels = assign_stats(y, c, c.shape[0], disc, use_pallas=use_pallas)
+            Z, g, labels = assign_stats(y, c, c.shape[0], disc, policy=pol)
             return Z, g, labels, min_dist(y, c)
 
         def map_with_inertia(y):
@@ -210,8 +220,9 @@ def minibatch_lloyd(
     key: Array | None = None,
     init: Array | None = None,
     seed_sample: int = 1024,
-    use_pallas: bool = False,
-    prefetch: int = 2,
+    policy: ComputePolicy | None = None,
+    use_pallas: bool | None = None,
+    prefetch: int | None = None,
 ) -> StreamLloydResult:
     """Single-pass (per epoch) streaming Lloyd with decayed sufficient stats:
 
@@ -223,12 +234,14 @@ def minibatch_lloyd(
     close to exact Lloyd but with block-staleness in the assignments."""
     if (coeffs is None) == (discrepancy is None):
         raise ValueError("pass exactly one of coeffs= (raw X blocks) or discrepancy= (Y blocks)")
+    pol = resolve_policy(policy, use_pallas, owner="stream.minibatch_lloyd: ")
+    prefetch = pol.prefetch if prefetch is None else prefetch
     disc = coeffs.discrepancy if coeffs is not None else discrepancy
     centroids_cell = [
-        _resolve_init(store, coeffs, disc, k, init, key, seed_sample, use_pallas)
+        _resolve_init(store, coeffs, disc, k, init, key, seed_sample, pol)
     ]
     m = int(centroids_cell[0].shape[1])
-    map_fn = _block_map(coeffs, disc, centroids_cell, use_pallas)
+    map_fn = _block_map(coeffs, disc, centroids_cell, pol)
 
     labels_host = np.full(store.n, -1, dtype=np.int32)
 
@@ -254,7 +267,7 @@ def minibatch_lloyd(
         map_reduce(store, map_fn, combine, None, prefetch=prefetch, emit=emit)
 
     inertia = _final_assign(
-        store, map_fn, coeffs, disc, centroids_cell, labels_host, prefetch, use_pallas
+        store, map_fn, coeffs, disc, centroids_cell, labels_host, prefetch, pol
     )
     return StreamLloydResult(  # +1 pass: _final_assign streams everything again
         labels_host, centroids_cell[0], inertia, epochs, (epochs + 1) * store.n
@@ -272,7 +285,7 @@ def stream_fit_predict(
     landmark_sample: int = 4096,
     decay: float = 0.9,
     epochs: int = 1,
-    prefetch: int = 2,
+    prefetch: int | None = None,
 ):
     """End-to-end embed-and-conquer over a block stream:
 
@@ -286,12 +299,11 @@ def stream_fit_predict(
     from repro.core.kkmeans import APNCConfig, fit_coefficients
 
     cfg = cfg or APNCConfig()
+    pol = cfg.compute
     k_fit, k_cluster = jax.random.split(key)
     sample = jnp.asarray(reservoir_sample(store, landmark_sample, seed=int(k_fit[-1])))
     coeffs = fit_coefficients(k_fit, sample, kernel, cfg)
-    common = dict(
-        coeffs=coeffs, key=k_cluster, use_pallas=cfg.use_pallas, prefetch=prefetch,
-    )
+    common = dict(coeffs=coeffs, key=k_cluster, policy=pol, prefetch=prefetch)
     if mode == "exact":
         res = ooc_lloyd(store, k, iters=cfg.iters, **common)
     elif mode == "minibatch":

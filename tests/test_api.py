@@ -1,0 +1,316 @@
+"""Tests for the unified estimator layer (repro.api).
+
+The load-bearing claims:
+  * backend="auto" dispatches on input type: BlockStore -> "stream",
+    in-memory Array -> "local";
+  * all four backends are reachable through `KernelKMeans(backend=...)` and
+    produce the same ClusterModel artifact shape;
+  * backend equivalence: fit with backend="local" and backend="stream" on the
+    same data/key produces IDENTICAL labels and (to summation-order tolerance)
+    the same inertia — the exact out-of-core fixed-point claim, asserted
+    through the public API;
+  * a ClusterModel saved from the stream backend loads and predicts
+    identically on the local path;
+  * the deprecated use_pallas keywords still work but warn, and resolve
+    through ComputePolicy;
+  * partial_fit is the online face of the minibatch backend and clusters a
+    block stream without ever seeing the full data.
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    AUTO_STREAM_ROWS,
+    ClusterModel,
+    ComputePolicy,
+    KernelKMeans,
+    available_backends,
+    register_kernel,
+    resolve_kernel,
+)
+from repro.core.kernels_fn import Kernel
+from repro.core.metrics import nmi
+from repro.data.synthetic import gaussian_blobs, gaussian_blobs_blocks, rings
+from repro.stream.blockstore import BlockStore
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    X, y = gaussian_blobs(jax.random.PRNGKey(0), 512, 8, 4, separation=4.0)
+    return X, np.asarray(y)
+
+
+def _est(k=4, **kw):
+    kw.setdefault("l", 48)
+    kw.setdefault("m", 32)
+    kw.setdefault("iters", 10)
+    kw.setdefault("block_rows", 128)
+    return KernelKMeans(k, **kw)
+
+
+# ----------------------------------------------------------------- dispatch
+
+
+def test_auto_backend_dispatch(blobs):
+    X, y = blobs
+    est = _est(n_init=4).fit(X)
+    assert est.backend_ == "local"
+    assert est.model_.meta.backend == "local"
+    est2 = _est().fit(BlockStore.from_array(np.asarray(X), 128))
+    assert est2.backend_ == "stream"
+    assert est2.model_.meta.backend == "stream"
+    # self-tuned rbf (no gamma given) recovers the blob structure
+    assert nmi(est.labels_, y) > 0.9
+    assert AUTO_STREAM_ROWS > 512  # the arrays above must stay "local"
+
+
+def test_all_backends_reachable(blobs):
+    X, y = blobs
+    for name in ("local", "shard_map", "stream", "minibatch"):
+        est = _est(backend=name).fit(X, key=jax.random.PRNGKey(1))
+        assert est.backend_ == name, name
+        assert isinstance(est.model_, ClusterModel)
+        assert est.model_.meta.backend == name
+        assert est.labels_.shape == (X.shape[0],)
+        assert est.labels_.dtype == np.int32
+        assert np.isfinite(est.inertia_)
+        assert nmi(est.labels_, y) > 0.9, name
+    assert set(available_backends()) >= {"local", "shard_map", "stream", "minibatch"}
+
+
+# -------------------------------------------------------- backend equivalence
+
+
+def test_backend_equivalence_local_vs_stream():
+    """Same data, same key: local (in-memory Lloyd) and stream (exact
+    out-of-core Lloyd) must land on identical labels and the same inertia —
+    the paper's out-of-core fixed-point claim through the public API."""
+    X, _ = rings(jax.random.PRNGKey(0), 600, k=2, noise=0.05, gap=2.0)
+    kw = dict(kernel=Kernel("rbf", gamma=1.0), l=64, m=64, iters=30,
+              n_init=1, block_rows=100)
+    key = jax.random.PRNGKey(7)
+    a = KernelKMeans(2, backend="local", **kw).fit(X, key=key)
+    b = KernelKMeans(2, backend="stream", **kw).fit(
+        BlockStore.from_array(np.asarray(X), 100), key=key)
+    assert np.array_equal(a.labels_, b.labels_)
+    assert b.inertia_ == pytest.approx(a.inertia_, rel=1e-4)
+    # centroids agree to per-block float-summation order (labels are exact)
+    np.testing.assert_allclose(
+        np.asarray(a.model_.centroids), np.asarray(b.model_.centroids), atol=1e-4
+    )
+
+
+def test_backend_equivalence_holds_at_iteration_cap():
+    """Budget-capped (non-converged) fits must also agree label-for-label:
+    both paths report labels under the FINAL centroids, and fit labels must
+    replay through predict()."""
+    X, _ = rings(jax.random.PRNGKey(0), 600, k=2, noise=0.05, gap=2.0)
+    kw = dict(kernel=Kernel("rbf", gamma=1.0), l=64, m=64, iters=1,
+              n_init=1, block_rows=100)
+    key = jax.random.PRNGKey(7)
+    a = KernelKMeans(2, backend="local", **kw).fit(X, key=key)
+    b = KernelKMeans(2, backend="stream", **kw).fit(
+        BlockStore.from_array(np.asarray(X), 100), key=key)
+    assert np.array_equal(a.labels_, b.labels_)
+    assert np.array_equal(a.labels_, a.predict(X))
+
+
+def test_predict_rejects_sharded_store(blobs):
+    X, _ = blobs
+    est = _est().fit(X)
+    store = BlockStore.from_array(np.asarray(X), 128)
+    with pytest.raises(ValueError, match="sharded BlockStore"):
+        est.predict(store.shard(0, 2))
+    with pytest.raises(ValueError, match="sharded BlockStore"):
+        _est().fit(store.shard(0, 2))
+    with pytest.raises(ValueError, match="sharded BlockStore"):
+        est.score(store.shard(0, 2))
+    # the unsharded store still predicts every row
+    assert (est.predict(store) >= 0).all()
+
+
+def test_stream_model_roundtrips_to_local_predict(tmp_path):
+    """A ClusterModel saved by the stream backend must load and predict
+    identically on the local (in-memory) path."""
+    X, _ = rings(jax.random.PRNGKey(0), 600, k=2, noise=0.05, gap=2.0)
+    store = BlockStore.from_array(np.asarray(X), 100)
+    est = KernelKMeans(2, backend="stream", kernel=Kernel("rbf", gamma=1.0),
+                       l=64, m=64, iters=30, block_rows=100)
+    est.fit(store, key=jax.random.PRNGKey(7))
+    est.save(tmp_path / "ck")
+
+    reloaded = KernelKMeans.load(tmp_path / "ck")
+    assert float(reloaded.model_.inertia) == pytest.approx(est.inertia_, rel=1e-6)
+    assert reloaded.model_.meta.backend == "stream"
+    # in-memory array input -> core predict path; must replay the fit labels
+    assert np.array_equal(reloaded.predict(X), est.labels_)
+    # and blockwise prediction agrees with the array path
+    assert np.array_equal(reloaded.predict(store), est.labels_)
+
+
+# -------------------------------------------------------------- persistence
+
+
+def test_cluster_model_artifact_fields(blobs, tmp_path):
+    X, _ = blobs
+    est = _est(n_init=2).fit(X, key=jax.random.PRNGKey(3))
+    m = est.model_
+    assert m.k == 4 and m.m == 32
+    assert m.discrepancy == "l2"
+    assert m.meta.method == "nystrom" and m.meta.kernel_name == "rbf"
+    assert m.meta.n_init == 2
+    assert m.meta.rows_seen >= X.shape[0]
+    # the model itself is a pytree: leaves flow through jax transforms
+    leaves = jax.tree_util.tree_leaves(m)
+    assert any(leaf.shape == (4, 32) for leaf in leaves)
+
+
+# ----------------------------------------------------------- policy routing
+
+
+def test_deprecated_use_pallas_warns(blobs):
+    from repro.core.kkmeans import APNCConfig, predict
+    from repro.stream.lloyd import ooc_lloyd
+
+    X, _ = blobs
+    est = _est().fit(X)
+    with pytest.warns(DeprecationWarning, match="use_pallas"):
+        ref = predict(X, est.model_.coeffs, est.model_.centroids, use_pallas=False)
+    assert np.array_equal(np.asarray(ref), est.predict(X))
+    with pytest.warns(DeprecationWarning, match="use_pallas"):
+        APNCConfig(use_pallas=True)
+    with pytest.warns(DeprecationWarning, match="use_pallas"):
+        ooc_lloyd(
+            BlockStore.from_array(np.asarray(X), 128), 4,
+            coeffs=est.model_.coeffs, iters=1,
+            init=est.model_.centroids, use_pallas=False,
+        )
+
+
+def test_policy_pallas_matches_reference(blobs):
+    """ComputePolicy(pallas=True) (interpret mode on CPU) must agree with the
+    jnp reference through the facade."""
+    X, _ = blobs
+    key = jax.random.PRNGKey(2)
+    ref = _est(iters=8).fit(X, key=key)
+    pal = _est(iters=8, policy=ComputePolicy(pallas=True)).fit(X, key=key)
+    assert nmi(pal.labels_, ref.labels_) > 0.95
+
+
+def test_policy_bf16_precision_runs(blobs):
+    X, _ = blobs
+    est = _est(policy=ComputePolicy(precision="bf16")).fit(X)
+    Y = est.transform(X)
+    assert Y.dtype == jnp.float32
+    assert bool(jnp.all(jnp.isfinite(Y)))
+    assert nmi(est.labels_, _est().fit(X).labels_) > 0.9
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="precision"):
+        ComputePolicy(precision="f8")
+    with pytest.raises(ValueError, match="prefetch"):
+        ComputePolicy(prefetch=-1)
+
+
+# ------------------------------------------------------- partial_fit / misc
+
+
+def test_partial_fit_streams_blocks(blobs):
+    X, y = blobs
+    Xs, _ = gaussian_blobs_blocks(1, 2048, 8, 4, block_rows=256, separation=4.0)
+    est = KernelKMeans(4, l=48, m=32, decay=0.95)
+    for i in range(Xs.num_blocks):
+        est.partial_fit(Xs.get(i))
+    assert est.backend_ == "minibatch"
+    assert est.model_.meta.rows_seen == Xs.n
+    labels = est.predict(Xs)
+    truth = np.concatenate(
+        [np.asarray(b).ravel() for b in
+         gaussian_blobs_blocks(1, 2048, 8, 4, block_rows=256, separation=4.0)[1]]
+    )
+    assert nmi(labels, truth) > 0.85
+
+
+def test_partial_fit_warm_starts_from_loaded_model(blobs, tmp_path):
+    """partial_fit on a fitted/loaded estimator must continue from the
+    existing ClusterModel's coefficients, not refit from the incoming block."""
+    X, _ = blobs
+    est = _est().fit(X, key=jax.random.PRNGKey(5))
+    est.save(tmp_path / "ck")
+    loaded = KernelKMeans.load(tmp_path / "ck")
+    R_before = np.asarray(loaded.model_.coeffs.R)
+    rows_before = loaded.model_.meta.rows_seen
+    loaded.partial_fit(np.asarray(X)[:128])
+    assert np.array_equal(np.asarray(loaded.model_.coeffs.R), R_before)
+    assert loaded.model_.meta.rows_seen == rows_before + 128
+
+
+def test_partial_fit_small_first_block_raises(blobs):
+    X, _ = blobs
+    with pytest.raises(ValueError, match="first block"):
+        KernelKMeans(4, l=300).partial_fit(np.asarray(X)[:64])
+
+
+def test_load_restores_fit_hyperparameters(blobs, tmp_path):
+    X, _ = blobs
+    _est(method="sd", m=16, n_init=2, decay=0.8).fit(X, key=jax.random.PRNGKey(9)) \
+        .save(tmp_path / "ck")
+    loaded = KernelKMeans.load(tmp_path / "ck")
+    assert (loaded.l, loaded.m, loaded.q) == (48, 16, 1)
+    assert loaded.method == "sd" and loaded.n_init == 2
+    assert loaded.iters == 10 and loaded.decay == 0.8
+
+
+def test_manifest_is_strict_json(blobs, tmp_path):
+    """Even the legacy shim (inertia unknown -> NaN) must write a manifest a
+    strict JSON parser accepts."""
+    import json
+
+    from repro.distributed.checkpoint import save_clustering_model
+
+    X, _ = blobs
+    est = _est().fit(X)
+    path = save_clustering_model(
+        tmp_path / "ck", est.model_.coeffs, est.model_.centroids
+    )
+
+    def reject(_):
+        raise AssertionError("non-strict JSON constant in manifest")
+
+    json.loads((path / "manifest.json").read_text(), parse_constant=reject)
+
+
+def test_transform_and_score(blobs):
+    X, _ = blobs
+    est = _est().fit(X)
+    Y = est.transform(X)
+    assert Y.shape == (X.shape[0], 32)
+    assert est.score(X) == pytest.approx(-est.inertia_, rel=1e-4)
+    # BlockStore transform stays blocked; score agrees with the array path
+    store = BlockStore.from_array(np.asarray(X), 128)
+    Ys = est.transform(store)
+    np.testing.assert_allclose(Ys.materialize(), np.asarray(Y), atol=1e-4)
+    assert est.score(store) == pytest.approx(est.score(X), rel=1e-4)
+
+
+def test_registry_extension_and_errors():
+    from repro.api import KERNELS
+
+    try:
+        register_kernel("rbf_wide", lambda **kw: Kernel("rbf", gamma=0.01, **kw))
+        assert resolve_kernel("rbf_wide").gamma == 0.01
+    finally:
+        KERNELS.pop("rbf_wide", None)
+    with pytest.raises(ValueError, match="unknown kernel"):
+        resolve_kernel("nope")
+    with pytest.raises(ValueError, match="unknown backend"):
+        KernelKMeans(2, backend="mapreduce").fit(np.zeros((8, 2), np.float32))
+    with pytest.raises(ValueError, match="unknown APNC method"):
+        KernelKMeans(2, method="magic").fit(np.zeros((64, 2), np.float32))
+    with pytest.raises(RuntimeError, match="not fitted"):
+        KernelKMeans(2).predict(np.zeros((4, 2), np.float32))

@@ -44,14 +44,17 @@ def test_embed_and_conquer_sd_on_blobs():
 
 
 def test_pallas_path_end_to_end():
-    """The same pipeline with use_pallas=True (interpret mode) must agree."""
+    """The same pipeline with Pallas routing (interpret mode) must agree."""
+    from repro.policy import ComputePolicy
+
     X, y = rings(jax.random.PRNGKey(0), 400, k=2, noise=0.05, gap=2.0)
     kern = Kernel("rbf", gamma=1.0)
     cfg = APNCConfig(method="nystrom", l=128, m=64, iters=20)
     res_ref, _ = fit_predict(jax.random.PRNGKey(1), X, kern, 2, cfg)
     import dataclasses
-    res_pal, _ = fit_predict(jax.random.PRNGKey(1), X, kern, 2,
-                             dataclasses.replace(cfg, use_pallas=True))
+    res_pal, _ = fit_predict(
+        jax.random.PRNGKey(1), X, kern, 2,
+        dataclasses.replace(cfg, policy=ComputePolicy(pallas=True)))
     assert nmi(res_pal.labels, res_ref.labels) > 0.95
 
 
