@@ -1,11 +1,14 @@
 """repro: Embed-and-Conquer (APNC kernel k-means) as a production JAX framework.
 
 Layers:
-    repro.api          -- PUBLIC facade: KernelKMeans estimator, backend/kernel/
-                          method registries, the ClusterModel artifact
+    repro.api          -- PUBLIC facade: KernelKMeans estimator, backend/kernel
+                          registries, the ClusterModel artifact
+    repro.embed        -- the embedding family: Embedding protocol + registry
+                          (nystrom / sd / rff / tensorsketch), policy-routed
+                          transform dispatch, params serialization
     repro.policy       -- ComputePolicy (pallas routing, precision, prefetch)
     repro.core         -- the paper: APNC embeddings + MapReduce->shard_map kernel k-means
-    repro.kernels      -- Pallas TPU kernels for the APNC hot loops (+ jnp oracles)
+    repro.kernels      -- Pallas TPU kernels for the embedding hot loops (+ jnp oracles)
     repro.models       -- LM model zoo substrate (dense/GQA/MoE/Mamba/RWKV6/hybrid)
     repro.configs      -- assigned architecture configs + paper dataset configs
     repro.data         -- synthetic datasets + LM token pipeline

@@ -1,35 +1,40 @@
 """repro.api — the public estimator facade for embed-and-conquer.
 
-One estimator, four execution regimes, one artifact:
+One estimator, four execution regimes, one embedding family, one artifact:
 
     from repro.api import KernelKMeans
 
-    est = KernelKMeans(k=5, kernel="rbf", l=128, m=64)
+    est = KernelKMeans(k=5, kernel="rbf", method="nystrom", l=128, m=64)
     est.fit(X)            # Array -> local; BlockStore -> exact out-of-core
     labels = est.predict(X_new)
     est.save("ckpt/")     # canonical ClusterModel, backend-agnostic
     est2 = KernelKMeans.load("ckpt/")
 
 Extend by registering, not by editing: `register_backend`, `register_kernel`,
-`register_method`. Execution knobs (Pallas routing, precision, prefetch) live
-in one `ComputePolicy` — the old scattered `use_pallas` booleans are
-deprecated shims over it.
+`register_embedding` (see repro.embed for the Embedding protocol — APNC
+Nystrom/SD, RFF and TensorSketch ship registered). Execution knobs (Pallas
+routing, precision, prefetch) live in one `ComputePolicy`.
 """
 from repro.api.model import ClusterModel, FitMeta
 from repro.api.registry import (
     BACKENDS,
-    KERNELS,
-    METHODS,
+    EMBEDDINGS,
     available_backends,
+    available_embeddings,
     get_backend,
+    get_embedding,
     register_backend,
+    register_embedding,
     register_kernel,
     register_method,
     resolve_kernel,
+    unregister_embedding,
 )
+from repro.api.registry import KERNELS
 from repro.api import backends as _backends  # noqa: F401  (registers built-ins)
 from repro.api.backends import BackendFit, FitContext
 from repro.api.estimator import AUTO_STREAM_ROWS, KernelKMeans
+from repro.embed import Embedding, EmbeddingProps
 from repro.policy import ComputePolicy
 
 __all__ = [
@@ -38,15 +43,21 @@ __all__ = [
     "BackendFit",
     "ClusterModel",
     "ComputePolicy",
+    "EMBEDDINGS",
+    "Embedding",
+    "EmbeddingProps",
     "FitContext",
     "FitMeta",
     "KERNELS",
     "KernelKMeans",
-    "METHODS",
     "available_backends",
+    "available_embeddings",
     "get_backend",
+    "get_embedding",
     "register_backend",
+    "register_embedding",
     "register_kernel",
     "register_method",
     "resolve_kernel",
+    "unregister_embedding",
 ]

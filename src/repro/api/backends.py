@@ -1,8 +1,8 @@
 """The four built-in execution backends behind `KernelKMeans`.
 
 Each backend receives the SAME prepared inputs (a FitContext: block store
-and/or resident array, fitted coefficients, the k-means++ init centroids per
-restart, policy) and returns the SAME result shape (a BackendFit), so the
+and/or resident array, fitted embedding params of any registered member, the
+k-means++ init centroids per restart, policy) and returns the SAME result shape (a BackendFit), so the
 estimator can swap engines without the result type fracturing:
 
   local      in-memory embed + lax.while Lloyd (core.lloyd) — small data
@@ -11,8 +11,8 @@ estimator can swap engines without the result type fracturing:
              fixed point as local given the same init, memory O(block)
   minibatch  single-pass streaming Lloyd with decayed (Z, g) (stream.minibatch)
 
-Because every backend clusters from the same coefficients and the same init
-centroids, local and stream produce identical labels (the exact out-of-core
+Because every backend clusters from the same embedding params and the same
+init centroids, local and stream produce identical labels (the exact out-of-core
 fixed-point claim, asserted through the public API in tests/test_api.py).
 """
 from __future__ import annotations
@@ -25,8 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.registry import register_backend
-from repro.core.apnc import APNCCoefficients
 from repro.core.lloyd import lloyd
+from repro.embed.base import EmbeddingParams
 from repro.policy import ComputePolicy
 from repro.stream.blockstore import BlockStore
 from repro.stream.lloyd import minibatch_lloyd, ooc_lloyd
@@ -41,7 +41,7 @@ class FitContext:
 
     store: BlockStore  # blocked view of the data (always present)
     array: Array | None  # the resident array, when the input was in-memory
-    coeffs: APNCCoefficients
+    params: EmbeddingParams  # fitted params of the registered embedding member
     k: int
     inits: list[Array]  # k-means++ init centroids, one per restart
     iters: int
@@ -90,14 +90,14 @@ def _from_stream(res) -> BackendFit:
 @register_backend("local")
 def fit_local(ctx: FitContext) -> BackendFit:
     """Single-program path: embed everything, lax.while Lloyd per restart."""
-    from repro.core.kkmeans import apnc_embed
+    from repro import embed
 
     X = _materialize(ctx)
-    Y = apnc_embed(X, ctx.coeffs, ctx.policy)
+    Y = embed.transform(ctx.params, X, ctx.policy)
 
     def run_one(init):
         res = lloyd(
-            Y, ctx.k, discrepancy=ctx.coeffs.discrepancy, iters=ctx.iters,
+            Y, ctx.k, discrepancy=ctx.params.discrepancy, iters=ctx.iters,
             init=init, policy=ctx.policy,
         )
         return BackendFit(
@@ -116,7 +116,7 @@ def fit_stream(ctx: FitContext) -> BackendFit:
     """Exact out-of-core Lloyd: identical update rule (and fixed point) to
     `local`, memory O(block)."""
     return _run_restarts(ctx, lambda init: _from_stream(ooc_lloyd(
-        ctx.store, ctx.k, coeffs=ctx.coeffs, iters=ctx.iters, init=init,
+        ctx.store, ctx.k, coeffs=ctx.params, iters=ctx.iters, init=init,
         policy=ctx.policy,
     )))
 
@@ -126,7 +126,7 @@ def fit_minibatch(ctx: FitContext) -> BackendFit:
     """Single-pass streaming Lloyd with decayed (Z, g): clustering cost
     decoupled from n, for larger-than-disk / continuous-ingest streams."""
     return _run_restarts(ctx, lambda init: _from_stream(minibatch_lloyd(
-        ctx.store, ctx.k, coeffs=ctx.coeffs, decay=ctx.decay,
+        ctx.store, ctx.k, coeffs=ctx.params, decay=ctx.decay,
         epochs=ctx.epochs, init=init, policy=ctx.policy,
     )))
 
@@ -146,8 +146,8 @@ def fit_shard_map(ctx: FitContext) -> BackendFit:
             f"shard_map backend needs n ({X.shape[0]}) divisible by the mesh's "
             f"data extent ({n_shards}); pad the input or pick another backend"
         )
-    Y = distributed_embed(mesh, X, ctx.coeffs, policy=ctx.policy)
-    disc = ctx.coeffs.discrepancy
+    Y = distributed_embed(mesh, X, ctx.params, policy=ctx.policy)
+    disc = ctx.params.discrepancy
 
     def inertia_of(c):
         from repro.core.lloyd import block_cost

@@ -1,8 +1,10 @@
 """`KernelKMeans`: the unified estimator over every execution regime.
 
-The paper's whole point is ONE embedding definition (APNC, Section 4) that
-makes every execution strategy share the same math. This facade makes the API
-match: one estimator with the full lifecycle
+The paper's whole point is ONE embedding *family* definition (Section 4) that
+makes every execution strategy share the same math — for every member of the
+family, not just APNC (see repro.embed: nystrom/sd/rff/tensorsketch ship
+registered, `register_embedding` adds more). This facade makes the API match:
+one estimator with the full lifecycle
 
     fit(X_or_BlockStore) / partial_fit / predict / transform / score / save / load
 
@@ -27,7 +29,7 @@ import numpy as np
 
 from repro.api.backends import FitContext
 from repro.api.model import ClusterModel, FitMeta
-from repro.api.registry import get_backend, get_method, resolve_kernel
+from repro.api.registry import get_backend, get_embedding, resolve_kernel
 from repro.core.kernels_fn import Kernel, self_tuned_rbf
 from repro.core.lloyd import block_cost, centroid_update, kmeanspp_init
 from repro.kernels import ops
@@ -43,8 +45,9 @@ AUTO_STREAM_ROWS = 2_000_000
 
 
 class KernelKMeans:
-    """Kernel k-means via APNC embeddings (the paper's embed-and-conquer),
-    scikit-learn-shaped, with pluggable execution backends.
+    """Kernel k-means via explicit embeddings (the paper's embed-and-conquer),
+    scikit-learn-shaped, with pluggable execution backends and a pluggable
+    embedding family (repro.embed).
 
     Parameters mirror `APNCConfig` (paper Section 9) plus the execution axes:
 
@@ -53,13 +56,17 @@ class KernelKMeans:
                      `Kernel` instance. With kernel="rbf" and no gamma in
                      kernel_params, sigma is self-tuned on the landmark sample.
     kernel_params:   keyword params for a string kernel (gamma, degree, ...).
-    method:          APNC instance: "nystrom" (l2) or "sd" (l1).
+    method:          registered embedding family member (see repro.embed):
+                     "nystrom" (APNC-Nys, l2), "sd" (APNC-SD, l1), "rff"
+                     (random Fourier features, rbf kernels), "tensorsketch"
+                     (polynomial kernels), or anything register_embedding'd.
     backend:         "local" | "shard_map" | "stream" | "minibatch" | "auto".
                      auto -> "stream" for a BlockStore input, "shard_map" when
                      a mesh was given, "stream" for arrays with >=
                      AUTO_STREAM_ROWS rows, else "local".
     l, m, t, q:      landmark count, embedding dim per block, SD subset size,
-                     ensemble blocks — as in the paper.
+                     ensemble blocks — as in the paper. Landmark-free members
+                     (rff, tensorsketch) read only m.
     iters, n_init:   Lloyd cap and k-means++ restarts (best inertia wins).
     decay, epochs:   minibatch backend: sufficient-stat decay and stream passes.
     block_rows:      blocking used when wrapping an in-memory array.
@@ -145,22 +152,23 @@ class KernelKMeans:
 
     # ------------------------------------------------------------ lifecycle
 
-    def _fit_coeffs_and_pool(self, sample: Array, k_fit: Array):
-        """The shared front half of phase 1: resolve the kernel, fit the APNC
-        coefficients on the sample, embed the seeding pool. Used identically
-        by fit() (reservoir sample) and partial_fit() (first block)."""
+    def _fit_params_and_pool(self, sample: Array, k_fit: Array):
+        """The shared front half of phase 1: resolve the kernel, fit the
+        embedding member's params on the sample, embed the seeding pool. Used
+        identically by fit() (reservoir sample) and partial_fit() (first
+        block)."""
         self.kernel_ = self._resolve_kernel(sample)
-        coeffs = get_method(self.method)(
+        params = get_embedding(self.method).fit(
             k_fit, sample, self.kernel_, l=self.l, m=self.m, t=self.t, q=self.q
         )
-        pool = ops.apnc_embed_block_map(
-            sample[: self.seed_sample], coeffs, policy=self.policy
+        pool = ops.embed_block_map(
+            sample[: self.seed_sample], params, policy=self.policy
         )
-        return coeffs, pool
+        return params, pool
 
     def _prepare(self, X, key: Array, backend_name: str) -> FitContext:
         """Phase 1, shared by every backend: blocked view, landmark sample,
-        coefficient fit, k-means++ seeding."""
+        embedding fit, k-means++ seeding."""
         if isinstance(X, BlockStore):
             self._reject_sharded(X, "fit")
             store, array = X, None
@@ -182,15 +190,15 @@ class KernelKMeans:
         sample = jnp.asarray(
             reservoir_sample(store, self.landmark_sample, seed=int(k_fit[-1]))
         )
-        coeffs, pool = self._fit_coeffs_and_pool(sample, k_fit)
+        params, pool = self._fit_params_and_pool(sample, k_fit)
         inits = [
             kmeanspp_init(
-                jax.random.fold_in(k_seed, r), pool, self.k, coeffs.discrepancy
+                jax.random.fold_in(k_seed, r), pool, self.k, params.discrepancy
             )
             for r in range(max(1, self.n_init))
         ]
         return FitContext(
-            store=store, array=array, coeffs=coeffs, k=self.k, inits=inits,
+            store=store, array=array, params=params, k=self.k, inits=inits,
             iters=self.iters, policy=self.policy, decay=self.decay,
             epochs=self.epochs, mesh=self.mesh,
         )
@@ -199,11 +207,11 @@ class KernelKMeans:
         """Fit on an in-memory array or a BlockStore; backend per `backend=`."""
         key = key if key is not None else jax.random.PRNGKey(self.random_state)
         name = self._choose_backend(X)
-        backend = get_backend(name)  # fail fast, before the coefficient fit
-        get_method(self.method)  # likewise: reject typos before streaming data
+        backend = get_backend(name)  # fail fast, before the embedding fit
+        get_embedding(self.method)  # likewise: reject typos before streaming data
         ctx = self._prepare(X, key, name)
         out = backend(ctx)
-        self._finish(ctx.coeffs, out, name)
+        self._finish(ctx.params, out, name)
         self._pf_state = None
         return self
 
@@ -212,54 +220,62 @@ class KernelKMeans:
 
     def partial_fit(self, X, *, key: Array | None = None) -> "KernelKMeans":
         """Online face of the minibatch backend: one decayed (Z, g) update per
-        call. On a cold estimator the first call fits coefficients and seeds
+        call. On a cold estimator the first call fits the embedding and seeds
         centroids from that block; on a fitted or loaded estimator it
         continues from the existing ClusterModel (fresh decayed stats, the
         restored centroids as the assignment anchor). Either way, later calls
         just embed + assign + update — O(block) forever."""
         Xb = jnp.asarray(np.asarray(X, np.float32))
         if self.model_ is None:
-            if Xb.shape[0] < self.l:
+            # landmark-free members (rff, tensorsketch) only read the input
+            # dim from the first block, but k-means++ seeding still needs at
+            # least k distinct rows; kernelized members need their l landmarks
+            need, what = (
+                (self.k, f"k={self.k} rows to seed centroids")
+                if get_embedding(self.method).landmark_free
+                else (self.l, f"l={self.l} rows to fit the embedding")
+            )
+            if Xb.shape[0] < need:
                 raise ValueError(
                     f"partial_fit cold start needs the first block to hold at "
-                    f"least l={self.l} rows to fit coefficients, got "
-                    f"{Xb.shape[0]}; buffer a larger first block or lower l"
+                    f"least {what}, got {Xb.shape[0]}; buffer a larger first "
+                    "block"
                 )
             key = key if key is not None else jax.random.PRNGKey(self.random_state)
             k_fit, k_seed = jax.random.split(key)
-            coeffs, pool = self._fit_coeffs_and_pool(
+            params, pool = self._fit_params_and_pool(
                 Xb[: self.landmark_sample], k_fit
             )
-            centroids = kmeanspp_init(k_seed, pool, self.k, coeffs.discrepancy)
+            centroids = kmeanspp_init(k_seed, pool, self.k, params.discrepancy)
             self._pf_state = (
-                jnp.zeros((self.k, coeffs.m), jnp.float32),
+                jnp.zeros((self.k, params.m), jnp.float32),
                 jnp.zeros((self.k,), jnp.float32),
                 0,
             )
         else:
-            coeffs, centroids = self.model_.coeffs, self.model_.centroids
+            params, centroids = self.model_.params, self.model_.centroids
             if self._pf_state is None:  # warm start from fit()/load()
                 self._pf_state = (
-                    jnp.zeros((self.k, coeffs.m), jnp.float32),
+                    jnp.zeros((self.k, params.m), jnp.float32),
                     jnp.zeros((self.k,), jnp.float32),
                     self.model_.meta.rows_seen,
                 )
         Z, g, rows = self._pf_state
-        y = ops.apnc_embed_block_map(Xb, coeffs, policy=self.policy)
+        y = ops.embed_block_map(Xb, params, policy=self.policy)
         from repro.core.lloyd import assign_stats
 
         Z_b, g_b, labels = assign_stats(
-            y, centroids, self.k, coeffs.discrepancy, policy=self.policy
+            y, centroids, self.k, params.discrepancy, policy=self.policy
         )
         Z = self.decay * Z + Z_b
         g = self.decay * g + g_b
         centroids = centroid_update(Z, g, centroids)
-        inertia = float(block_cost(y, centroids, coeffs.discrepancy))
+        inertia = float(block_cost(y, centroids, params.discrepancy))
         rows += int(Xb.shape[0])
         self._pf_state = (Z, g, rows)
         out_meta = self._fit_meta(backend="minibatch", rows_seen=rows, n_init=1)
         self.model_ = ClusterModel(
-            coeffs=coeffs, centroids=centroids,
+            params=params, centroids=centroids,
             inertia=jnp.asarray(inertia, jnp.float32), meta=out_meta,
         )
         self.labels_ = np.asarray(labels, np.int32)
@@ -270,7 +286,8 @@ class KernelKMeans:
 
     def _fit_meta(self, **kw) -> FitMeta:
         return FitMeta(
-            k=self.k, method=self.method, kernel_name=self.kernel_.name,
+            k=self.k, method=self.method,
+            kernel_name=getattr(self.kernel_, "name", ""),
             l=self.l, m=self.m, t=self.t, q=self.q, iters_cap=self.iters,
             decay=self.decay, epochs=self.epochs,
             landmark_sample=self.landmark_sample, seed_sample=self.seed_sample,
@@ -278,13 +295,13 @@ class KernelKMeans:
             **kw,
         )
 
-    def _finish(self, coeffs, out, backend_name: str) -> None:
+    def _finish(self, params, out, backend_name: str) -> None:
         meta = self._fit_meta(
             backend=backend_name, iters=int(out.iters),
             rows_seen=int(out.rows_seen), n_init=max(1, self.n_init),
         )
         self.model_ = ClusterModel(
-            coeffs=coeffs, centroids=jnp.asarray(out.centroids),
+            params=params, centroids=jnp.asarray(out.centroids),
             inertia=jnp.asarray(out.inertia, jnp.float32), meta=meta,
         )
         self.labels_ = np.asarray(out.labels, np.int32)
@@ -328,8 +345,8 @@ class KernelKMeans:
 
             map_reduce(
                 X,
-                lambda blk: ops.apnc_predict_block(  # labels only: no (Z, g)
-                    blk, model.coeffs, model.centroids, policy=self.policy
+                lambda blk: ops.predict_block(  # labels only: no (Z, g)
+                    blk, model.params, model.centroids, policy=self.policy
                 ),
                 lambda acc, _: acc, None,
                 prefetch=self.policy.prefetch, emit=emit,
@@ -338,17 +355,17 @@ class KernelKMeans:
         return np.asarray(model.predict(X, policy=self.policy), np.int32)
 
     def transform(self, X):
-        """APNC embedding Y = f(X). Arrays map to an (n, m) array; a BlockStore
-        maps to a host-staged BlockStore of embedded blocks (still O(block) on
-        device)."""
+        """The fitted embedding Y = f(X). Arrays map to an (n, m) array; a
+        BlockStore maps to a host-staged BlockStore of embedded blocks (still
+        O(block) on device)."""
         model = self._require_model()
         if isinstance(X, BlockStore):
             from repro.stream.lloyd import stream_embed
 
-            return stream_embed(X, model.coeffs, policy=self.policy)
-        from repro.core.kkmeans import apnc_embed
+            return stream_embed(X, model.params, policy=self.policy)
+        from repro import embed
 
-        return apnc_embed(jnp.asarray(X, jnp.float32), model.coeffs, self.policy)
+        return embed.transform(model.params, jnp.asarray(X, jnp.float32), self.policy)
 
     def score(self, X) -> float:
         """Negative clustering inertia of X under the fitted centroids
@@ -362,16 +379,16 @@ class KernelKMeans:
             total = map_reduce(
                 X,
                 lambda blk: block_cost(
-                    ops.apnc_embed_block_map(blk, model.coeffs, policy=self.policy),
+                    ops.embed_block_map(blk, model.params, policy=self.policy),
                     model.centroids, disc,
                 ),
                 lambda acc, c: acc + c, jnp.asarray(0.0),
                 prefetch=self.policy.prefetch,
             )
             return -float(total)
-        from repro.core.kkmeans import apnc_embed
+        from repro import embed
 
-        Y = apnc_embed(jnp.asarray(X, jnp.float32), model.coeffs, self.policy)
+        Y = embed.transform(model.params, jnp.asarray(X, jnp.float32), self.policy)
         return -float(block_cost(Y, model.centroids, disc))
 
     # ---------------------------------------------------------- persistence
@@ -391,14 +408,21 @@ class KernelKMeans:
 
         model = load_cluster_model(ckpt_dir, step=step)
         meta = model.meta
+        # The kernel comes back fully resolved when the member's params carry
+        # it (all built-ins do); landmark-free members may legitimately not.
+        kernel = getattr(model.params, "kernel", None)
         est = cls(
-            model.k, kernel=model.coeffs.kernel, method=meta.method,
+            model.k,
+            kernel=kernel if kernel is not None else (meta.kernel_name or "rbf"),
+            method=meta.method,
             backend=meta.backend if meta.backend != "unknown" else "auto",
             # restore the recorded fit hyperparameters so a keyless refit on
-            # the same data reproduces the original fit (the kernel comes back
-            # fully resolved from the coefficients; legacy artifacts recorded
-            # none of these — fall back to shapes / constructor defaults)
-            l=meta.l or model.coeffs.l, m=meta.m or model.coeffs.R.shape[1],
+            # the same data reproduces the original fit (legacy artifacts
+            # recorded none of these — fall back to shapes / constructor
+            # defaults, which are APNC-shaped)
+            l=meta.l or getattr(model.params, "l", 0) or 300,
+            m=meta.m or (model.params.R.shape[1]
+                         if hasattr(model.params, "R") else model.params.m),
             t=meta.t, q=meta.q, iters=meta.iters_cap or 20,
             n_init=max(1, meta.n_init), decay=meta.decay, epochs=meta.epochs,
             landmark_sample=meta.landmark_sample or 4096,
@@ -406,7 +430,7 @@ class KernelKMeans:
             block_rows=meta.block_rows or 4096,
             random_state=meta.random_state, policy=policy,
         )
-        est.kernel_ = model.coeffs.kernel
+        est.kernel_ = kernel
         est.model_ = model
         est.inertia_ = float(model.inertia)
         est.n_iter_ = model.meta.iters

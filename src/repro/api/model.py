@@ -1,14 +1,16 @@
 """ClusterModel: the one canonical artifact a fit produces.
 
 Every backend — local, shard_map, stream, minibatch — returns the same pytree:
-the (R, L) coefficient blocks of Property 4.2/4.3, the final centroids in
-embedding space, the achieved inertia, and static fit metadata. It is what the
+the fitted `EmbeddingParams` of whichever registered family member embedded
+the data (APNC (R, L) coefficients, an RFF frequency matrix, sketch matrices,
+a user-registered map — see repro.embed), the final centroids in embedding
+space, the achieved inertia, and static fit metadata. It is what the
 checkpoint layer persists (`distributed/checkpoint.save_cluster_model`), what
 the online assignment service loads, and what `KernelKMeans.predict/transform/
 score` consume — so a model fit by the stream backend serves byte-identically
-on the local backend and vice versa.
+on the local backend and vice versa, for every embedding member.
 
-Registered as a jax pytree: the array leaves (landmarks, R, centroids,
+Registered as a jax pytree: the array leaves (the params' arrays, centroids,
 inertia) flow through jit/shard_map; `meta` is static.
 """
 from __future__ import annotations
@@ -17,7 +19,8 @@ import dataclasses
 
 import jax
 
-from repro.core.apnc import APNCCoefficients, Discrepancy
+from repro.core.apnc import Discrepancy
+from repro.embed.base import EmbeddingParams
 
 Array = jax.Array
 
@@ -30,12 +33,12 @@ class FitMeta:
 
     k: int = 0
     backend: str = "unknown"  # which registered backend ran the clustering
-    method: str = "unknown"  # APNC instance: "nystrom" | "sd"
+    method: str = "unknown"  # registered embedding member ("nystrom", "rff", ...)
     kernel_name: str = ""
     iters: int = 0  # Lloyd iterations actually run (best restart)
     rows_seen: int = 0  # total rows streamed/visited during clustering
     n_init: int = 0  # restarts evaluated
-    l: int = 0  # landmark count (0 = unrecorded legacy artifact)
+    l: int = 0  # landmark count (0 = unrecorded legacy artifact / landmark-free)
     m: int = 0  # embedding dim per block (0 = unrecorded legacy artifact)
     t: int | None = None  # APNC-SD subset size
     q: int = 1  # ensemble blocks
@@ -52,10 +55,10 @@ class FitMeta:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class ClusterModel:
-    """A fitted embed-and-conquer clustering: coefficients + centroids +
+    """A fitted embed-and-conquer clustering: embedding params + centroids +
     inertia + fit metadata. The single artifact of `KernelKMeans.fit`."""
 
-    coeffs: APNCCoefficients
+    params: EmbeddingParams  # fitted params of the registered embedding member
     centroids: Array  # (k, m) in embedding space
     # () sum of e(y_i, c_{pi(i)}). Full-data for every fit() backend (the
     # streaming ones run a final full pass); for partial_fit the cost of the
@@ -64,6 +67,11 @@ class ClusterModel:
     meta: FitMeta = dataclasses.field(
         metadata=dict(static=True), default_factory=FitMeta
     )
+
+    @property
+    def coeffs(self) -> EmbeddingParams:
+        """Legacy alias from when APNC coefficients were the only params."""
+        return self.params
 
     @property
     def k(self) -> int:
@@ -75,11 +83,11 @@ class ClusterModel:
 
     @property
     def discrepancy(self) -> Discrepancy:
-        return self.coeffs.discrepancy
+        return self.params.discrepancy
 
     def predict(self, X, *, policy=None) -> Array:
         """Assign unseen points: embed then nearest centroid under e — the
         online path of Property 4.4, independent of which backend fit us."""
         from repro.core.kkmeans import predict as _predict
 
-        return _predict(X, self.coeffs, self.centroids, policy=policy)
+        return _predict(X, self.params, self.centroids, policy=policy)

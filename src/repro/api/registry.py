@@ -1,20 +1,31 @@
-"""String-keyed registries: backends, kernels, APNC methods.
+"""String-keyed registries: backends, kernels, embeddings.
 
-The paper's point is one embedding definition with interchangeable execution
-regimes; the registries make that literal — `KernelKMeans(backend=..., kernel=
-..., method=...)` resolves every axis of variation by name, and downstream
-code (new execution engines, new kernels kappa, new coefficient fits) extends
-the estimator by registering, not by editing the facade.
+The paper's point is one embedding *family* definition with interchangeable
+execution regimes; the registries make that literal — `KernelKMeans(backend=
+..., kernel=..., method=...)` resolves every axis of variation by name, and
+downstream code (new execution engines, new kernels kappa, new embedding
+family members) extends the estimator by registering, not by editing the
+facade. Backends and kernels live here; the embedding registry is owned by
+`repro.embed` (the family members carry their own fit/transform/properties)
+and re-exported for the facade's convenience.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable
 
 import jax
 
-from repro.core import nystrom, stable
-from repro.core.apnc import APNCCoefficients
 from repro.core.kernels_fn import Kernel
+from repro.embed import (  # noqa: F401  (re-exported registry surface)
+    EMBEDDINGS,
+    Embedding,
+    available_embeddings,
+    embedding_for,
+    get_embedding,
+    register_embedding,
+    unregister_embedding,
+)
 
 Array = jax.Array
 
@@ -86,33 +97,39 @@ def resolve_kernel(kernel: str | Kernel, params: dict | None = None) -> Kernel:
     return factory(**(params or {}))
 
 
-# ---------------------------------------------------------------- methods
+# ------------------------------------------------- methods (legacy shims)
 
-# A method fits APNC coefficients: (key, X, kernel, *, l, m, t, q) -> coeffs.
-METHODS: dict[str, Callable[..., APNCCoefficients]] = {
-    "nystrom": lambda key, X, kernel, *, l, m, t=None, q=1: nystrom.fit(
-        key, X, kernel, l=l, m=m, q=q
-    ),
-    "sd": lambda key, X, kernel, *, l, m, t=None, q=1: stable.fit(
-        key, X, kernel, l=l, m=m, t=t, q=q
-    ),
-}
+# The old "method" registry fit bare APNC coefficients; embeddings are now
+# first-class (fit + transform + properties, repro.embed). These shims keep
+# the old entry points alive: a legacy-registered fit function becomes a full
+# family member sharing the APNC transform.
 
 
 def register_method(name: str):
-    """Decorator: add an APNC coefficient-fitting method."""
+    """DEPRECATED decorator: register a bare APNC coefficient fit
+    `(key, X, kernel, *, l, m, t, q) -> APNCCoefficients`. Wraps it into a
+    full `Embedding` (APNC transform, properties from the fitted params).
+    New code should `register_embedding` a member directly."""
 
     def deco(fn):
-        METHODS[name] = fn
+        warnings.warn(
+            "register_method is deprecated; use repro.embed.register_embedding",
+            DeprecationWarning, stacklevel=2,
+        )
+        from repro.embed.apnc import _APNCBase
+
+        class _LegacyMethod(_APNCBase):
+            def fit(self, key, data, kernel, *, l, m, t=None, q=1):
+                return fn(key, data, kernel, l=l, m=m, t=t, q=q)
+
+        _LegacyMethod.name = name
+        register_embedding(_LegacyMethod)
         return fn
 
     return deco
 
 
-def get_method(name: str):
-    try:
-        return METHODS[name]
-    except KeyError:
-        raise ValueError(
-            f"unknown APNC method {name!r}; registered: {sorted(METHODS)}"
-        ) from None
+def get_method(name: str) -> Callable:
+    """DEPRECATED: the registered embedding's bound `fit`. Use
+    `repro.embed.get_embedding(name)` for the full member."""
+    return get_embedding(name).fit

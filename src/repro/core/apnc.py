@@ -52,6 +52,10 @@ class APNCCoefficients:
     def l(self) -> int:  # total number of landmarks
         return self.landmarks.shape[0] * self.landmarks.shape[1]
 
+    @property
+    def d(self) -> int:  # input dimensionality
+        return self.landmarks.shape[-1]
+
 
 def embed_block(X: Array, landmarks_b: Array, R_b: Array, kernel: Kernel) -> Array:
     """One block of Algorithm 1: y_[b] = R^(b) K_{L^(b), i} for a batch of rows.

@@ -98,15 +98,16 @@ def approx_kkm(
 
 
 def rff_features(key: Array, X: Array, gamma: float, m: int) -> Array:
-    """Random Fourier features for the RBF kernel exp(-gamma ||x-z||^2):
-    z(x) = sqrt(2/m) cos(W x + b), W ~ N(0, 2 gamma I), b ~ U[0, 2 pi).
-    m cosine features (the paper's '500 fourier features -> 1000-dim' uses the
-    [cos, sin] convention; we expose m directly and use 2m-dim [cos, sin])."""
-    kw, kb = jax.random.split(key)
-    d = X.shape[-1]
-    W = jax.random.normal(kw, (d, m), X.dtype) * jnp.sqrt(2.0 * gamma)
-    proj = X @ W
-    return jnp.sqrt(1.0 / m) * jnp.concatenate([jnp.cos(proj), jnp.sin(proj)], -1)
+    """Random Fourier features for the RBF kernel exp(-gamma ||x-z||^2), in
+    the [cos, sin] convention (m cosine features -> 2m dims).
+
+    Shim over the first-class "rff" embedding member (repro.embed.rff), which
+    draws the identical W under the identical key — the baseline and the
+    registry member are the same map by construction."""
+    from repro.embed.rff import RFFEmbedding, rff_transform
+
+    params = RFFEmbedding().fit(key, X, Kernel("rbf", gamma=float(gamma)), l=0, m=m)
+    return rff_transform(params, X)
 
 
 def _vector_kmeans(key: Array, Z: Array, k: int, iters: int) -> ClusterResult:

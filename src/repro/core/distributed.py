@@ -23,11 +23,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 
-from repro.core.apnc import (
-    APNCCoefficients,
-    Discrepancy,
-    pairwise_discrepancy,
-)
+from repro.core.apnc import Discrepancy, pairwise_discrepancy
 from repro.core.lloyd import assign_stats, centroid_update
 from repro.policy import ComputePolicy, resolve_policy
 
@@ -46,29 +42,30 @@ def shard_rows(mesh: Mesh) -> NamedSharding:
 
 
 def distributed_embed(
-    mesh: Mesh, X: Array, coeffs: APNCCoefficients, *,
+    mesh: Mesh, X: Array, params, *,
     policy: ComputePolicy | None = None, use_pallas: bool | None = None,
 ) -> Array:
-    """Algorithm 1 on the mesh. X is row-sharded; (R, L) replicated. Map-only:
+    """Algorithm 1 on the mesh, for ANY registered embedding member. X is
+    row-sharded; the embedding params (tiny, P4.3) are replicated. Map-only:
     the lowered program contains no collectives (asserted in tests)."""
     axes = data_axes_of(mesh)
     pol = resolve_policy(policy, use_pallas, owner="distributed_embed: ")
 
-    def block(x_shard, landmarks, R):
+    def block(x_shard, p):
         # route through the single policy dispatch point so pallas AND
         # precision behave exactly as on the local/stream paths
-        from repro.core.kkmeans import apnc_embed
+        from repro import embed
 
-        c = APNCCoefficients(landmarks, R, coeffs.kernel, coeffs.discrepancy)
-        return apnc_embed(x_shard, c, pol)
+        return embed.transform(p, x_shard, pol)
 
     fn = shard_map(
         block,
         mesh=mesh,
-        in_specs=(P(axes), P(), P()),
+        # P() is a spec PREFIX for the params pytree: every leaf replicated.
+        in_specs=(P(axes), P()),
         out_specs=P(axes),
     )
-    return fn(X, coeffs.landmarks, coeffs.R)
+    return fn(X, params)
 
 
 def distributed_lloyd(

@@ -10,19 +10,16 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Literal
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import nystrom, stable
-from repro.core.apnc import APNCCoefficients, embed
+from repro.core.apnc import APNCCoefficients
 from repro.core.kernels_fn import Kernel
 from repro.core.lloyd import LloydResult, lloyd
 from repro.policy import ComputePolicy, as_policy, resolve_policy
 
 Array = jax.Array
-Method = Literal["nystrom", "sd"]
+Method = str  # any registered embedding name (see repro.embed)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,30 +59,24 @@ class APNCConfig:
 
 
 def fit_coefficients(key: Array, X: Array, kernel: Kernel, cfg: APNCConfig) -> APNCCoefficients:
-    if cfg.method == "nystrom":
-        return nystrom.fit(key, X, kernel, l=cfg.l, m=cfg.m, q=cfg.q)
-    if cfg.method == "sd":
-        return stable.fit(key, X, kernel, l=cfg.l, m=cfg.m, t=cfg.t, q=cfg.q)
-    raise ValueError(f"unknown APNC method {cfg.method!r}")
+    """Fit the configured member's params (shim over the embedding registry —
+    any registered name works, not just the original "nystrom"/"sd")."""
+    from repro.embed import get_embedding
+
+    return get_embedding(cfg.method).fit(
+        key, X, kernel, l=cfg.l, m=cfg.m, t=cfg.t, q=cfg.q
+    )
 
 
 def apnc_embed(
     X: Array, coeffs: APNCCoefficients, policy: ComputePolicy | bool | None = None
 ) -> Array:
-    """Policy-routed embedding dispatch: Pallas kernel or jnp reference, with
-    optional bf16 compute (f32 out). A legacy positional bool still works."""
-    pol = as_policy(policy)
-    if pol.resolve_pallas():
-        from repro.kernels import ops  # local import: kernels are optional at runtime
+    """Policy-routed embedding dispatch (shim over `repro.embed.transform`,
+    which routes Pallas / bf16 / reference for every registered member). A
+    legacy positional bool still works."""
+    from repro.embed import transform
 
-        return ops.apnc_embed(X, coeffs)
-    if pol.precision == "bf16":
-        c16 = APNCCoefficients(
-            coeffs.landmarks.astype(jnp.bfloat16), coeffs.R.astype(jnp.bfloat16),
-            coeffs.kernel, coeffs.discrepancy,
-        )
-        return embed(X.astype(jnp.bfloat16), c16).astype(jnp.float32)
-    return embed(X, coeffs)
+    return transform(coeffs, X, as_policy(policy))
 
 
 def fit_predict(

@@ -1,46 +1,28 @@
-"""APNC-Nys: embedding coefficients via the Nystrom method (paper Section 6, Alg 3).
+"""APNC-Nys (paper Section 6, Alg 3) — SHIM.
 
-R = Lambda_m^{-1/2} V_m^T from the rank-m eigendecomposition of K_LL, giving
-W = Lambda^{-1/2} U^T D as the feature map whose Euclidean geometry reproduces the
-Nystrom low-rank kernel (Eq. 7-9). Discrepancy e = l2.
+The coefficient fit moved to `repro.embed.apnc` (the "nystrom" member of the
+first-class embedding registry); this module keeps the original call shape for
+existing call sites. New code should go through `repro.embed.get_embedding`
+or the `KernelKMeans(method="nystrom")` facade.
 
-The ensemble extension [23] mentioned in Section 6 is supported via q > 1: the
-landmark sample is split into q disjoint subsets, each fit independently, and the
-resulting R blocks form the block-diagonal coefficients matrix of Property 4.3.
+(Imports are lazy: repro.core is imported by repro.embed at definition time,
+so the shim edge back into repro.embed must not run at module import.)
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.apnc import APNCCoefficients
 from repro.core.kernels_fn import Kernel
 
 Array = jax.Array
 
-_EIG_EPS = 1e-8
-
 
 def sample_landmarks(key: Array, X: Array, l: int) -> Array:
-    """Algorithm 3 map phase: uniform sample of l rows (deterministic under key —
-    the Bernoulli(l/n) of the paper is replaced by sampling without replacement so
-    restarts reproduce exactly; the distribution is the same conditional on size)."""
-    n = X.shape[0]
-    idx = jax.random.choice(key, n, (l,), replace=False)
-    return X[idx]
+    """Uniform landmark sample (shim over repro.embed.apnc.sample_landmarks)."""
+    from repro.embed.apnc import sample_landmarks as _sample
 
-
-def _fit_block(landmarks: Array, kernel: Kernel, m: int) -> Array:
-    """Algorithm 3 reduce phase for one block: R^(b) = Lambda_m^{-1/2} V_m^T."""
-    K_LL = kernel.gram(landmarks, landmarks)
-    # eigh returns ascending order; take the top-m.
-    lam, V = jnp.linalg.eigh(K_LL)  # (l,), (l, l)
-    lam_m = lam[-m:]  # (m,)
-    V_m = V[:, -m:]  # (l, m)
-    # Clamp tiny/negative eigenvalues (K_LL is PSD up to roundoff): their inverse
-    # square root is zeroed, which drops the corresponding (noise) direction.
-    inv_sqrt = jnp.where(lam_m > _EIG_EPS, jax.lax.rsqrt(jnp.maximum(lam_m, _EIG_EPS)), 0.0)
-    return inv_sqrt[:, None] * V_m.T  # (m, l)
+    return _sample(key, X, l)
 
 
 def fit(
@@ -51,16 +33,7 @@ def fit(
     m: int,
     q: int = 1,
 ) -> APNCCoefficients:
-    """Fit APNC-Nys coefficients. l landmarks total, embedding dim q * m.
+    """Fit APNC-Nys coefficients (shim over repro.embed.apnc.fit_nystrom)."""
+    from repro.embed.apnc import fit_nystrom
 
-    q = 1 is the paper's Algorithm 3; q > 1 is the ensemble-Nystrom extension
-    (each of q disjoint landmark subsets of size l // q gets its own R block).
-    """
-    if l % q:
-        raise ValueError(f"l={l} must be divisible by q={q}")
-    l_b = l // q
-    if m > l_b:
-        raise ValueError(f"m={m} must be <= landmarks-per-block {l_b}")
-    landmarks = sample_landmarks(key, X, l).reshape(q, l_b, X.shape[-1])
-    R = jnp.stack([_fit_block(landmarks[b], kernel, m) for b in range(q)])
-    return APNCCoefficients(landmarks=landmarks, R=R, kernel=kernel, discrepancy="l2")
+    return fit_nystrom(key, X, kernel, l=l, m=m, q=q)

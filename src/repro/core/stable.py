@@ -1,52 +1,21 @@
-"""APNC-SD: embedding coefficients via p-stable distributions (Section 7, Alg 4).
+"""APNC-SD (paper Section 7, Alg 4) — SHIM.
 
-Construction (all in the kernel-induced space, fully kernelized):
-  1. Sample l landmarks L; center their gram matrix:  H K_LL H,  H = I - ee^T / l.
-  2. E = Lambda^{-1/2} V^T, the inverse square root of the centered gram — the
-     whitening transform of Eq. (14) expressed in the landmark basis.
-  3. Each of the m rows of R sums t random rows of E (CLT: r^(j) is approximately
-     an isotropic Gaussian direction in kernel space), then R <- R H re-centers.
-  4. y = R K_{L, i};  distances are read out with e = l1 (Eq. 13), since for a
-     2-stable (Gaussian) projection  ||phi - phi_bar||_2 ~ (alpha/m) ||y - y_bar||_1.
+The coefficient fit moved to `repro.embed.apnc` (the "sd" member of the
+first-class embedding registry); this module keeps the original call shape for
+existing call sites. New code should go through `repro.embed.get_embedding`
+or the `KernelKMeans(method="sd")` facade.
 
-The centered gram has rank <= l-1; near-zero eigenvalues are dropped from the
-whitening (their inverse would explode a direction that carries no data variance).
+(Imports are lazy: repro.core is imported by repro.embed at definition time,
+so the shim edge back into repro.embed must not run at module import.)
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.apnc import APNCCoefficients
 from repro.core.kernels_fn import Kernel
-from repro.core.nystrom import sample_landmarks
 
 Array = jax.Array
-
-_EIG_EPS = 1e-8
-
-
-def _fit_block(key: Array, landmarks: Array, kernel: Kernel, m: int, t: int) -> Array:
-    l = landmarks.shape[0]
-    K_LL = kernel.gram(landmarks, landmarks)
-    H = jnp.eye(l) - jnp.full((l, l), 1.0 / l)
-    G = H @ K_LL @ H  # centered gram
-    G = 0.5 * (G + G.T)  # fight asymmetry from roundoff before eigh
-    lam, V = jnp.linalg.eigh(G)
-    inv_sqrt = jnp.where(lam > _EIG_EPS, jax.lax.rsqrt(jnp.maximum(lam, _EIG_EPS)), 0.0)
-    E = inv_sqrt[:, None] * V.T  # (l, l) inverse square root factor
-
-    # m random t-subsets of rows of E (Alg 4 lines 11-14). A boolean selection
-    # matrix S (m, l) with exactly t ones per row lets the sum be one matmul.
-    def one_row(k):
-        sel = jax.random.choice(k, l, (t,), replace=False)
-        return jnp.zeros((l,)).at[sel].set(1.0)
-
-    S = jax.vmap(one_row)(jax.random.split(key, m))  # (m, l)
-    R = (S @ E) @ H  # rows R_r = (sum_{v in T_r} E_v) H   [Alg 4 line 15]
-    # 1/sqrt(t) from Eq. (14) keeps projections O(1)-scaled; it is absorbed into
-    # the constant beta of Property 4.4 but applying it keeps numerics tame.
-    return R / jnp.sqrt(jnp.asarray(t, R.dtype))
 
 
 def fit(
@@ -58,15 +27,7 @@ def fit(
     t: int | None = None,
     q: int = 1,
 ) -> APNCCoefficients:
-    """Fit APNC-SD coefficients. Default t = 40% of l per the paper's experiments."""
-    if l % q:
-        raise ValueError(f"l={l} must be divisible by q={q}")
-    l_b = l // q
-    t = max(1, int(round(0.4 * l_b))) if t is None else t
-    if not 1 <= t <= l_b:
-        raise ValueError(f"t={t} must be in [1, {l_b}]")
-    k_sample, k_rows = jax.random.split(key)
-    landmarks = sample_landmarks(k_sample, X, l).reshape(q, l_b, X.shape[-1])
-    keys = jax.random.split(k_rows, q)
-    R = jnp.stack([_fit_block(keys[b], landmarks[b], kernel, m, t) for b in range(q)])
-    return APNCCoefficients(landmarks=landmarks, R=R, kernel=kernel, discrepancy="l1")
+    """Fit APNC-SD coefficients (shim over repro.embed.apnc.fit_sd)."""
+    from repro.embed.apnc import fit_sd
+
+    return fit_sd(key, X, kernel, l=l, m=m, t=t, q=q)

@@ -1,26 +1,32 @@
 """Data-pipeline integration of the paper's technique: kernelized corpus
 clustering for curation/grouping (DESIGN.md section 4).
 
-`cluster_corpus` embeds document feature vectors with an APNC embedding and
-clusters them with the MapReduce->shard_map Lloyd programs — the exact use-case
-the paper motivates (grouping complex data without hand-vectorizing) running on
-the same mesh as training.
+`cluster_corpus` embeds document feature vectors with a registered embedding
+member and clusters them with the MapReduce->shard_map Lloyd programs — the
+exact use-case the paper motivates (grouping complex data without
+hand-vectorizing) running on the same mesh as training. It goes through the
+public `KernelKMeans` facade (backend="shard_map"), so it accepts any
+registered embedding/kernel name and produces the canonical ClusterModel
+artifact — no deprecated method kwargs or internal driver entry points.
 """
 from __future__ import annotations
 
-import jax
-
-from repro.core.distributed import distributed_fit_predict, shard_rows
-from repro.core.kernels_fn import Kernel, self_tuned_rbf
-from repro.core.kkmeans import APNCConfig
+from repro.api import KernelKMeans
+from repro.core.kernels_fn import Kernel
 
 
 def cluster_corpus(mesh, X, k: int, *, method: str = "sd", l: int = 256, m: int = 256,
-                   kernel: Kernel | None = None, seed: int = 0, iters: int = 20):
-    """X: (n_docs, d_features) host or device array. Returns (labels, centroids,
-    coeffs) — labels row-sharded on the mesh, coeffs reusable for online
-    assignment of new documents (core.kkmeans.predict)."""
-    X = jax.device_put(X, shard_rows(mesh))
-    kernel = kernel or self_tuned_rbf(X)
-    cfg = APNCConfig(method=method, l=l, m=m, iters=iters)
-    return distributed_fit_predict(mesh, jax.random.PRNGKey(seed), X, kernel, k, cfg)
+                   kernel: Kernel | str | None = None, seed: int = 0, iters: int = 20):
+    """X: (n_docs, d_features) host or device array. Returns (labels,
+    centroids, params) — labels host-resident int32, params (the fitted
+    EmbeddingParams) reusable for online assignment of new documents
+    (`model.predict` / `core.kkmeans.predict`). The fitted estimator's
+    `model_` carries the full artifact for save/serve."""
+    est = KernelKMeans(
+        # kernel=None keeps the historical behavior: self-tuned rbf
+        k, kernel=kernel if kernel is not None else "rbf", method=method,
+        backend="shard_map", l=l, m=m, iters=iters, mesh=mesh,
+        random_state=seed,
+    )
+    est.fit(X)  # facade handles host/device coercion; no eager host copy
+    return est.labels_, est.model_.centroids, est.model_.params

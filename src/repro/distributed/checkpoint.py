@@ -147,24 +147,47 @@ def restore(
 
 
 def save_cluster_model(ckpt_dir: str | Path, model, *, step: int = 0) -> Path:
-    """Persist the canonical `repro.api.ClusterModel` artifact: the (R, L)
-    coefficient arrays plus final centroids as npz trees, with the static
-    kernel/discrepancy config, achieved inertia and fit metadata in the
-    manifest meta — everything `repro.launch.cluster_serve` needs to assign
-    unseen points online, regardless of which backend fit the model."""
+    """Persist the canonical `repro.api.ClusterModel` artifact: the fitted
+    EmbeddingParams arrays (whatever member fit them — APNC (R, L), an RFF
+    frequency matrix, sketch matrices, a user-registered map) plus final
+    centroids as npz trees, with the member name and its static config,
+    achieved inertia and fit metadata in the manifest meta — everything
+    `repro.launch.cluster_serve` needs to assign unseen points online,
+    regardless of which backend fit the model."""
     import dataclasses
 
     import math
 
+    from repro.embed import embedding_for
+
+    from repro.core.apnc import APNCCoefficients
+
+    emb = embedding_for(model.params)
+    arrays, config = emb.params_state(model.params)
+    # meta.method is authoritative when recorded; nystrom and sd share a
+    # params type (type dispatch alone is last-registered-wins), but their
+    # declared discrepancy tells them apart for legacy-shim artifacts.
+    method = model.meta.method
+    if method == "unknown":
+        if isinstance(model.params, APNCCoefficients):
+            method = "nystrom" if model.params.discrepancy == "l2" else "sd"
+        else:
+            method = emb.name
     trees = {
-        "coeffs": {"landmarks": model.coeffs.landmarks, "R": model.coeffs.R},
+        "coeffs": arrays,
         "centroids": {"centroids": model.centroids},
     }
     inertia = float(model.inertia)
     meta = {
         "clustering": {
-            "kernel": dataclasses.asdict(model.coeffs.kernel),
-            "discrepancy": model.coeffs.discrepancy,
+            "embedding": {"method": method, "config": config},
+            # duplicated flat keys: kept for pre-embedding-registry readers
+            # of APNC artifacts (and harmless provenance otherwise)
+            "discrepancy": model.params.discrepancy,
+            **(
+                {"kernel": dataclasses.asdict(model.params.kernel)}
+                if getattr(model.params, "kernel", None) is not None else {}
+            ),
             # None, not NaN/Infinity: the manifest must stay strict-JSON parseable
             "inertia": inertia if math.isfinite(inertia) else None,
             "fit": dataclasses.asdict(model.meta),
@@ -174,12 +197,17 @@ def save_cluster_model(ckpt_dir: str | Path, model, *, step: int = 0) -> Path:
 
 
 def load_cluster_model(ckpt_dir: str | Path, *, step: int | None = None):
-    """Inverse of save_cluster_model: returns a `repro.api.ClusterModel`."""
+    """Inverse of save_cluster_model: returns a `repro.api.ClusterModel`.
+
+    Artifacts written before the embedding registry carry no "embedding" key
+    and are decoded as APNC coefficients (the only family member back then).
+    """
     import jax.numpy as jnp
 
     from repro.api.model import ClusterModel, FitMeta
     from repro.core.apnc import APNCCoefficients
     from repro.core.kernels_fn import Kernel
+    from repro.embed import get_embedding
 
     ckpt_dir = Path(ckpt_dir)
     if step is None:
@@ -201,16 +229,20 @@ def load_cluster_model(ckpt_dir: str | Path, *, step: int | None = None):
         {"coeffs": templates("coeffs"), "centroids": templates("centroids")},
         step=step,
     )
-    coeffs = APNCCoefficients(
-        landmarks=out["coeffs"]["landmarks"],
-        R=out["coeffs"]["R"],
-        kernel=Kernel(**meta["kernel"]),
-        discrepancy=meta["discrepancy"],
-    )
+    if "embedding" in meta:
+        emb = get_embedding(meta["embedding"]["method"])
+        params = emb.params_restore(out["coeffs"], meta["embedding"]["config"])
+    else:  # legacy APNC artifact
+        params = APNCCoefficients(
+            landmarks=out["coeffs"]["landmarks"],
+            R=out["coeffs"]["R"],
+            kernel=Kernel(**meta["kernel"]),
+            discrepancy=meta["discrepancy"],
+        )
     fit_meta = FitMeta(**meta["fit"]) if "fit" in meta else FitMeta()
     raw_inertia = meta.get("inertia")
     return ClusterModel(
-        coeffs=coeffs,
+        params=params,
         centroids=out["centroids"]["centroids"],
         inertia=jnp.asarray(
             float("nan") if raw_inertia is None else raw_inertia, jnp.float32
@@ -226,7 +258,7 @@ def save_clustering_model(ckpt_dir: str | Path, coeffs, centroids, *, step: int 
     from repro.api.model import ClusterModel, FitMeta
 
     model = ClusterModel(
-        coeffs=coeffs,
+        params=coeffs,
         centroids=jnp.asarray(centroids),
         inertia=jnp.asarray(float("nan"), jnp.float32),
         meta=FitMeta(k=int(centroids.shape[0]), kernel_name=coeffs.kernel.name),

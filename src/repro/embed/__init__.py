@@ -1,0 +1,71 @@
+"""repro.embed — the paper's embedding family as a first-class subsystem.
+
+One protocol (`Embedding`: fit -> typed EmbeddingParams pytree + pure jittable
+transform + declared family properties), one registry, one policy-routed
+dispatch point (`transform`) that every consumer — local backend, stream
+engine, shard_map programs, the serving path, checkpoints — goes through.
+
+Built-in members:
+
+    nystrom       APNC-Nys (Section 6): R = Lambda^{-1/2} V^T of K_LL; e = l2
+    sd            APNC-SD (Section 7): p-stable kernel-space directions; e = l1
+    rff           random Fourier features (shift-invariant kernels); e = l2
+    tensorsketch  Pham-Pagh sketch of polynomial kernels; e = l2
+
+Extending:
+
+    from repro.embed import Embedding, register_embedding
+
+    @register_embedding
+    class MyMap(Embedding):
+        name = "mymap"
+        params_cls = MyParams          # a register_dataclass pytree
+        def fit(self, key, data, kernel, *, l, m, t=None, q=1): ...
+        def transform(self, params, X): ...   # pure, jittable
+        def props(self, params): ...
+
+and `KernelKMeans(method="mymap")` fits, predicts, saves and loads through
+every backend without further changes.
+"""
+from repro.embed.base import (
+    DEFAULT_EMBEDDING,
+    EMBEDDINGS,
+    Embedding,
+    EmbeddingParams,
+    EmbeddingProps,
+    available_embeddings,
+    embedding_for,
+    get_embedding,
+    props_of,
+    register_embedding,
+    transform,
+    unregister_embedding,
+)
+
+# Importing the member modules registers the built-ins.
+from repro.embed import apnc as _apnc  # noqa: F401
+from repro.embed import rff as _rff  # noqa: F401
+from repro.embed import tensorsketch as _tensorsketch  # noqa: F401
+from repro.embed.apnc import fit_nystrom, fit_sd, sample_landmarks
+from repro.embed.rff import RFFParams
+from repro.embed.tensorsketch import TensorSketchParams
+
+__all__ = [
+    "DEFAULT_EMBEDDING",
+    "EMBEDDINGS",
+    "Embedding",
+    "EmbeddingParams",
+    "EmbeddingProps",
+    "RFFParams",
+    "TensorSketchParams",
+    "available_embeddings",
+    "embedding_for",
+    "fit_nystrom",
+    "fit_sd",
+    "get_embedding",
+    "props_of",
+    "register_embedding",
+    "sample_landmarks",
+    "transform",
+    "unregister_embedding",
+]

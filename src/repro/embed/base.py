@@ -1,0 +1,268 @@
+"""The Embedding protocol: the paper's family definition as a first-class API.
+
+Section 4 defines APNC as a *family*: any map f with P4.1 (linearity in the
+kernel representation), P4.2/P4.3 (kernelized, block-diagonal coefficients)
+and P4.4 (a discrepancy e under which distances concentrate) admits the same
+unified MapReduce parallelization. The codebase used to hardcode two members
+("nystrom", "sd") as untyped lambdas; this module makes the family literal:
+
+  * an `Embedding` is a registered object with `fit(key, data, kernel, ...)
+    -> EmbeddingParams` (a typed pytree per member) and a pure, jittable
+    `transform(params, X) -> Y`;
+  * `props(params)` declares the family properties the consumers rely on —
+    input-space linearity (P4.1 as testable: transform commutes with row
+    means), the discrepancy e ("l2" | "l1", P4.4), block-diagonal q>1
+    support (P4.3) and whether the member is landmark-free;
+  * `transform(params, X, policy)` (module level) is the ONE routed dispatch
+    point every consumer (local backend, stream engine, shard_map programs,
+    the serving path) goes through: Pallas fused kernels when the policy
+    says so and the member has one, bf16 compute on request, jnp reference
+    otherwise;
+  * `params_state` / `params_restore` give every member (including
+    user-registered ones) checkpoint serialization for free, derived from
+    the dataclass fields: array fields -> npz leaves, static fields -> JSON.
+
+Registering a new member (`register_embedding`) makes it reachable from
+`KernelKMeans(method=...)`, every execution backend, the checkpoint layer and
+the online assignment service without touching any of them.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernels_fn import Kernel
+from repro.policy import ComputePolicy, as_policy
+
+Array = jax.Array
+Discrepancy = Literal["l2", "l1"]
+
+#: EmbeddingParams is a protocol, not a base class: any registered-dataclass
+#: pytree with array data fields, JSON-able static fields, and `m` (output
+#: dim), `d` (input dim) and `discrepancy` attributes qualifies.
+EmbeddingParams = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingProps:
+    """Declared family properties of a *fitted* member (paper Section 4).
+
+    linear:        P4.1 as an input-space statement: transform commutes with
+                   row means (holds e.g. for APNC under the linear kernel and
+                   degree-1 sketches; asserted for every declared-linear
+                   member in tests/test_embed.py).
+    discrepancy:   the e(., .) of P4.4 under which embedded distances
+                   concentrate — "l2" (Nystrom, RFF, sketches) or "l1"
+                   (stable distributions).
+    blockwise:     P4.3: supports q > 1 block-diagonal ensembles.
+    landmark_free: the fit is a data-independent draw (no landmark gram);
+                   only the input dimensionality is read from the data.
+                   Declare this on the Embedding CLASS attribute (the
+                   pre-fit source consumers like partial_fit read) and
+                   mirror it here via `landmark_free=self.landmark_free`.
+    """
+
+    linear: bool
+    discrepancy: Discrepancy
+    blockwise: bool = False
+    landmark_free: bool = False
+
+
+class Embedding(abc.ABC):
+    """One member of the paper's embedding family.
+
+    Subclasses set `name` and `params_cls` and implement `fit`, `transform`
+    and `props`. `transform` MUST be pure and jittable: it is traced inside
+    the fused per-block dispatches of kernels/ops.py and inside shard_map
+    programs. `pallas_transform` may return a fused-kernel result (or None to
+    fall back to the jnp reference) — the policy routing in
+    `repro.embed.transform` consults it.
+    """
+
+    name: str = ""
+    params_cls: type = object
+    #: Member-level form of EmbeddingProps.landmark_free, readable BEFORE a
+    #: fit exists (e.g. to skip landmark-count preconditions on input sizing).
+    landmark_free: bool = False
+    #: Kernel families the member can approximate, or None for "any kernel"
+    #: (the kernelized APNC members). Drives CLI kernel selection and lets
+    #: fit() reject foreign kernels consistently.
+    kernel_families: tuple[str, ...] | None = None
+
+    @abc.abstractmethod
+    def fit(
+        self, key: Array, data: Array, kernel: Kernel, *,
+        l: int, m: int, t: int | None = None, q: int = 1,
+    ) -> EmbeddingParams:
+        """Fit the member on `data` (landmark sample or raw rows; for
+        landmark-free members only the input dim is read). The l/m/t/q
+        hyperparameters follow the paper's naming; members validate the ones
+        they use and reject the ones they cannot honor (e.g. q > 1 on a
+        non-blockwise member)."""
+
+    @abc.abstractmethod
+    def transform(self, params: EmbeddingParams, X: Array) -> Array:
+        """Pure, jittable reference map: (n, d) -> (n, params.m), f32."""
+
+    @abc.abstractmethod
+    def props(self, params: EmbeddingParams) -> EmbeddingProps:
+        """Family properties of this fitted member."""
+
+    def pallas_transform(self, params: EmbeddingParams, X: Array) -> Array | None:
+        """Fused-kernel fast path, or None when the member has none."""
+        return None
+
+    # ------------------------------------------------------- serialization
+
+    def params_state(
+        self, params: EmbeddingParams
+    ) -> tuple[dict[str, np.ndarray], dict]:
+        """(arrays, config): array dataclass fields as host arrays, static
+        fields as a strict-JSON dict. The default works for any
+        register_dataclass params; override only for exotic layouts."""
+        arrays: dict[str, np.ndarray] = {}
+        config: dict = {}
+        for f in dataclasses.fields(params):
+            v = getattr(params, f.name)
+            if f.metadata.get("static"):
+                config[f.name] = _config_encode(v)
+            else:
+                arrays[f.name] = np.asarray(jax.device_get(v))
+        return arrays, config
+
+    def params_restore(
+        self, arrays: dict[str, np.ndarray], config: dict
+    ) -> EmbeddingParams:
+        """Inverse of params_state."""
+        kw: dict = {k: _config_decode(v) for k, v in config.items()}
+        kw.update({k: jnp.asarray(v) for k, v in arrays.items()})
+        return self.params_cls(**kw)
+
+
+_KERNEL_TAG = "__kernel__"
+
+
+def _config_encode(v):
+    if isinstance(v, Kernel):
+        return {_KERNEL_TAG: dataclasses.asdict(v)}
+    if v is None or isinstance(v, (str, int, float, bool)):
+        return v
+    raise TypeError(
+        f"static embedding-params field of type {type(v).__name__} is not "
+        "JSON-serializable; override params_state/params_restore"
+    )
+
+
+def _config_decode(v):
+    if isinstance(v, dict) and _KERNEL_TAG in v:
+        return Kernel(**v[_KERNEL_TAG])
+    return v
+
+
+# ------------------------------------------------------------------ registry
+
+EMBEDDINGS: dict[str, Embedding] = {}
+_BY_PARAMS: dict[type, Embedding] = {}
+
+#: The registry's canonical default member (what CLIs fall back to).
+DEFAULT_EMBEDDING = "nystrom"
+
+
+def register_embedding(embedding: Embedding | type) -> Embedding | type:
+    """Register a family member (instance or class; usable as a decorator).
+
+    Makes it reachable by name from `KernelKMeans(method=...)`, and by params
+    type from every transform dispatch and the checkpoint layer."""
+    emb = embedding() if isinstance(embedding, type) else embedding
+    if not emb.name:
+        raise ValueError(f"{type(emb).__name__} must set a non-empty .name")
+    if emb.params_cls is object:
+        raise ValueError(f"{type(emb).__name__} must set .params_cls")
+    EMBEDDINGS[emb.name] = emb
+    _BY_PARAMS[emb.params_cls] = emb
+    return embedding
+
+
+def unregister_embedding(name: str) -> None:
+    """Remove a registered member (tests / plugin teardown)."""
+    emb = EMBEDDINGS.pop(name, None)
+    if emb is not None and _BY_PARAMS.get(emb.params_cls) is emb:
+        # Members may share a params type (nystrom/sd both use
+        # APNCCoefficients): rebind the type dispatch to a surviving member
+        # instead of orphaning every other user of that params class.
+        survivor = next(
+            (e for e in EMBEDDINGS.values() if e.params_cls is emb.params_cls),
+            None,
+        )
+        if survivor is not None:
+            _BY_PARAMS[emb.params_cls] = survivor
+        else:
+            del _BY_PARAMS[emb.params_cls]
+
+
+def available_embeddings() -> list[str]:
+    return sorted(EMBEDDINGS)
+
+
+def get_embedding(name: str) -> Embedding:
+    try:
+        return EMBEDDINGS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown embedding {name!r}; registered: {available_embeddings()}"
+        ) from None
+
+
+def embedding_for(params: EmbeddingParams) -> Embedding:
+    """Dispatch on the params pytree type (members sharing a params type —
+    nystrom/sd — share one transform; the discrepancy rides in the params)."""
+    try:
+        return _BY_PARAMS[type(params)]
+    except KeyError:
+        raise TypeError(
+            f"no registered embedding handles params of type "
+            f"{type(params).__name__}; call register_embedding first"
+        ) from None
+
+
+# ------------------------------------------------------------ routed dispatch
+
+
+def _cast_float_leaves(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype)
+        if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+def transform(
+    params: EmbeddingParams, X: Array,
+    policy: ComputePolicy | bool | None = None,
+) -> Array:
+    """THE embedding dispatch point: Y = f(X) for any registered member.
+
+    Every consumer routes here — the local backend, the fused per-block maps
+    of kernels/ops.py, the shard_map embed program, serving. Routing per
+    ComputePolicy: the member's Pallas fast path when resolve_pallas() and it
+    has one; bf16 compute (f32 out) on request; jnp reference otherwise."""
+    emb = embedding_for(params)
+    pol = as_policy(policy)
+    if pol.resolve_pallas():
+        y = emb.pallas_transform(params, X)
+        if y is not None:
+            return y
+    if pol.precision == "bf16":
+        p16 = _cast_float_leaves(params, jnp.bfloat16)
+        return emb.transform(p16, X.astype(jnp.bfloat16)).astype(jnp.float32)
+    return emb.transform(params, X)
+
+
+def props_of(params: EmbeddingParams) -> EmbeddingProps:
+    """Family properties of a fitted params pytree (type-dispatched)."""
+    return embedding_for(params).props(params)

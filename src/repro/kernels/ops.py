@@ -107,66 +107,113 @@ def apnc_assign(
     return _assign_padded(Y, C, discrepancy, bn_eff, interpret)
 
 
+from repro.kernels import rff_embed as _rff
+
+
+@partial(jax.jit, static_argnames=("scale", "bn", "bm", "bd", "interpret"))
+def _rff_block_padded(X, W, scale, bn, bm, bd, interpret):
+    n = X.shape[0]
+    m = W.shape[1]
+    Xp = _pad_to(_pad_to(X, bd, 1), bn, 0)
+    # Pad W feature rows with ZEROS (padded input dims contribute nothing to
+    # the projection) and columns to the tile; extra outputs are sliced off.
+    Wp = _pad_to(_pad_to(W, bd, 0), bm, 1)
+    cos, sin = _rff.rff_embed_block(
+        Xp, Wp, scale=scale, bn=bn, bm=bm, bd=bd, interpret=interpret
+    )
+    return jnp.concatenate([cos[:n, :m], sin[:n, :m]], axis=-1)
+
+
+def rff_embed(
+    X: Array,
+    params,
+    *,
+    bn: int = _rff.DEFAULT_BN,
+    bm: int = _rff.DEFAULT_BM,
+    bd: int = _rff.DEFAULT_BD,
+    interpret: bool | None = None,
+) -> Array:
+    """Fused RFF map (the "rff" member's hot loop): X (n, d) -> Y (n, 2m) f32
+    in [cos, sin] layout, matmul and trig fused through VMEM."""
+    interpret = _auto_interpret(interpret)
+    W = params.W
+    bm_eff = min(bm, max(_LANE, ((W.shape[1] + _LANE - 1) // _LANE) * _LANE))
+    bd_eff = min(bd, max(_LANE, ((X.shape[1] + _LANE - 1) // _LANE) * _LANE))
+    bn_eff = min(bn, max(8, ((X.shape[0] + 7) // 8) * 8))
+    return _rff_block_padded(
+        X, W, params.scale, bn_eff, bm_eff, bd_eff, interpret
+    )
+
+
 @partial(jax.jit, static_argnames=("policy",))
-def _embed_block_map(x: Array, coeffs: APNCCoefficients, policy: ComputePolicy) -> Array:
-    from repro.core.kkmeans import apnc_embed as _dispatch  # single routing point
+def _embed_block_map(x: Array, params, policy: ComputePolicy) -> Array:
+    from repro import embed  # single routing point for EVERY registered member
 
-    return _dispatch(x, coeffs, policy)
+    return embed.transform(params, x, policy)
 
 
-def apnc_embed_block_map(
-    x: Array, coeffs: APNCCoefficients, *,
+def embed_block_map(
+    x: Array, params, *,
     policy: ComputePolicy | None = None, use_pallas: bool | None = None,
 ) -> Array:
     """Block-shaped embedding entry for the stream engine: one jit'd dispatch
-    per (block_rows, d) block, routed per ComputePolicy (use_pallas= is a
-    deprecated alias)."""
-    pol = resolve_policy(policy, use_pallas, owner="ops.apnc_embed_block_map: ")
-    return _embed_block_map(x, coeffs, pol)
+    per (block_rows, d) block for ANY registered embedding's params, routed
+    per ComputePolicy (use_pallas= is a deprecated alias). The jit
+    specializes per params pytree type, so the dispatch on the member's
+    transform happens at trace time, not per block."""
+    pol = resolve_policy(policy, use_pallas, owner="ops.embed_block_map: ")
+    return _embed_block_map(x, params, pol)
 
 
 @partial(jax.jit, static_argnames=("policy",))
 def _embed_assign_block(
-    x: Array, coeffs: APNCCoefficients, centroids: Array, policy: ComputePolicy
+    x: Array, params, centroids: Array, policy: ComputePolicy
 ) -> tuple[Array, Array, Array]:
     from repro.core.lloyd import assign_stats
 
-    y = _embed_block_map(x, coeffs, policy)
+    y = _embed_block_map(x, params, policy)
     return assign_stats(
-        y, centroids, centroids.shape[0], coeffs.discrepancy, policy=policy
+        y, centroids, centroids.shape[0], params.discrepancy, policy=policy
     )
 
 
-def apnc_embed_assign_block(
-    x: Array, coeffs: APNCCoefficients, centroids: Array, *,
+def embed_assign_block(
+    x: Array, params, centroids: Array, *,
     policy: ComputePolicy | None = None, use_pallas: bool | None = None,
 ) -> tuple[Array, Array, Array]:
     """Fused block map for streaming Lloyd and the assignment service: embed a
-    raw (block_rows, d) block and reduce it to (Z, g, labels) against the
-    current centroids — one device dispatch, nothing but the block resident."""
-    pol = resolve_policy(policy, use_pallas, owner="ops.apnc_embed_assign_block: ")
-    return _embed_assign_block(x, coeffs, centroids, pol)
+    raw (block_rows, d) block (any registered member) and reduce it to
+    (Z, g, labels) against the current centroids — one device dispatch,
+    nothing but the block resident."""
+    pol = resolve_policy(policy, use_pallas, owner="ops.embed_assign_block: ")
+    return _embed_assign_block(x, params, centroids, pol)
 
 
 @partial(jax.jit, static_argnames=("policy",))
 def _embed_predict_block(
-    x: Array, coeffs: APNCCoefficients, centroids: Array, policy: ComputePolicy
+    x: Array, params, centroids: Array, policy: ComputePolicy
 ) -> Array:
     from repro.core.apnc import assign
 
-    y = _embed_block_map(x, coeffs, policy)
-    return assign(y, centroids, coeffs.discrepancy)
+    y = _embed_block_map(x, params, policy)
+    return assign(y, centroids, params.discrepancy)
 
 
-def apnc_predict_block(
-    x: Array, coeffs: APNCCoefficients, centroids: Array, *,
+def predict_block(
+    x: Array, params, centroids: Array, *,
     policy: ComputePolicy | None = None,
 ) -> Array:
     """Labels-ONLY fused block map for serving: embed + nearest-centroid in
     one jit'd dispatch, without building the (Z, g) sufficient statistics the
     training maps need — the cheapest per-request path."""
-    pol = resolve_policy(policy, owner="ops.apnc_predict_block: ")
-    return _embed_predict_block(x, coeffs, centroids, pol)
+    pol = resolve_policy(policy, owner="ops.predict_block: ")
+    return _embed_predict_block(x, params, centroids, pol)
+
+
+# Legacy names from when APNC was the only family member; same functions.
+apnc_embed_block_map = embed_block_map
+apnc_embed_assign_block = embed_assign_block
+apnc_predict_block = predict_block
 
 
 def flash_attention(

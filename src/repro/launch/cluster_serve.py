@@ -26,6 +26,7 @@ import numpy as np
 from repro.api import ComputePolicy, KernelKMeans
 from repro.core.kkmeans import predict
 from repro.distributed.checkpoint import load_cluster_model
+from repro.embed import DEFAULT_EMBEDDING, available_embeddings, get_embedding
 from repro.kernels import ops
 from repro.stream.microbatch import MicroBatcher
 
@@ -43,8 +44,15 @@ def _fit_and_save(args, ckpt_dir: str) -> None:
         args.seed, args.n_fit, args.d, args.k,
         block_rows=args.block_rows, separation=4.0,
     )
+    # a kernel family the chosen member declares it supports (rbf preferred;
+    # registry-driven, so user-registered members pick up the right family)
+    defaults = {"rbf": {"gamma": 1.0 / args.d}, "poly": {"degree": 2, "coef0": 1.0},
+                "tanh": {}, "linear": {}}
+    families = get_embedding(args.method).kernel_families
+    kernel = "rbf" if families is None or "rbf" in families else families[0]
+    kernel_params = defaults.get(kernel, {})
     est = KernelKMeans(
-        args.k, kernel="rbf", kernel_params={"gamma": 1.0 / args.d},
+        args.k, kernel=kernel, kernel_params=kernel_params,
         method=args.method, backend="stream", l=args.l, m=args.m,
         iters=args.iters, policy=_policy_of(args),
     )
@@ -64,8 +72,8 @@ def make_process_fn(model, *, max_batch: int, policy: ComputePolicy):
         b = X.shape[0]
         if b < max_batch:
             X = np.pad(X, ((0, max_batch - b), (0, 0)))
-        labels = ops.apnc_predict_block(  # labels only: no (Z, g) build
-            jnp.asarray(X), model.coeffs, centroids, policy=policy
+        labels = ops.predict_block(  # labels only: no (Z, g) build
+            jnp.asarray(X), model.params, centroids, policy=policy
         )
         return np.asarray(labels)[:b]
 
@@ -84,13 +92,20 @@ def main(argv=None):
     ap.add_argument("--block-rows", type=int, default=4096)
     ap.add_argument("--d", type=int, default=16)
     ap.add_argument("--k", type=int, default=5)
-    ap.add_argument("--method", default="nystrom")
+    # choices/default/help all derive from the embedding registry: anything
+    # register_embedding'd is servable without touching this launcher.
+    ap.add_argument(
+        "--method", default=DEFAULT_EMBEDDING,
+        help="embedding family member used when fitting (registered: "
+             f"{', '.join(available_embeddings())})",
+    )
     ap.add_argument("--l", type=int, default=128)
     ap.add_argument("--m", type=int, default=128)
     ap.add_argument("--iters", type=int, default=20)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--use-pallas", action="store_true")
     args = ap.parse_args(argv)
+    get_embedding(args.method)  # unknown name -> fail with the registered list
 
     with tempfile.TemporaryDirectory() as tmp:
         ckpt_dir = args.ckpt or tmp
@@ -103,7 +118,7 @@ def main(argv=None):
     from repro.data.synthetic import gaussian_blobs_blocks
 
     req_store, _ = gaussian_blobs_blocks(
-        args.seed + 7919, args.requests, model.coeffs.landmarks.shape[-1], args.k,
+        args.seed + 7919, args.requests, model.params.d, args.k,
         block_rows=max(args.requests, 1), separation=4.0,
     )
     X_req = req_store.get(0)
@@ -139,7 +154,7 @@ def main(argv=None):
     assert order == list(range(args.requests)), "micro-batcher reordered requests"
 
     # Replay the request log through the reference path.
-    ref = np.asarray(predict(jnp.asarray(X_req), model.coeffs, model.centroids,
+    ref = np.asarray(predict(jnp.asarray(X_req), model.params, model.centroids,
                              policy=policy))
     mismatches = int(np.sum(served != ref))
     p50, p99 = np.percentile(lat_ms, 50), np.percentile(lat_ms, 99)

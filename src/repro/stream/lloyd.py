@@ -12,9 +12,10 @@ reduce step of `core.lloyd` (`centroid_update`):
     clustering cost decouples from n, for larger-than-disk / continuous-ingest
     streams where "iterate until convergence" is not an option.
 
-Blocks may hold raw inputs X (pass `coeffs=`: each block is embedded on the
-fly, fused with assignment — the honest out-of-core path where not even the
-embedding Y is ever materialized) or precomputed embeddings Y (pass
+Blocks may hold raw inputs X (pass `coeffs=`, the fitted EmbeddingParams of
+ANY registered member — repro.embed: each block is embedded on the fly, fused
+with assignment — the honest out-of-core path where not even the embedding Y
+is ever materialized) or precomputed embeddings Y (pass
 `discrepancy=`; see `stream_embed` for staging Y blocks to host RAM once when
 host memory allows — it saves re-embedding every iteration).
 
@@ -30,7 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.apnc import APNCCoefficients, Discrepancy
+from repro.core.apnc import Discrepancy
+from repro.embed.base import EmbeddingParams
 from repro.core.lloyd import centroid_update, kmeanspp_init
 from repro.kernels import ops
 from repro.policy import ComputePolicy, resolve_policy
@@ -55,7 +57,7 @@ def _block_map(coeffs, discrepancy, centroids_cell, pol: ComputePolicy):
     between blocks without retracing."""
     if coeffs is not None:
         def fn(x):
-            return ops.apnc_embed_assign_block(
+            return ops.embed_assign_block(
                 x, coeffs, centroids_cell[0], policy=pol
             )
         return fn
@@ -71,7 +73,7 @@ def _block_map(coeffs, discrepancy, centroids_cell, pol: ComputePolicy):
 
 def stream_embed(
     store: BlockStore,
-    coeffs: APNCCoefficients,
+    coeffs: EmbeddingParams,
     *,
     policy: ComputePolicy | None = None,
     use_pallas: bool | None = None,
@@ -91,7 +93,7 @@ def stream_embed(
 
     map_reduce(
         store,
-        lambda x: ops.apnc_embed_block_map(x, coeffs, policy=pol),
+        lambda x: ops.embed_block_map(x, coeffs, policy=pol),
         lambda acc, _: acc,
         None,
         prefetch=prefetch,
@@ -107,7 +109,7 @@ def _resolve_init(store, coeffs, discrepancy, k, init, key, seed_sample, pol):
         raise ValueError("provide key= for k-means++ init or init= centroids")
     sample = jnp.asarray(reservoir_sample(store, seed_sample, seed=int(key[-1])))
     if coeffs is not None:  # raw X rows -> embed the reservoir before seeding
-        sample = ops.apnc_embed_block_map(sample, coeffs, policy=pol)
+        sample = ops.embed_block_map(sample, coeffs, policy=pol)
     return kmeanspp_init(key, sample, k, discrepancy)
 
 
@@ -115,7 +117,7 @@ def ooc_lloyd(
     store: BlockStore,
     k: int,
     *,
-    coeffs: APNCCoefficients | None = None,
+    coeffs: EmbeddingParams | None = None,
     discrepancy: Discrepancy | None = None,
     iters: int = 20,
     key: Array | None = None,
@@ -185,7 +187,7 @@ def _final_assign(store, map_fn, coeffs, disc, centroids_cell, labels_host, pref
 
         @jax.jit
         def assign_with_inertia(x, c):  # embed ONCE, reuse y for stats + inertia
-            y = ops.apnc_embed_block_map(x, coeffs, policy=pol)
+            y = ops.embed_block_map(x, coeffs, policy=pol)
             Z, g, labels = assign_stats(y, c, c.shape[0], disc, policy=pol)
             return Z, g, labels, min_dist(y, c)
 
@@ -213,7 +215,7 @@ def minibatch_lloyd(
     store: BlockStore,
     k: int,
     *,
-    coeffs: APNCCoefficients | None = None,
+    coeffs: EmbeddingParams | None = None,
     discrepancy: Discrepancy | None = None,
     decay: float = 0.9,
     epochs: int = 1,
@@ -290,11 +292,11 @@ def stream_fit_predict(
     """End-to-end embed-and-conquer over a block stream:
 
     1. reservoir-sample rows for landmark selection (one pass),
-    2. fit (R, L) on the sample — tiny and resident, as in the paper (P4.3),
+    2. fit the embedding on the sample — tiny and resident, as in the paper (P4.3),
     3. cluster the stream: exact out-of-core Lloyd or single-pass mini-batch,
        embedding fused into the per-block map (Y never materializes).
 
-    Returns (StreamLloydResult, APNCCoefficients).
+    Returns (StreamLloydResult, EmbeddingParams).
     """
     from repro.core.kkmeans import APNCConfig, fit_coefficients
 

@@ -298,6 +298,98 @@ def test_transform_and_score(blobs):
     assert est.score(store) == pytest.approx(est.score(X), rel=1e-4)
 
 
+def test_backend_equivalence_rff_local_vs_stream():
+    """The acceptance claim of the embedding subsystem: a NON-APNC member
+    ("rff") reaches identical labels on backend="local" and backend="stream"
+    from the same key through the public API — the paper's one-parallelization
+    -strategy-for-the-whole-family claim, end to end."""
+    X, y = gaussian_blobs(jax.random.PRNGKey(4), 600, 8, 4, separation=4.0)
+    kw = dict(kernel=Kernel("rbf", gamma=0.05), method="rff", m=128, iters=30,
+              n_init=1, block_rows=100)
+    key = jax.random.PRNGKey(7)
+    a = KernelKMeans(4, backend="local", **kw).fit(X, key=key)
+    b = KernelKMeans(4, backend="stream", **kw).fit(
+        BlockStore.from_array(np.asarray(X), 100), key=key)
+    assert np.array_equal(a.labels_, b.labels_)
+    assert b.inertia_ == pytest.approx(a.inertia_, rel=1e-4)
+    assert nmi(a.labels_, np.asarray(y)) > 0.9  # and the fit is good
+    # the artifact records the member and carries its typed params
+    from repro.embed import RFFParams
+
+    assert isinstance(a.model_.params, RFFParams)
+    assert a.model_.meta.method == "rff"
+
+
+def test_tensorsketch_method_through_facade(blobs):
+    """The polynomial-kernel member clusters through the facade like any
+    other — the new-workload claim of the embedding registry."""
+    X, y = blobs
+    est = KernelKMeans(4, kernel="poly", kernel_params={"degree": 2, "coef0": 1.0},
+                       method="tensorsketch", m=256, iters=15).fit(X)
+    assert est.model_.meta.method == "tensorsketch"
+    assert nmi(est.labels_, y) > 0.8
+
+
+def test_toy_embedding_full_lifecycle(blobs, tmp_path):
+    """register_embedding alone must make a user-defined member work through
+    fit/predict/save/load on every facade path — no facade edits."""
+    import dataclasses
+
+    from repro.embed import (
+        Embedding, EmbeddingProps, register_embedding, unregister_embedding,
+    )
+
+    @jax.tree_util.register_dataclass
+    @dataclasses.dataclass
+    class ToyParams:
+        P: jax.Array  # (d, m) random projection
+
+        @property
+        def m(self):
+            return self.P.shape[1]
+
+        @property
+        def d(self):
+            return self.P.shape[0]
+
+        @property
+        def discrepancy(self):
+            return "l2"
+
+    class ToyEmbedding(Embedding):
+        name = "toy-proj"
+        params_cls = ToyParams
+
+        def fit(self, key, data, kernel, *, l, m, t=None, q=1):
+            return ToyParams(P=jax.random.normal(key, (data.shape[-1], m)))
+
+        def transform(self, params, X):
+            return (X @ params.P).astype(jnp.float32)
+
+        def props(self, params):
+            return EmbeddingProps(linear=True, discrepancy="l2",
+                                  landmark_free=True)
+
+    register_embedding(ToyEmbedding)
+    try:
+        X, _ = blobs
+        est = _est(method="toy-proj").fit(X, key=jax.random.PRNGKey(11))
+        assert est.model_.meta.method == "toy-proj"
+        labels = est.predict(X)
+        assert np.array_equal(labels, est.labels_)
+        est.save(tmp_path / "toy")
+        loaded = KernelKMeans.load(tmp_path / "toy")
+        assert isinstance(loaded.model_.params, ToyParams)
+        assert np.array_equal(loaded.predict(X), est.labels_)
+        # the toy member streams too (same phase-1, so identical labels)
+        est2 = _est(method="toy-proj", backend="stream").fit(
+            BlockStore.from_array(np.asarray(X), 128),
+            key=jax.random.PRNGKey(11))
+        assert np.array_equal(est2.labels_, est.labels_)
+    finally:
+        unregister_embedding("toy-proj")
+
+
 def test_registry_extension_and_errors():
     from repro.api import KERNELS
 
@@ -310,7 +402,7 @@ def test_registry_extension_and_errors():
         resolve_kernel("nope")
     with pytest.raises(ValueError, match="unknown backend"):
         KernelKMeans(2, backend="mapreduce").fit(np.zeros((8, 2), np.float32))
-    with pytest.raises(ValueError, match="unknown APNC method"):
+    with pytest.raises(ValueError, match="unknown embedding"):
         KernelKMeans(2, method="magic").fit(np.zeros((64, 2), np.float32))
     with pytest.raises(RuntimeError, match="not fitted"):
         KernelKMeans(2).predict(np.zeros((4, 2), np.float32))

@@ -1,0 +1,287 @@
+"""Property suite for the embedding subsystem (repro.embed).
+
+Parametrized over EVERY registered family member (the module asserts the case
+list covers the registry, so adding a member without extending the suite
+fails loudly). The load-bearing claims, per member:
+
+  * fit -> typed params exposing the protocol surface (m, d, discrepancy);
+  * transform is pure and jittable: jit result == eager result, twice;
+  * P4.1 linearity: declared-linear members commute with input-row means;
+  * params serialize: the default dataclass-derived params_state /
+    params_restore round-trips through npz + strict JSON byte-exactly;
+  * full ClusterModel checkpoint round-trip for a non-APNC member;
+  * the policy-routed dispatch (Pallas interpret / bf16) agrees with the
+    reference transform;
+  * members reject kernels outside their family and q they cannot honor.
+"""
+import io
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.embed as E
+from repro.core.kernels_fn import Kernel
+from repro.policy import ComputePolicy
+
+# (registered name, kernel, fit kwargs) — every registered member appears in
+# at least one case; the linear-kernel / degree-1 cases exercise P4.1.
+CASES = [
+    ("nystrom", Kernel("rbf", gamma=0.5), dict(l=48, m=24)),
+    ("nystrom", Kernel("linear"), dict(l=48, m=24)),
+    ("nystrom", Kernel("rbf", gamma=0.5), dict(l=48, m=16, q=2)),
+    ("sd", Kernel("rbf", gamma=0.5), dict(l=48, m=32, t=16)),
+    ("sd", Kernel("linear"), dict(l=48, m=32)),
+    ("rff", Kernel("rbf", gamma=0.5), dict(l=0, m=32)),
+    ("tensorsketch", Kernel("poly", degree=2, coef0=1.0), dict(l=0, m=64)),
+    ("tensorsketch", Kernel("poly", degree=1, coef0=1.0), dict(l=0, m=64)),
+]
+IDS = [f"{n}-{k.name}{getattr(k, 'degree', '') if k.name == 'poly' else ''}"
+       f"{'-q2' if kw.get('q', 1) > 1 else ''}" for n, k, kw in CASES]
+
+
+def test_suite_covers_registry():
+    """Every registered member must appear in CASES — registering a new
+    embedding without extending this suite is a test failure by design."""
+    assert set(E.available_embeddings()) == {name for name, _, _ in CASES}
+
+
+@pytest.fixture(scope="module")
+def X():
+    return jax.random.normal(jax.random.PRNGKey(0), (96, 6)) * 0.8
+
+
+def _fit(name, kernel, kw, X):
+    kw = dict(kw)
+    kw.setdefault("l", 48)
+    kw.setdefault("m", 16)
+    return E.get_embedding(name).fit(jax.random.PRNGKey(1), X, kernel, **kw)
+
+
+@pytest.mark.parametrize("name,kernel,kw", CASES, ids=IDS)
+def test_protocol_surface(name, kernel, kw, X):
+    emb = E.get_embedding(name)
+    params = _fit(name, kernel, kw, X)
+    Y = emb.transform(params, X)
+    assert Y.shape == (X.shape[0], params.m)
+    assert Y.dtype == jnp.float32
+    assert bool(jnp.all(jnp.isfinite(Y)))
+    assert params.d == X.shape[1]
+    props = emb.props(params)
+    assert props.discrepancy == params.discrepancy
+    if kw.get("q", 1) > 1:
+        assert props.blockwise
+
+
+@pytest.mark.parametrize("name,kernel,kw", CASES, ids=IDS)
+def test_transform_pure_under_jit(name, kernel, kw, X):
+    """transform must trace (the fused block dispatches jit it) and must be
+    deterministic: jit == eager, and repeated calls agree bitwise."""
+    emb = E.get_embedding(name)
+    params = _fit(name, kernel, kw, X)
+    eager = emb.transform(params, X)
+    jitted = jax.jit(emb.transform)(params, X)
+    np.testing.assert_allclose(np.asarray(jitted), np.asarray(eager),
+                               rtol=1e-5, atol=1e-5)
+    again = jax.jit(emb.transform)(params, X)
+    assert np.array_equal(np.asarray(jitted), np.asarray(again))
+
+
+@pytest.mark.parametrize("name,kernel,kw", CASES, ids=IDS)
+def test_p41_linearity_where_declared(name, kernel, kw, X):
+    """Declared-linear members commute with input-row means: the testable
+    face of P4.1 (centroid-of-embeddings == embedding-of-centroid)."""
+    emb = E.get_embedding(name)
+    params = _fit(name, kernel, kw, X)
+    if not emb.props(params).linear:
+        pytest.skip("member not declared input-linear for this kernel")
+    mean_in = jnp.mean(X, axis=0, keepdims=True)
+    np.testing.assert_allclose(
+        np.asarray(emb.transform(params, mean_in)[0]),
+        np.asarray(jnp.mean(emb.transform(params, X), axis=0)),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_linearity_declared_for_the_right_members(X):
+    """The flags themselves: APNC under the linear kernel and degree-1
+    sketches are linear; rbf-driven maps are not."""
+    expect = {
+        ("nystrom", "linear"): True, ("nystrom", "rbf"): False,
+        ("sd", "linear"): True, ("rff", "rbf"): False,
+        ("tensorsketch", "poly1"): True, ("tensorsketch", "poly2"): False,
+    }
+    for name, kernel, kw in CASES:
+        tag = kernel.name + (str(kernel.degree) if kernel.name == "poly" else "")
+        if (name, tag) in expect:
+            params = _fit(name, kernel, kw, X)
+            assert E.props_of(params).linear is expect[(name, tag)], (name, tag)
+
+
+@pytest.mark.parametrize("name,kernel,kw", CASES, ids=IDS)
+def test_params_state_roundtrip(name, kernel, kw, X):
+    """The default dataclass-derived serialization must survive a real
+    npz + strict-JSON round trip and reproduce the transform bitwise."""
+    emb = E.get_embedding(name)
+    params = _fit(name, kernel, kw, X)
+    arrays, config = emb.params_state(params)
+    json.loads(json.dumps(config),
+               parse_constant=lambda _: pytest.fail("non-strict JSON"))
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    buf.seek(0)
+    loaded = dict(np.load(buf))
+    restored = emb.params_restore(loaded, json.loads(json.dumps(config)))
+    assert restored.discrepancy == params.discrepancy
+    assert restored.m == params.m
+    np.testing.assert_array_equal(
+        np.asarray(emb.transform(restored, X)), np.asarray(emb.transform(params, X))
+    )
+
+
+@pytest.mark.parametrize("name,kernel,kw", CASES, ids=IDS)
+def test_policy_routing_matches_reference(name, kernel, kw, X):
+    """repro.embed.transform under Pallas routing (interpret mode on CPU) and
+    under bf16 must agree with the member's reference transform."""
+    emb = E.get_embedding(name)
+    params = _fit(name, kernel, kw, X)
+    ref = np.asarray(emb.transform(params, X))
+    pal = np.asarray(E.transform(params, X, ComputePolicy(pallas=True)))
+    np.testing.assert_allclose(pal, ref, rtol=2e-4, atol=2e-4)
+    b16 = np.asarray(E.transform(params, X, ComputePolicy(pallas=False,
+                                                          precision="bf16")))
+    assert b16.dtype == np.float32
+    assert np.mean(np.abs(b16 - ref)) < 0.05 * (np.mean(np.abs(ref)) + 1e-3)
+
+
+def test_cluster_model_roundtrip_for_rff(X, tmp_path):
+    """A non-APNC member's params must survive the full ClusterModel
+    checkpoint path (save_cluster_model / load_cluster_model)."""
+    import jax.numpy as jnp
+
+    from repro.api.model import ClusterModel, FitMeta
+    from repro.distributed.checkpoint import load_cluster_model, save_cluster_model
+
+    emb = E.get_embedding("rff")
+    params = emb.fit(jax.random.PRNGKey(3), X, Kernel("rbf", gamma=0.5), l=0, m=16)
+    centroids = jnp.zeros((4, params.m), jnp.float32)
+    model = ClusterModel(
+        params=params, centroids=centroids,
+        inertia=jnp.asarray(1.5, jnp.float32),
+        meta=FitMeta(k=4, method="rff", kernel_name="rbf", m=16),
+    )
+    save_cluster_model(tmp_path / "ck", model)
+    back = load_cluster_model(tmp_path / "ck")
+    assert type(back.params) is type(params)
+    assert back.meta.method == "rff"
+    assert back.params.kernel == params.kernel
+    np.testing.assert_array_equal(np.asarray(back.params.W), np.asarray(params.W))
+
+
+def test_gram_approximation_sanity(X):
+    """The promoted members still approximate their kernels: RFF inner
+    products ~ rbf gram; TensorSketch inner products ~ poly gram."""
+    rbf = Kernel("rbf", gamma=0.5)
+    p = E.get_embedding("rff").fit(jax.random.PRNGKey(0), X, rbf, l=0, m=2048)
+    Y = E.transform(p, X)
+    assert float(jnp.mean(jnp.abs(Y @ Y.T - rbf.gram(X, X)))) < 0.05
+
+    poly = Kernel("poly", degree=2, coef0=1.0)
+    K = poly.gram(X, X)
+    errs = []
+    for s in range(6):
+        p = E.get_embedding("tensorsketch").fit(jax.random.PRNGKey(s), X, poly,
+                                                l=0, m=512)
+        Y = E.transform(p, X)
+        errs.append(float(jnp.mean(jnp.abs(Y @ Y.T - K)) / jnp.mean(jnp.abs(K))))
+    assert np.mean(errs) < 0.4  # sketch variance: rel err shrinks with m
+
+
+def test_members_reject_foreign_kernels_and_q(X):
+    with pytest.raises(ValueError, match="shift-invariant"):
+        E.get_embedding("rff").fit(jax.random.PRNGKey(0), X,
+                                   Kernel("poly"), l=0, m=8)
+    with pytest.raises(ValueError, match="polynomial"):
+        E.get_embedding("tensorsketch").fit(jax.random.PRNGKey(0), X,
+                                            Kernel("rbf"), l=0, m=8)
+    for name in ("rff", "tensorsketch"):
+        kern = Kernel("rbf", gamma=1.0) if name == "rff" else Kernel("poly")
+        with pytest.raises(ValueError, match="q must be 1"):
+            E.get_embedding(name).fit(jax.random.PRNGKey(0), X, kern,
+                                      l=0, m=8, q=2)
+
+
+def test_rff_matches_legacy_baseline(X):
+    """The baseline shim and the registered member are the same map under the
+    same key (bit-for-bit) — the promotion changed the home, not the math."""
+    from repro.core.baselines import rff_features
+
+    key = jax.random.PRNGKey(7)
+    ref = rff_features(key, X, gamma=0.5, m=24)
+    p = E.get_embedding("rff").fit(key, X, Kernel("rbf", gamma=0.5), l=0, m=24)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(E.transform(p, X)))
+
+
+def test_unregister_rebinds_shared_params_dispatch(X):
+    """Removing one member of a shared params type (register_method shims
+    share APNCCoefficients with nystrom/sd) must not orphan the others."""
+    from repro.embed.apnc import _APNCBase
+
+    class Shadow(_APNCBase):
+        name = "shadow-apnc"
+
+        def fit(self, key, data, kernel, *, l, m, t=None, q=1):  # pragma: no cover
+            raise NotImplementedError
+
+    E.register_embedding(Shadow)  # now owns the APNCCoefficients dispatch
+    try:
+        params = _fit("nystrom", Kernel("rbf", gamma=0.5), dict(l=32, m=16), X)
+    finally:
+        E.unregister_embedding("shadow-apnc")
+    # dispatch must still resolve for the surviving members
+    assert E.embedding_for(params) is not None
+    assert E.transform(params, X).shape == (X.shape[0], params.m)
+
+
+def test_landmark_free_members_partial_fit_small_first_block(X):
+    """Landmark-free members have no l-row precondition on the first
+    partial_fit block (they only read the input dim)."""
+    from repro.api import KernelKMeans
+
+    est = KernelKMeans(3, method="rff", kernel=Kernel("rbf", gamma=0.5),
+                       m=32, l=300)
+    est.partial_fit(np.asarray(X)[:64])  # 64 rows < l=300: must NOT raise
+    assert est.model_ is not None and est.model_.params.m == 64
+    # ...but k-means++ seeding still needs k rows: fewer must fail loudly
+    # instead of silently seeding duplicate centroids
+    with pytest.raises(ValueError, match="seed centroids"):
+        KernelKMeans(8, method="rff", kernel=Kernel("rbf", gamma=0.5),
+                     m=32).partial_fit(np.asarray(X)[:4])
+
+
+def test_legacy_shim_save_records_right_apnc_method(X, tmp_path):
+    """save_clustering_model (no recorded method) must infer nystrom vs sd
+    from the params' discrepancy, not from registration order."""
+    from repro.distributed.checkpoint import load_cluster_model, save_clustering_model
+
+    import jax.numpy as jnp
+
+    for name, disc in (("nystrom", "l2"), ("sd", "l1")):
+        params = _fit(name, Kernel("rbf", gamma=0.5), dict(l=32, m=16), X)
+        assert params.discrepancy == disc
+        save_clustering_model(tmp_path / name, params,
+                              jnp.zeros((3, 16), jnp.float32))
+        manifest = json.loads(
+            next((tmp_path / name).glob("step_*/manifest.json")).read_text()
+        )
+        assert manifest["meta"]["clustering"]["embedding"]["method"] == name
+        load_cluster_model(tmp_path / name)  # and it still decodes
+
+
+def test_unknown_embedding_error_lists_registry():
+    with pytest.raises(ValueError, match="unknown embedding .*nystrom"):
+        E.get_embedding("nope")
+    with pytest.raises(TypeError, match="no registered embedding"):
+        E.embedding_for(object())
