@@ -5,11 +5,14 @@ and/or resident array, fitted embedding params of any registered member, the
 k-means++ init centroids per restart, policy) and returns the SAME result shape (a BackendFit), so the
 estimator can swap engines without the result type fracturing:
 
-  local      in-memory embed + lax.while Lloyd (core.lloyd) — small data
-  shard_map  Algorithm 1 + 2 as SPMD programs on a device mesh (core.distributed)
-  stream     exact out-of-core Lloyd over blocks (stream.ooc_lloyd) — same
-             fixed point as local given the same init, memory O(block)
-  minibatch  single-pass streaming Lloyd with decayed (Z, g) (stream.minibatch)
+  local        in-memory embed + lax.while Lloyd (core.lloyd) — small data
+  shard_map    Algorithm 1 + 2 as SPMD programs on a device mesh (core.distributed)
+  stream       exact out-of-core Lloyd over blocks (stream.ooc_lloyd) — same
+               fixed point as local given the same init, memory O(block)
+  stream_shard exact out-of-core Lloyd with the block stream sharded across
+               the mesh's data devices (stream.sharded) — same fixed point as
+               stream, memory O(block) per device
+  minibatch    single-pass streaming Lloyd with decayed (Z, g) (stream.minibatch)
 
 Because every backend clusters from the same embedding params and the same
 init centroids, local and stream produce identical labels (the exact out-of-core
@@ -118,6 +121,23 @@ def fit_stream(ctx: FitContext) -> BackendFit:
     return _run_restarts(ctx, lambda init: _from_stream(ooc_lloyd(
         ctx.store, ctx.k, coeffs=ctx.params, iters=ctx.iters, init=init,
         policy=ctx.policy,
+    )))
+
+
+@register_backend("stream_shard")
+def fit_stream_shard(ctx: FitContext) -> BackendFit:
+    """Exact out-of-core Lloyd sharded across the mesh's data-axis devices
+    (every local device when no mesh was given): device d streams the
+    round-robin block shard `store.shard(d, D)` through its own producer; per
+    iteration the per-device (Z, g) are reduced once (the MapReduce shuffle)
+    and `centroid_update` runs once. Same fixed point as `stream` — identical
+    labels from the same init — at memory O(block) PER DEVICE."""
+    from repro.stream.sharded import shard_devices
+
+    devices = shard_devices(ctx.mesh)
+    return _run_restarts(ctx, lambda init: _from_stream(ooc_lloyd(
+        ctx.store, ctx.k, coeffs=ctx.params, iters=ctx.iters, init=init,
+        policy=ctx.policy, devices=devices,
     )))
 
 

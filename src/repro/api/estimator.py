@@ -60,8 +60,10 @@ class KernelKMeans:
                      "nystrom" (APNC-Nys, l2), "sd" (APNC-SD, l1), "rff"
                      (random Fourier features, rbf kernels), "tensorsketch"
                      (polynomial kernels), or anything register_embedding'd.
-    backend:         "local" | "shard_map" | "stream" | "minibatch" | "auto".
-                     auto -> "stream" for a BlockStore input, "shard_map" when
+    backend:         "local" | "shard_map" | "stream" | "stream_shard" |
+                     "minibatch" | "auto". auto -> "stream_shard" for a
+                     BlockStore input plus a mesh with >1 data-axis device,
+                     "stream" for any other BlockStore input, "shard_map" when
                      a mesh was given, "stream" for arrays with >=
                      AUTO_STREAM_ROWS rows, else "local".
     l, m, t, q:      landmark count, embedding dim per block, SD subset size,
@@ -73,7 +75,7 @@ class KernelKMeans:
     landmark_sample: reservoir size for landmark/coefficient fitting.
     seed_sample:     rows of the landmark sample used for k-means++ seeding.
     policy:          `ComputePolicy` (pallas routing, precision, prefetch).
-    mesh:            jax Mesh for the shard_map backend.
+    mesh:            jax Mesh for the shard_map / stream_shard backends.
     random_state:    seed used when fit() is not given an explicit key.
 
     After fit: `model_` (the ClusterModel artifact), `labels_`, `inertia_`,
@@ -133,6 +135,14 @@ class KernelKMeans:
         if self.backend != "auto":
             return self.backend
         if isinstance(X, BlockStore):
+            # Blocked input + a mesh with >1 data-axis device -> shard the
+            # stream across the mesh (one producer + one block shard per
+            # device); otherwise the single-device exact stream.
+            if self.mesh is not None:
+                from repro.stream.sharded import shard_devices
+
+                if len(shard_devices(self.mesh)) > 1:
+                    return "stream_shard"
             return "stream"
         if self.mesh is not None:
             return "shard_map"
@@ -186,9 +196,12 @@ class KernelKMeans:
                     else np.asarray(array if array is not None else X,
                                     dtype=np.float32))
             store = BlockStore.from_array(X_np, self.block_rows)
-        k_fit, k_seed = jax.random.split(key)
+        # Independent streams for WHICH rows the reservoir keeps, the
+        # embedding fit's draws, and the k-means++ seeding — one key must not
+        # feed two draws (reservoir selection would correlate with the fit).
+        k_sample, k_fit, k_seed = jax.random.split(key, 3)
         sample = jnp.asarray(
-            reservoir_sample(store, self.landmark_sample, seed=int(k_fit[-1]))
+            reservoir_sample(store, self.landmark_sample, seed=int(k_sample[-1]))
         )
         params, pool = self._fit_params_and_pool(sample, k_fit)
         inits = [

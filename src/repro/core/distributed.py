@@ -166,8 +166,11 @@ def distributed_fit_predict(
     Y = distributed_embed(mesh, X, coeffs, policy=cfg.compute)
 
     # Seed on a bounded global sample so seeding cost is O(sample * k), not O(n k).
-    sample = sample_rows_global(k_seed, Y, min(Y.shape[0], 16 * k))
-    c0 = kmeanspp_init(k_seed, sample, k, coeffs.discrepancy)
+    # Separate keys: reusing one for the row sample AND k-means++ correlates
+    # which rows are candidates with which candidates get picked.
+    k_sample, k_pp = jax.random.split(k_seed)
+    sample = sample_rows_global(k_sample, Y, min(Y.shape[0], 16 * k))
+    c0 = kmeanspp_init(k_pp, sample, k, coeffs.discrepancy)
 
     labels, centroids = distributed_lloyd(
         mesh, Y, c0, k=k, discrepancy=coeffs.discrepancy, iters=cfg.iters,

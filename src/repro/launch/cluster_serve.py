@@ -53,7 +53,7 @@ def _fit_and_save(args, ckpt_dir: str) -> None:
     kernel_params = defaults.get(kernel, {})
     est = KernelKMeans(
         args.k, kernel=kernel, kernel_params=kernel_params,
-        method=args.method, backend="stream", l=args.l, m=args.m,
+        method=args.method, backend=args.backend, l=args.l, m=args.m,
         iters=args.iters, policy=_policy_of(args),
     )
     est.fit(X_store, key=jax.random.PRNGKey(args.seed + 1))
@@ -104,8 +104,18 @@ def main(argv=None):
     ap.add_argument("--iters", type=int, default=20)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument(
+        "--backend", default="stream",
+        help="clustering backend used when fitting; \"stream_shard\" streams "
+             "one block shard per local device (force devices with "
+             "XLA_FLAGS=--xla_force_host_platform_device_count=N)",
+    )
     args = ap.parse_args(argv)
     get_embedding(args.method)  # unknown name -> fail with the registered list
+    if args.backend != "auto":  # "auto" is estimator dispatch, not a registry key
+        from repro.api import get_backend
+
+        get_backend(args.backend)  # likewise: reject typos before fitting
 
     with tempfile.TemporaryDirectory() as tmp:
         ckpt_dir = args.ckpt or tmp

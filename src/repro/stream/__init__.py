@@ -3,12 +3,15 @@
 The paper's premise is that data lives in HDFS blocks that never co-reside on
 one worker; this package is the single-host analogue: host-resident row blocks
 (`blockstore`), a MapReduce-style executor with double-buffered host->device
-transfer (`engine`), streaming Lloyd drivers (`lloyd`), reservoir sampling for
-landmark/seed selection over streams (`reservoir`), and the request
-micro-batcher used by the online assignment service (`microbatch`).
+transfer (`engine`), streaming Lloyd drivers (`lloyd`), the multi-device
+sharded executor that streams one block shard per mesh device (`sharded`),
+reservoir sampling for landmark/seed selection over streams (`reservoir`),
+and the request micro-batcher used by the online assignment service
+(`microbatch`).
 """
 from repro.stream.blockstore import BlockStore
-from repro.stream.engine import map_reduce
+from repro.stream.engine import BlockPrefetcher, map_reduce
+from repro.stream.sharded import cross_device_sum, shard_devices, sharded_map_reduce
 from repro.stream.lloyd import (
     StreamLloydResult,
     minibatch_lloyd,
@@ -20,9 +23,13 @@ from repro.stream.microbatch import MicroBatcher
 from repro.stream.reservoir import reservoir_sample
 
 __all__ = [
+    "BlockPrefetcher",
     "BlockStore",
+    "cross_device_sum",
     "map_reduce",
     "MicroBatcher",
+    "shard_devices",
+    "sharded_map_reduce",
     "StreamLloydResult",
     "minibatch_lloyd",
     "ooc_lloyd",

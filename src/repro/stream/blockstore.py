@@ -66,10 +66,17 @@ class BlockStore:
         """Global row index of the first row of local block i."""
         return self._block_ids[i] * self.block_rows
 
+    def _read(self, gid: int) -> np.ndarray:
+        """Backing read by GLOBAL block id. Derived stores (`shard`,
+        `map_rows`) close over the parent's bound `_read`, so subclasses that
+        guard reads (e.g. WritableBlockStore's unwritten-block check) keep
+        their guard in every derived view."""
+        return np.asarray(self._get(gid))
+
     def get(self, i: int) -> np.ndarray:
         if not 0 <= i < self.num_blocks:
             raise IndexError(f"block {i} out of range [0, {self.num_blocks})")
-        blk = np.asarray(self._get(self._block_ids[i]))
+        blk = self._read(self._block_ids[i])
         expect = (self.rows_of(i), self.d)
         if blk.shape != expect:
             raise ValueError(f"block {i}: backing returned {blk.shape}, want {expect}")
@@ -90,14 +97,14 @@ class BlockStore:
             raise ValueError(f"shard index {index} out of range for {num_shards}")
         ids = self._block_ids[index::num_shards]
         return BlockStore(
-            self._get, n=self.n, d=self.d, block_rows=self.block_rows,
+            self._read, n=self.n, d=self.d, block_rows=self.block_rows,
             dtype=self.dtype, block_ids=ids,
         )
 
     def map_rows(self, fn: Callable[[np.ndarray], np.ndarray], d_out: int) -> "BlockStore":
         """Lazy per-block host transform (e.g. column select); same blocking."""
         return BlockStore(
-            lambda gid: np.asarray(fn(self._get(gid))),
+            lambda gid: np.asarray(fn(self._read(gid))),
             n=self.n, d=d_out, block_rows=self.block_rows,
             dtype=self.dtype, block_ids=self._block_ids,
         )
@@ -136,7 +143,15 @@ class BlockStore:
         page cache is the only resident state."""
         path = Path(path)
         itemsize = np.dtype(dtype).itemsize
-        n = path.stat().st_size // (d * itemsize)
+        size = path.stat().st_size
+        ragged = size % (d * itemsize)
+        if ragged:
+            raise ValueError(
+                f"{path}: size {size} bytes is not a multiple of "
+                f"d * itemsize = {d} * {itemsize}; {ragged} ragged trailing "
+                "bytes (truncated file, or wrong d/dtype?)"
+            )
+        n = size // (d * itemsize)
         mm = np.memmap(path, dtype=dtype, mode="r", shape=(n, d))
         return cls(
             lambda i: np.asarray(mm[i * block_rows: (i + 1) * block_rows]),
@@ -170,7 +185,10 @@ class WritableBlockStore(BlockStore):
         self._buf[lo:hi] = block
         self._filled[i] = True
 
-    def get(self, i: int) -> np.ndarray:
-        if not self._filled[self._block_ids[i]]:
-            raise ValueError(f"block {self._block_ids[i]} read before it was written")
-        return super().get(i)
+    def _read(self, gid: int) -> np.ndarray:
+        # The guard lives on the global-id read path so shard()/map_rows()
+        # views inherit it: an unwritten block must never silently read as
+        # zeros (a sharded staged-Y store would cluster garbage).
+        if not self._filled[gid]:
+            raise ValueError(f"block {gid} read before it was written")
+        return super()._read(gid)

@@ -13,6 +13,12 @@ async, so the main thread only blocks when the bounded prefetch queue is empty
 degrades to the fully synchronous one-block-at-a-time baseline (get, transfer,
 compute, block_until_ready), which `benchmarks/stream_bench.py` uses as the
 overlap reference.
+
+Device placement: `device=` commits every produced block to one specific
+device instead of the default. This is the per-device-queue building block of
+the sharded executor (`repro.stream.sharded`): each device of a mesh gets its
+own `BlockPrefetcher` over its round-robin block shard, so D producers feed D
+devices concurrently — D mappers pulling their own HDFS blocks.
 """
 from __future__ import annotations
 
@@ -27,17 +33,65 @@ from repro.stream.blockstore import BlockStore
 _STOP = object()
 
 
-def _producer(store: BlockStore, q: "queue.Queue", stop: threading.Event):
+def _producer(store: BlockStore, q: "queue.Queue", stop: threading.Event, device):
     try:
         for i in range(store.num_blocks):
             if stop.is_set():
                 return
             blk = store.get(i)  # host-side cost: generation / disk read
-            dev = jax.device_put(blk)  # starts the H2D copy immediately
+            dev = jax.device_put(blk, device)  # starts the H2D copy immediately
             q.put((i, dev, None))
         q.put(_STOP)
     except BaseException as e:  # noqa: BLE001 - re-raised on the consumer side
         q.put((None, None, e))
+
+
+class BlockPrefetcher:
+    """Iterator of (local_i, device_block) over a store, in block order, with
+    a background producer keeping a bounded queue of already-device_put blocks
+    ahead of the consumer.
+
+    `device=` commits blocks to that device (None = default device). Always
+    `close()` (or exhaust) the iterator — a dropped prefetcher would leave its
+    producer thread blocked on the queue.
+    """
+
+    def __init__(self, store: BlockStore, *, prefetch: int = 2, device=None):
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(1, prefetch))
+        self._stop = threading.Event()
+        self._done = False
+        self._t = threading.Thread(
+            target=_producer, args=(store, self._q, self._stop, device), daemon=True
+        )
+        self._t.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._done:
+            raise StopIteration
+        item = self._q.get()
+        if item is _STOP:
+            self._done = True
+            raise StopIteration
+        i, dev, err = item
+        if err is not None:
+            self._done = True
+            raise err
+        return i, dev
+
+    def close(self):
+        """Stop and join the producer; safe to call more than once."""
+        self._stop.set()
+        # drain so a blocked producer can observe the stop flag and exit
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._t.join()
+        self._done = True
 
 
 def map_reduce(
@@ -48,6 +102,7 @@ def map_reduce(
     *,
     prefetch: int = 2,
     emit: Callable[[int, Any], None] | None = None,
+    device=None,
 ) -> Any:
     """Fold `combine_fn(acc, map_fn(block))` over every block of `store`.
 
@@ -62,11 +117,14 @@ def map_reduce(
     prefetch: depth of the producer queue. 0 = synchronous baseline: every
     block is fetched, transferred, computed and *waited on* before the next
     block is touched.
+
+    device: commit blocks (and therefore the map computation) to one specific
+    device; None keeps the default-device behaviour.
     """
     if prefetch <= 0:
         acc = init
         for i in range(store.num_blocks):
-            dev = jax.device_put(store.get(i))
+            dev = jax.device_put(store.get(i), device)
             out = map_fn(dev)
             if emit is not None:
                 emit(i, out)
@@ -74,30 +132,14 @@ def map_reduce(
             jax.block_until_ready(acc)
         return acc
 
-    q: "queue.Queue" = queue.Queue(maxsize=prefetch)
-    stop = threading.Event()
-    t = threading.Thread(target=_producer, args=(store, q, stop), daemon=True)
-    t.start()
+    pf = BlockPrefetcher(store, prefetch=prefetch, device=device)
     acc = init
     try:
-        while True:
-            item = q.get()
-            if item is _STOP:
-                break
-            i, dev, err = item
-            if err is not None:
-                raise err
+        for i, dev in pf:
             out = map_fn(dev)
             if emit is not None:
                 emit(i, out)
             acc = combine_fn(acc, out)
     finally:
-        stop.set()
-        # drain so a blocked producer can observe the stop flag and exit
-        while True:
-            try:
-                q.get_nowait()
-            except queue.Empty:
-                break
-        t.join()
+        pf.close()
     return acc

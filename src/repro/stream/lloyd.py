@@ -107,10 +107,28 @@ def _resolve_init(store, coeffs, discrepancy, k, init, key, seed_sample, pol):
         return jnp.asarray(init)
     if key is None:
         raise ValueError("provide key= for k-means++ init or init= centroids")
-    sample = jnp.asarray(reservoir_sample(store, seed_sample, seed=int(key[-1])))
+    # Independent draws for WHICH rows seed (reservoir) and HOW they seed
+    # (k-means++): reusing `key` for both correlates row selection with the
+    # seeding choices made among those rows.
+    k_res, k_pp = jax.random.split(key)
+    sample = jnp.asarray(reservoir_sample(store, seed_sample, seed=int(k_res[-1])))
     if coeffs is not None:  # raw X rows -> embed the reservoir before seeding
         sample = ops.embed_block_map(sample, coeffs, policy=pol)
-    return kmeanspp_init(key, sample, k, discrepancy)
+    return kmeanspp_init(k_pp, sample, k, discrepancy)
+
+
+def _resolve_devices(devices, mesh):
+    """The sharded path trigger: explicit devices win; a mesh contributes its
+    data-axis devices; None/None keeps the single-device drivers."""
+    if devices is not None and mesh is not None:
+        raise ValueError("pass at most one of devices= and mesh=")
+    if devices is not None:
+        return list(devices)
+    if mesh is not None:
+        from repro.stream.sharded import shard_devices
+
+        return shard_devices(mesh)
+    return None
 
 
 def ooc_lloyd(
@@ -126,10 +144,17 @@ def ooc_lloyd(
     policy: ComputePolicy | None = None,
     use_pallas: bool | None = None,
     prefetch: int | None = None,
+    devices=None,
+    mesh=None,
 ) -> StreamLloydResult:
     """Exact out-of-core Lloyd: identical update rule to `core.lloyd.lloyd`,
     memory O(block). Stops early when no label changes (same criterion as the
-    in-memory loop). Labels live in a host int32 array (4n bytes)."""
+    in-memory loop). Labels live in a host int32 array (4n bytes).
+
+    devices=/mesh= routes the iteration through `repro.stream.sharded`: each
+    device streams a round-robin block shard through its own producer and the
+    per-device (Z, g) are reduced once per iteration — same fixed point,
+    memory O(block) per device."""
     if (coeffs is None) == (discrepancy is None):
         raise ValueError("pass exactly one of coeffs= (raw X blocks) or discrepancy= (Y blocks)")
     pol = resolve_policy(policy, use_pallas, owner="stream.ooc_lloyd: ")
@@ -138,6 +163,14 @@ def ooc_lloyd(
     centroids_cell = [
         _resolve_init(store, coeffs, disc, k, init, key, seed_sample, pol)
     ]
+    devs = _resolve_devices(devices, mesh)
+    if devs is not None:
+        from repro.stream.sharded import ooc_lloyd_sharded
+
+        return ooc_lloyd_sharded(
+            store, k, coeffs=coeffs, discrepancy=discrepancy, iters=iters,
+            init=centroids_cell[0], policy=pol, prefetch=prefetch, devices=devs,
+        )
     m = int(centroids_cell[0].shape[1])
     map_fn = _block_map(coeffs, disc, centroids_cell, pol)
 
@@ -167,12 +200,12 @@ def ooc_lloyd(
     # Final pass under the final centroids: labels + inertia (matches the
     # post-loop assignment of core.lloyd at any fixed point).
     inertia = _final_assign(
-        store, map_fn, coeffs, disc, centroids_cell, labels_host, prefetch, pol
+        store, coeffs, disc, centroids_cell, labels_host, prefetch, pol
     )
     return StreamLloydResult(labels_host, centroids_cell[0], inertia, it, (it + 1) * store.n)
 
 
-def _final_assign(store, map_fn, coeffs, disc, centroids_cell, labels_host, prefetch, pol):
+def _final_assign(store, coeffs, disc, centroids_cell, labels_host, prefetch, pol):
     from repro.core.lloyd import block_cost
 
     def min_dist(y, c):
@@ -225,6 +258,8 @@ def minibatch_lloyd(
     policy: ComputePolicy | None = None,
     use_pallas: bool | None = None,
     prefetch: int | None = None,
+    devices=None,
+    mesh=None,
 ) -> StreamLloydResult:
     """Single-pass (per epoch) streaming Lloyd with decayed sufficient stats:
 
@@ -233,7 +268,10 @@ def minibatch_lloyd(
     Centroids move after *every* block, so one pass over the stream already
     clusters; decay < 1 forgets stale assignments (and, on continuous-ingest
     streams, drifting distributions). decay=1, epochs=iters recovers something
-    close to exact Lloyd but with block-staleness in the assignments."""
+    close to exact Lloyd but with block-staleness in the assignments.
+
+    devices=/mesh= shards the stream: one block per device per round, one
+    decayed update per round (see `repro.stream.sharded`)."""
     if (coeffs is None) == (discrepancy is None):
         raise ValueError("pass exactly one of coeffs= (raw X blocks) or discrepancy= (Y blocks)")
     pol = resolve_policy(policy, use_pallas, owner="stream.minibatch_lloyd: ")
@@ -242,6 +280,15 @@ def minibatch_lloyd(
     centroids_cell = [
         _resolve_init(store, coeffs, disc, k, init, key, seed_sample, pol)
     ]
+    devs = _resolve_devices(devices, mesh)
+    if devs is not None:
+        from repro.stream.sharded import minibatch_lloyd_sharded
+
+        return minibatch_lloyd_sharded(
+            store, k, coeffs=coeffs, discrepancy=discrepancy, decay=decay,
+            epochs=epochs, init=centroids_cell[0], policy=pol,
+            prefetch=prefetch, devices=devs,
+        )
     m = int(centroids_cell[0].shape[1])
     map_fn = _block_map(coeffs, disc, centroids_cell, pol)
 
@@ -269,7 +316,7 @@ def minibatch_lloyd(
         map_reduce(store, map_fn, combine, None, prefetch=prefetch, emit=emit)
 
     inertia = _final_assign(
-        store, map_fn, coeffs, disc, centroids_cell, labels_host, prefetch, pol
+        store, coeffs, disc, centroids_cell, labels_host, prefetch, pol
     )
     return StreamLloydResult(  # +1 pass: _final_assign streams everything again
         labels_host, centroids_cell[0], inertia, epochs, (epochs + 1) * store.n
@@ -302,8 +349,12 @@ def stream_fit_predict(
 
     cfg = cfg or APNCConfig()
     pol = cfg.compute
-    k_fit, k_cluster = jax.random.split(key)
-    sample = jnp.asarray(reservoir_sample(store, landmark_sample, seed=int(k_fit[-1])))
+    # Three independent streams: WHICH rows the reservoir keeps, the
+    # coefficient fit's draws, and the clustering seed — reusing one key for
+    # the reservoir and the fit correlates landmark selection with the
+    # embedding's own randomness.
+    k_sample, k_fit, k_cluster = jax.random.split(key, 3)
+    sample = jnp.asarray(reservoir_sample(store, landmark_sample, seed=int(k_sample[-1])))
     coeffs = fit_coefficients(k_fit, sample, kernel, cfg)
     common = dict(coeffs=coeffs, key=k_cluster, policy=pol, prefetch=prefetch)
     if mode == "exact":

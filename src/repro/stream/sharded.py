@@ -1,0 +1,383 @@
+"""Multi-device out-of-core MapReduce: the paper's job layout on a real mesh.
+
+`core.distributed` runs Algorithms 1+2 as shard_map programs with Y fully
+resident across the mesh; `repro.stream` streams blocks but through a single
+device. This module closes the gap — the communication-avoiding layout of
+Bellavita et al. applied to the stream engine:
+
+  device d of D            <-> mapper d
+  store.shard(d, D)        <-> the round-robin HDFS block subset mapper d pulls
+  BlockPrefetcher(device=) <-> mapper-local ingest (its own producer + queue)
+  per-device (Z, g) fold   <-> in-mapper combiner
+  cross_device_sum         <-> the shuffle: ONE reduction of k*(m+1) floats
+                               per device per Lloyd iteration
+  centroid_update once     <-> the single reducer
+
+Memory is O(block) *per device*: no device ever holds more than one block of
+X (or Y), one block of its embedding, and the (k, m)/(k,) statistics — past
+both single-device HBM and, with a memmap/generator store, host RAM.
+
+Exact sharded Lloyd reaches the same fixed point as the single-device
+`ooc_lloyd` given the same init (identical labels; centroids differ only by
+float summation grouping — asserted through the public API for every
+registered embedding member in tests/test_stream_sharded.py). The sharded
+mini-batch variant (Chitta et al., per-device) applies one decayed update per
+*round* of D device-local blocks instead of per block, so its trajectory is
+approximate by design, like the single-device mini-batch itself.
+"""
+from __future__ import annotations
+
+import threading
+from functools import lru_cache, partial
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.lloyd import assign_stats, block_cost, centroid_update
+from repro.kernels import ops
+from repro.policy import ComputePolicy
+from repro.stream.blockstore import BlockStore
+from repro.stream.engine import BlockPrefetcher, map_reduce
+
+Array = jax.Array
+
+
+def shard_devices(mesh=None) -> list:
+    """The devices a sharded stream run maps block shards onto: one stream
+    per DATA-axis coordinate of the mesh (the `model` axis carries no rows —
+    same convention as `core.distributed.data_axes_of`), or every local
+    device when no mesh is given."""
+    if mesh is None:
+        return list(jax.local_devices())
+    arr = np.asarray(mesh.devices)
+    for ax in reversed(range(arr.ndim)):
+        if mesh.axis_names[ax] == "model":
+            arr = np.take(arr, 0, axis=ax)
+    return list(arr.flatten())
+
+
+def sharded_map_reduce(
+    shards: Sequence[BlockStore],
+    map_fns: Sequence[Callable[[Any], Any]],
+    combine_fn: Callable[[Any, Any], Any],
+    inits: Sequence[Any],
+    *,
+    devices: Sequence,
+    prefetch: int = 2,
+    emits: Sequence[Callable[[int, Any], None] | None] | None = None,
+) -> list:
+    """One free-running `map_reduce` per device, concurrently: device d
+    streams `shards[d]` through its own producer queue (blocks committed to
+    `devices[d]`), folds its own accumulator with `combine_fn`, and calls its
+    own `emits[d]` in local block order. Returns the per-device accumulators
+    — the caller owns the cross-device reduction (`cross_device_sum`).
+
+    `map_fns[d]` must keep its inputs on `devices[d]` (close over
+    device_put coefficients/centroids); jit dispatch follows the committed
+    block, so D devices compute concurrently while D producers ingest.
+    """
+    D = len(devices)
+    accs: list = [None] * D
+    errs: list = [None] * D
+
+    def run(d: int) -> None:
+        try:
+            accs[d] = map_reduce(
+                shards[d], map_fns[d], combine_fn, inits[d],
+                prefetch=prefetch, emit=emits[d] if emits is not None else None,
+                device=devices[d],
+            )
+        except BaseException as e:  # noqa: BLE001 - re-raised on the caller
+            errs[d] = e
+
+    if D == 1:  # no thread hop for the degenerate mesh
+        run(0)
+    else:
+        threads = [threading.Thread(target=run, args=(d,), daemon=True) for d in range(D)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    for e in errs:
+        if e is not None:
+            raise e
+    return accs
+
+
+# ------------------------------------------------------- cross-device reduce
+
+
+@lru_cache(maxsize=16)
+def _shard_mesh(devices: tuple) -> Mesh:
+    """One 1-D mesh per device tuple — rebuilt-per-call Mesh/Sharding objects
+    would cost host time every iteration/round of the drivers."""
+    return Mesh(np.asarray(devices), ("shard",))
+
+
+def _replicate(tree, devices):
+    """Place a pytree identically on every shard device (the paper's
+    broadcast of the small reducer state)."""
+    if len(devices) == 1:
+        return jax.device_put(tree, devices[0])
+    mesh = _shard_mesh(tuple(devices))
+    return jax.device_put(tree, NamedSharding(mesh, P()))
+
+
+def _device_copies(arr: Array, devices) -> list:
+    """Per-device views of a replicated array, in `devices` order — the
+    committed operand each device's map closure needs (zero-copy: the data
+    already lives on every shard device)."""
+    if len(devices) == 1:
+        return [arr]
+    by_dev = {s.device: s.data for s in arr.addressable_shards}
+    return [by_dev[d] for d in devices]
+
+
+def cross_device_sum(accs: Sequence, devices) -> Any:
+    """The shuffle: per-device stat pytrees (each committed to its device)
+    -> their elementwise sum, replicated on every device. Leaves are stacked
+    into one (D, ...) array sharded over a 1-D device mesh, so a single
+    `jnp.sum` over the device axis lowers to the cross-device reduction —
+    the psum-equivalent, moving exactly the per-device stat bytes."""
+    if len(devices) == 1:
+        return accs[0]
+    sharding = NamedSharding(_shard_mesh(tuple(devices)), P("shard"))
+
+    def stack_sum(*leaves):
+        glob = jax.make_array_from_single_device_arrays(
+            (len(devices),) + leaves[0].shape, sharding, [l[None] for l in leaves]
+        )
+        return jnp.sum(glob, axis=0)
+
+    return jax.tree_util.tree_map(stack_sum, *accs)
+
+
+# ------------------------------------------------------------ jit'd map fns
+
+
+@partial(jax.jit, static_argnames=("k", "discrepancy", "policy"))
+def _assign_stats_y(y, c, k, discrepancy, policy):
+    return assign_stats(y, c, k, discrepancy, policy=policy)
+
+
+# Final-pass labels go through the SAME policy-routed assign_stats as the
+# in-iteration maps (and as lloyd._final_assign): under a Pallas-enabled
+# policy both backends must assign through the same kernel, or boundary rows
+# could flip and break the stream_shard == stream label identity.
+@partial(jax.jit, static_argnames=("policy",))
+def _embed_assign_cost(x, params, c, policy):
+    from repro import embed
+
+    y = embed.transform(params, x, policy)
+    _, _, labels = assign_stats(
+        y, c, c.shape[0], params.discrepancy, policy=policy
+    )
+    return labels, block_cost(y, c, params.discrepancy)
+
+
+@partial(jax.jit, static_argnames=("discrepancy", "policy"))
+def _assign_cost_y(y, c, discrepancy, policy):
+    _, _, labels = assign_stats(y, c, c.shape[0], discrepancy, policy=policy)
+    return labels, block_cost(y, c, discrepancy)
+
+
+def _stat_map_fns(coeffs_d, cells, k, disc, pol, devices):
+    """Per-device (Z, g, labels) maps reading the device's centroid cell —
+    swapped between iterations/rounds without retracing."""
+    fns = []
+    for d in range(len(devices)):
+        if coeffs_d[d] is not None:
+            fns.append(
+                lambda x, p=coeffs_d[d], cell=cells[d]:
+                    ops.embed_assign_block(x, p, cell[0], policy=pol)
+            )
+        else:
+            fns.append(
+                lambda y, cell=cells[d]:
+                    _assign_stats_y(y, cell[0], k, disc, pol)
+            )
+    return fns
+
+
+# ----------------------------------------------------------- Lloyd drivers
+
+
+def _label_emits(shards, labels_host, changed=None):
+    def make(shard):
+        def emit(i, out):
+            lo = shard.row_offset(i)
+            new = np.asarray(out[2], dtype=np.int32)
+            if changed is not None and not changed[0] \
+                    and not np.array_equal(new, labels_host[lo:lo + new.shape[0]]):
+                changed[0] = True
+            labels_host[lo:lo + new.shape[0]] = new
+
+        return emit
+
+    return [make(s) for s in shards]
+
+
+def _final_assign_sharded(
+    shards, coeffs_d, disc, c_locals, labels_host, pol, prefetch, devices
+):
+    """Final pass under the final centroids: labels + inertia, one partial
+    cost per device summed on the host (the last tiny shuffle)."""
+    fns = []
+    for d in range(len(devices)):
+        if coeffs_d[d] is not None:
+            fns.append(lambda x, p=coeffs_d[d], c=c_locals[d]:
+                       _embed_assign_cost(x, p, c, pol))
+        else:
+            fns.append(lambda y, c=c_locals[d]: _assign_cost_y(y, c, disc, pol))
+
+    def emit_of(shard):
+        def emit(i, out):
+            lo = shard.row_offset(i)
+            lab = np.asarray(out[0], dtype=np.int32)
+            labels_host[lo:lo + lab.shape[0]] = lab
+
+        return emit
+
+    zeros = [jax.device_put(jnp.asarray(0.0), dev) for dev in devices]
+    costs = sharded_map_reduce(
+        shards, fns, lambda acc, out: acc + out[1], zeros,
+        devices=devices, prefetch=prefetch, emits=[emit_of(s) for s in shards],
+    )
+    return float(sum(float(c) for c in costs))
+
+
+def ooc_lloyd_sharded(
+    store: BlockStore,
+    k: int,
+    *,
+    coeffs,
+    discrepancy,
+    iters: int,
+    init: Array,
+    policy: ComputePolicy,
+    prefetch: int,
+    devices: Sequence,
+):
+    """Exact out-of-core Lloyd across `devices`: same update rule (and fixed
+    point) as the single-device `ooc_lloyd`, memory O(block) per device.
+    Called through `ooc_lloyd(devices=...)`, which resolves init/policy."""
+    from repro.stream.lloyd import StreamLloydResult
+
+    devices = list(devices)
+    D = len(devices)
+    disc = coeffs.discrepancy if coeffs is not None else discrepancy
+    shards = [store.shard(d, D) for d in range(D)]
+    coeffs_d = [jax.device_put(coeffs, dev) if coeffs is not None else None
+                for dev in devices]
+    m = int(init.shape[1])
+    c = _replicate(jnp.asarray(init), devices)
+    cells: list[list] = [[None] for _ in range(D)]
+    map_fns = _stat_map_fns(coeffs_d, cells, k, disc, policy, devices)
+
+    labels_host = np.full(store.n, -1, dtype=np.int32)
+    changed = [True]
+    emits = _label_emits(shards, labels_host, changed)
+    zero = (jnp.zeros((k, m), jnp.float32), jnp.zeros((k,), jnp.float32))
+    zeros_d = [jax.device_put(zero, dev) for dev in devices]
+
+    it = 0
+    while it < iters and changed[0]:
+        changed[0] = False
+        for d, cd in enumerate(_device_copies(c, devices)):
+            cells[d][0] = cd
+        accs = sharded_map_reduce(
+            shards, map_fns,
+            lambda acc, out: (acc[0] + out[0], acc[1] + out[1]),
+            list(zeros_d), devices=devices, prefetch=prefetch, emits=emits,
+        )
+        Z, g = cross_device_sum(accs, devices)
+        c = centroid_update(Z, g, c)
+        it += 1
+
+    c_locals = _device_copies(c, devices)
+    inertia = _final_assign_sharded(
+        shards, coeffs_d, disc, c_locals, labels_host, policy, prefetch, devices
+    )
+    centroids = jnp.asarray(np.asarray(c))  # off the mesh: plain default-device array
+    return StreamLloydResult(labels_host, centroids, inertia, it, (it + 1) * store.n)
+
+
+def minibatch_lloyd_sharded(
+    store: BlockStore,
+    k: int,
+    *,
+    coeffs,
+    discrepancy,
+    decay: float,
+    epochs: int,
+    init: Array,
+    policy: ComputePolicy,
+    prefetch: int,
+    devices: Sequence,
+):
+    """Per-device mini-batch Lloyd (Chitta et al., sharded): per round, every
+    device assigns ONE of its local blocks under the current centroids; the
+    round's per-device stats are reduced once and folded into the decayed
+    global (Z, g); centroids move once per round of D blocks. Devices whose
+    shard is exhausted contribute zero stats in the ragged final rounds."""
+    from repro.stream.lloyd import StreamLloydResult
+
+    devices = list(devices)
+    D = len(devices)
+    disc = coeffs.discrepancy if coeffs is not None else discrepancy
+    shards = [store.shard(d, D) for d in range(D)]
+    coeffs_d = [jax.device_put(coeffs, dev) if coeffs is not None else None
+                for dev in devices]
+    m = int(init.shape[1])
+    c = _replicate(jnp.asarray(init), devices)
+    cells: list[list] = [[None] for _ in range(D)]
+    map_fns = _stat_map_fns(coeffs_d, cells, k, disc, policy, devices)
+
+    zero = (jnp.zeros((k, m), jnp.float32), jnp.zeros((k,), jnp.float32))
+    zeros_d = [jax.device_put(zero, dev) for dev in devices]
+    Z, g = _replicate(zero, devices)
+
+    labels_host = np.full(store.n, -1, dtype=np.int32)
+
+    for _ in range(epochs):
+        pfs = [BlockPrefetcher(shards[d], prefetch=prefetch, device=devices[d])
+               for d in range(D)]
+        try:
+            while True:
+                for d, cd in enumerate(_device_copies(c, devices)):
+                    cells[d][0] = cd
+                round_outs = []
+                stats = list(zeros_d)
+                for d in range(D):
+                    item = next(pfs[d], None)
+                    if item is None:
+                        continue
+                    i, blk = item
+                    out = map_fns[d](blk)
+                    stats[d] = (out[0], out[1])
+                    round_outs.append((d, i, out))
+                if not round_outs:
+                    break
+                Zb, gb = cross_device_sum(stats, devices)
+                Z = decay * Z + Zb
+                g = decay * g + gb
+                c = centroid_update(Z, g, c)
+                for d, i, out in round_outs:
+                    lo = shards[d].row_offset(i)
+                    lab = np.asarray(out[2], dtype=np.int32)
+                    labels_host[lo:lo + lab.shape[0]] = lab
+        finally:
+            for pf in pfs:
+                pf.close()
+
+    c_locals = _device_copies(c, devices)
+    inertia = _final_assign_sharded(
+        shards, coeffs_d, disc, c_locals, labels_host, policy, prefetch, devices
+    )
+    centroids = jnp.asarray(np.asarray(c))
+    return StreamLloydResult(
+        labels_host, centroids, inertia, epochs, (epochs + 1) * store.n
+    )

@@ -1,0 +1,16 @@
+"""Shared member -> config table for the sharded keystone checks.
+
+Pure data (no jax / repro imports) so tests/sharded_checks.py can load it
+BEFORE its device-forcing prologue touches XLA_FLAGS, and
+tests/test_stream_sharded.py can load it in-process — one table, both
+harnesses, no drift. Each entry: (kernel_name, kernel_params, member_kwargs);
+tensorsketch is the polynomial-kernel member, everything else runs on a
+fixed-gamma rbf.
+"""
+
+SETUPS = {
+    "nystrom": ("rbf", {"gamma": 0.1}, dict(l=48, m=32)),
+    "sd": ("rbf", {"gamma": 0.1}, dict(l=48, m=32, t=8)),
+    "rff": ("rbf", {"gamma": 0.1}, dict(m=64)),
+    "tensorsketch": ("poly", {"degree": 2, "coef0": 1.0}, dict(m=64)),
+}

