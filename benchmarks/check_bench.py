@@ -1,0 +1,158 @@
+"""Schema checker for the BENCH_*.json perf-trajectory files.
+
+    PYTHONPATH=src python benchmarks/check_bench.py [files...]
+
+With no arguments, validates every BENCH_*.json in the repo root. The CI
+bench-smoke job also points it at freshly produced smoke outputs, so both the
+committed trajectory files AND the benchmark drivers' current output stay
+machine-readable — a bench that drifts its schema (or writes NaN/Infinity,
+which strict JSON rejects) fails the PR, not the next person trying to plot
+the trajectory.
+
+The schema is deliberately shallow: every file must be a strict-JSON object
+with a "config" object, and each known BENCH family must carry its headline
+keys with sane types/ranges. Unknown BENCH_*.json files still get the shared
+checks (strict JSON, config present, finite numbers) so new benches are
+covered the moment they are named BENCH_something.json.
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _fail(path: Path, msg: str):
+    raise SystemExit(f"[check-bench] {path.name}: {msg}")
+
+
+def _need(path: Path, obj: dict, key: str, types) -> object:
+    if key not in obj:
+        _fail(path, f"missing required key {key!r}")
+    v = obj[key]
+    if not isinstance(v, types):
+        _fail(path, f"key {key!r} has type {type(v).__name__}, "
+                    f"want {types}")
+    return v
+
+
+def _finite_numbers(path: Path, obj, where="$"):
+    """Every number anywhere in the tree must be finite (json.load only lets
+    non-finite floats in via the lenient default we disable on parse; this
+    guards values that arrived as strings of a rewritten file too)."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            _finite_numbers(path, v, f"{where}.{k}")
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            _finite_numbers(path, v, f"{where}[{i}]")
+    elif isinstance(obj, float) and not math.isfinite(obj):
+        _fail(path, f"non-finite number at {where}")
+
+
+def _positive(path: Path, obj: dict, *keys: str):
+    for key in keys:
+        v = _need(path, obj, key, (int, float))
+        if v <= 0:
+            _fail(path, f"key {key!r} must be positive, got {v}")
+
+
+# ---------------------------------------------------------- per-family rules
+
+
+def check_stream(path: Path, d: dict):
+    _positive(path, d, "embed_sync_rows_per_s", "embed_async_rows_per_s",
+              "overlap_speedup", "ooc_lloyd_rows_per_s_per_iter",
+              "minibatch_rows_per_s")
+
+
+def check_api(path: Path, d: dict):
+    _positive(path, d, "facade_fit_s", "hand_rolled_drivers_s")
+    _need(path, d, "facade_dispatch_overhead_pct", (int, float))
+    _need(path, d, "note", str)
+
+
+def check_stream_shard(path: Path, d: dict):
+    per = _need(path, d, "per_device_count", dict)
+    if not per:
+        _fail(path, "per_device_count is empty")
+    for count, entry in per.items():
+        if not count.isdigit():
+            _fail(path, f"per_device_count key {count!r} is not a device count")
+        _positive(path, entry, "fit_s", "rows_per_s")
+    agree = _need(path, d, "min_label_agreement_vs_1dev", (int, float))
+    if not 0.0 <= agree <= 1.0:
+        _fail(path, f"min_label_agreement_vs_1dev out of [0, 1]: {agree}")
+
+
+def check_embed(path: Path, d: dict):
+    members = _need(path, d, "members", dict)
+    if not members:
+        _fail(path, "members is empty")
+    for name, entry in members.items():
+        _positive(path, entry, "unfused_rows_per_s", "fused_rows_per_s",
+                  "fused_speedup")
+
+
+def check_sweep(path: Path, d: dict):
+    _positive(path, d, "sweep_s", "repeated_fit_s", "speedup")
+    table = _need(path, d, "sweep_inertia_table", dict)
+    cfg = d["config"]
+    if sorted(int(k) for k in table) != sorted(cfg["k_grid"]):
+        _fail(path, "sweep_inertia_table keys != config.k_grid")
+    for k, row in table.items():
+        if len(row) != cfg["restarts"]:
+            _fail(path, f"inertia row for k={k} has {len(row)} entries, "
+                        f"want restarts={cfg['restarts']}")
+    best = _need(path, d, "best", dict)
+    if int(best["k"]) not in cfg["k_grid"]:
+        _fail(path, f"best.k={best['k']} not in config.k_grid")
+    if d.get("single_candidate_label_identity") is not True:
+        _fail(path, "single_candidate_label_identity must be true")
+    # the acceptance gate rides in the JSON: full-size runs must amortize
+    if not cfg.get("smoke") and cfg.get("n", 0) >= 100_000 \
+            and d["speedup"] < 3.0:
+        _fail(path, f"full-size sweep speedup {d['speedup']:.2f}x < 3x")
+
+
+FAMILIES = {
+    "BENCH_stream.json": check_stream,
+    "BENCH_api.json": check_api,
+    "BENCH_stream_shard.json": check_stream_shard,
+    "BENCH_embed.json": check_embed,
+    "BENCH_sweep.json": check_sweep,
+}
+
+
+def check_file(path: Path):
+    raw = path.read_text()
+    d = json.loads(raw, parse_constant=lambda c: _fail(
+        path, f"non-strict JSON constant {c!r}"))
+    if not isinstance(d, dict):
+        _fail(path, "top level must be a JSON object")
+    _need(path, d, "config", dict)
+    _finite_numbers(path, d)
+    family = FAMILIES.get(path.name)
+    if family is not None:
+        family(path, d)
+    print(f"[check-bench] {path} OK"
+          + ("" if family else " (shared checks only: unknown family)"))
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    paths = [Path(a) for a in argv] or sorted(REPO.glob("BENCH_*.json"))
+    if not paths:
+        raise SystemExit("[check-bench] no BENCH_*.json files found")
+    for p in paths:
+        if not p.exists():
+            _fail(p, "file does not exist")
+        check_file(p)
+    print(f"[check-bench] {len(paths)} file(s) valid")
+
+
+if __name__ == "__main__":
+    main()

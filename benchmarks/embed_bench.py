@@ -39,7 +39,6 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 import repro.embed as E
 from repro.core.kernels_fn import Kernel
@@ -78,8 +77,13 @@ def main(argv=None):
     ap.add_argument("--l", type=int, default=128)
     ap.add_argument("--m", type=int, default=64)
     ap.add_argument("--prefetch", type=int, default=2)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: small n/blocks, drivers stay exercisable")
     ap.add_argument("--out", default=str(Path(__file__).parent.parent / "BENCH_embed.json"))
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.n = min(args.n, 32768)
+        args.block_rows = min(args.block_rows, 4096)
 
     store, _ = gaussian_blobs_blocks(
         0, args.n, args.d, args.k, block_rows=args.block_rows, separation=4.0

@@ -15,12 +15,11 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import baselines, nmi
 from repro.core.kernels_fn import Kernel, self_tuned_rbf
-from repro.core.kkmeans import APNCConfig, apnc_embed, fit_coefficients, fit_predict
+from repro.core.kkmeans import APNCConfig, apnc_embed, fit_coefficients
 from repro.data.synthetic import paper_standin
 
 # (dataset, n for the bench, kernel builder)

@@ -172,11 +172,19 @@ def main(argv=None):
                     help="also sweep backend=stream_shard over device counts")
     ap.add_argument("--sharded-only", action="store_true",
                     help="run ONLY the sharded sweep")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: small n/blocks, no modeled ingest "
+                         "latency — keeps the driver exercisable on every PR")
     ap.add_argument("--out", default=str(Path(__file__).parent.parent / "BENCH_stream.json"))
     ap.add_argument("--api-out", default=str(Path(__file__).parent.parent / "BENCH_api.json"))
     ap.add_argument("--shard-out",
                     default=str(Path(__file__).parent.parent / "BENCH_stream_shard.json"))
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.n = min(args.n, 16384)
+        args.block_rows = min(args.block_rows, 2048)
+        args.iters = min(args.iters, 1)
+        args.ingest_delay_ms = 0.0
 
     assert args.n >= 4 * args.block_rows, "dataset must dwarf the resident block"
     gen_store, _ = gaussian_blobs_blocks(

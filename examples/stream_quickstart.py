@@ -15,8 +15,6 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-import jax
-import numpy as np
 
 from repro.api import KernelKMeans
 from repro.core.metrics import nmi

@@ -32,10 +32,21 @@ from repro.api.registry import (
 )
 from repro.api.registry import KERNELS
 from repro.api import backends as _backends  # noqa: F401  (registers built-ins)
-from repro.api.backends import BackendFit, FitContext
+from repro.api.backends import BackendFit, FitContext, ensure_embedding_cache
 from repro.api.estimator import AUTO_STREAM_ROWS, KernelKMeans
 from repro.embed import Embedding, EmbeddingProps
 from repro.policy import ComputePolicy
+
+
+def __getattr__(name):
+    # SweepResult lives in repro.sweep (which imports repro.api for the
+    # ClusterModel artifact); lazy re-export avoids the import cycle while
+    # keeping `from repro.api import SweepResult` working.
+    if name == "SweepResult":
+        from repro.sweep.result import SweepResult
+
+        return SweepResult
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "AUTO_STREAM_ROWS",
@@ -50,7 +61,9 @@ __all__ = [
     "FitMeta",
     "KERNELS",
     "KernelKMeans",
+    "SweepResult",
     "available_backends",
+    "ensure_embedding_cache",
     "available_embeddings",
     "get_backend",
     "get_embedding",

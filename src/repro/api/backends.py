@@ -52,6 +52,34 @@ class FitContext:
     decay: float  # minibatch: sufficient-stat decay
     epochs: int  # minibatch: passes over the stream
     mesh: Any | None  # shard_map: jax Mesh (1-device fallback if None)
+    # Embed-once cache (the sweep engine's amortization, usable by any fit):
+    # when set, backends cluster directly over the already-embedded blocks /
+    # array instead of re-embedding X on every pass.
+    y_store: BlockStore | None = None  # host-staged Y blocks (stream backends)
+    y_array: Array | None = None  # resident Y (local backend)
+
+
+def ensure_embedding_cache(ctx: FitContext, *, devices=None) -> FitContext:
+    """Fill the context's embed-once cache if it is empty: ONE embedding pass
+    (sharded across `devices` when given) staging Y, after which every
+    backend run over this context is re-embedding-free. Idempotent."""
+    if ctx.array is not None and ctx.y_array is None:
+        from repro import embed
+
+        ctx.y_array = embed.transform(ctx.params, ctx.array, ctx.policy)
+    elif ctx.array is None and ctx.y_store is None:
+        if devices is not None and len(devices) > 1:
+            from repro.stream.sharded import stream_embed_sharded
+
+            ctx.y_store = stream_embed_sharded(
+                ctx.store, ctx.params, devices=devices, policy=ctx.policy,
+                prefetch=ctx.policy.prefetch,
+            )
+        else:
+            from repro.stream.lloyd import stream_embed
+
+            ctx.y_store = stream_embed(ctx.store, ctx.params, policy=ctx.policy)
+    return ctx
 
 
 @dataclasses.dataclass
@@ -92,11 +120,20 @@ def _from_stream(res) -> BackendFit:
 
 @register_backend("local")
 def fit_local(ctx: FitContext) -> BackendFit:
-    """Single-program path: embed everything, lax.while Lloyd per restart."""
+    """Single-program path: embed everything, lax.while Lloyd per restart.
+    A filled embed-cache (`y_array` / `y_store`) skips the embedding pass."""
     from repro import embed
 
-    X = _materialize(ctx)
-    Y = embed.transform(ctx.params, X, ctx.policy)
+    if ctx.y_array is not None:
+        Y = ctx.y_array
+        n = int(Y.shape[0])
+    elif ctx.y_store is not None:
+        Y = jnp.asarray(ctx.y_store.materialize())
+        n = int(Y.shape[0])
+    else:
+        X = _materialize(ctx)
+        n = int(X.shape[0])
+        Y = embed.transform(ctx.params, X, ctx.policy)
 
     def run_one(init):
         res = lloyd(
@@ -108,19 +145,29 @@ def fit_local(ctx: FitContext) -> BackendFit:
             centroids=res.centroids,
             inertia=float(res.inertia),
             iters=int(res.iters),
-            rows_seen=(int(res.iters) + 1) * int(X.shape[0]),
+            rows_seen=(int(res.iters) + 1) * n,
         )
 
     return _run_restarts(ctx, run_one)
 
 
+def _stream_source(ctx: FitContext) -> dict:
+    """The stream drivers' data keywords: raw X blocks (embed fused into the
+    per-block map) by default, or the staged-Y cache when the context carries
+    one — the drivers' existing `discrepancy=` (Y blocks) mode."""
+    if ctx.y_store is not None:
+        return dict(store=ctx.y_store, discrepancy=ctx.params.discrepancy)
+    return dict(store=ctx.store, coeffs=ctx.params)
+
+
 @register_backend("stream")
 def fit_stream(ctx: FitContext) -> BackendFit:
     """Exact out-of-core Lloyd: identical update rule (and fixed point) to
-    `local`, memory O(block)."""
+    `local`, memory O(block). A filled embed-cache routes the iterations over
+    the staged Y blocks instead of re-embedding X every pass."""
     return _run_restarts(ctx, lambda init: _from_stream(ooc_lloyd(
-        ctx.store, ctx.k, coeffs=ctx.params, iters=ctx.iters, init=init,
-        policy=ctx.policy,
+        k=ctx.k, iters=ctx.iters, init=init, policy=ctx.policy,
+        **_stream_source(ctx),
     )))
 
 
@@ -136,8 +183,8 @@ def fit_stream_shard(ctx: FitContext) -> BackendFit:
 
     devices = shard_devices(ctx.mesh)
     return _run_restarts(ctx, lambda init: _from_stream(ooc_lloyd(
-        ctx.store, ctx.k, coeffs=ctx.params, iters=ctx.iters, init=init,
-        policy=ctx.policy, devices=devices,
+        k=ctx.k, iters=ctx.iters, init=init, policy=ctx.policy,
+        devices=devices, **_stream_source(ctx),
     )))
 
 
@@ -146,8 +193,8 @@ def fit_minibatch(ctx: FitContext) -> BackendFit:
     """Single-pass streaming Lloyd with decayed (Z, g): clustering cost
     decoupled from n, for larger-than-disk / continuous-ingest streams."""
     return _run_restarts(ctx, lambda init: _from_stream(minibatch_lloyd(
-        ctx.store, ctx.k, coeffs=ctx.params, decay=ctx.decay,
-        epochs=ctx.epochs, init=init, policy=ctx.policy,
+        k=ctx.k, decay=ctx.decay, epochs=ctx.epochs, init=init,
+        policy=ctx.policy, **_stream_source(ctx),
     )))
 
 

@@ -176,9 +176,11 @@ class KernelKMeans:
         )
         return params, pool
 
-    def _prepare(self, X, key: Array, backend_name: str) -> FitContext:
-        """Phase 1, shared by every backend: blocked view, landmark sample,
-        embedding fit, k-means++ seeding."""
+    def _phase1(self, X, key: Array, backend_name: str):
+        """The backend-independent front of every fit/sweep: blocked view,
+        landmark sample, embedding fit, seeding pool. Returns
+        (store, array, params, pool, k_seed) — k-means++ draws come off
+        `k_seed` per restart, identically for fit() and sweep()."""
         if isinstance(X, BlockStore):
             self._reject_sharded(X, "fit")
             store, array = X, None
@@ -204,6 +206,12 @@ class KernelKMeans:
             reservoir_sample(store, self.landmark_sample, seed=int(k_sample[-1]))
         )
         params, pool = self._fit_params_and_pool(sample, k_fit)
+        return store, array, params, pool, k_seed
+
+    def _prepare(self, X, key: Array, backend_name: str) -> FitContext:
+        """Phase 1, shared by every backend: blocked view, landmark sample,
+        embedding fit, k-means++ seeding."""
+        store, array, params, pool, k_seed = self._phase1(X, key, backend_name)
         inits = [
             kmeanspp_init(
                 jax.random.fold_in(k_seed, r), pool, self.k, params.discrepancy
@@ -230,6 +238,46 @@ class KernelKMeans:
 
     def fit_predict(self, X, *, key: Array | None = None) -> np.ndarray:
         return self.fit(X, key=key).labels_
+
+    def sweep(
+        self,
+        X,
+        k_grid,
+        *,
+        restarts: int | None = None,
+        key: Array | None = None,
+        checkpoint_dir: str | Path | None = None,
+    ):
+        """Embed-once model selection: materialize the embedding exactly once,
+        then run `restarts` k-means++ restarts for every k in `k_grid`
+        directly over the cached embedded blocks — one engine pass feeds every
+        candidate per Lloyd iteration, so the R*|k_grid| candidate lattice
+        costs ~one embedding pass plus cheap linear k-means instead of
+        R*|k_grid| full fits (benchmarks/sweep_bench.py).
+
+        Supported backends: "local", "stream", "stream_shard" (per `backend=`
+        / the auto dispatch). Returns a `repro.sweep.SweepResult` — every
+        candidate's ClusterModel, the inertia table, and a deterministic
+        best-model selection the estimator adopts (labels_/inertia_/model_
+        afterwards describe the winner, ready to predict/save/serve).
+
+        `restarts=None` uses `n_init`. `sweep(k_grid=[k], restarts=1)` is
+        exactly `fit(k)`: identical labels from the same key (the keystone
+        invariant, asserted for every registered embedding member on both
+        stream backends in tests/test_sweep.py).
+
+        `checkpoint_dir=` persists the embed-once stage (params + pool + Y
+        blocks) before clustering and the SweepResult after: an interrupted
+        sweep re-invoked with the same key and checkpoint_dir resumes PAST
+        the embedding pass (no second embed — tests assert via the engine's
+        pass counter).
+        """
+        from repro.sweep import sweep_estimator
+
+        return sweep_estimator(
+            self, X, k_grid, restarts=restarts, key=key,
+            checkpoint_dir=checkpoint_dir,
+        )
 
     def partial_fit(self, X, *, key: Array | None = None) -> "KernelKMeans":
         """Online face of the minibatch backend: one decayed (Z, g) update per

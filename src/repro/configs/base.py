@@ -8,8 +8,6 @@ input specs for each assigned input shape.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

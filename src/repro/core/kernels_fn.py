@@ -13,8 +13,6 @@ and we add linear as the trivial member.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -251,6 +251,110 @@ def load_cluster_model(ckpt_dir: str | Path, *, step: int | None = None):
     )
 
 
+def save_sweep_result(ckpt_dir: str | Path, result, *, step: int = 0) -> Path:
+    """Persist a `repro.sweep.SweepResult`: the shared embedding params once,
+    every candidate's centroids as one stacked (R, k, m) tree per k-grid
+    entry, the inertia/iteration tables, and the selection — crash-atomic via
+    the same tmp-dir/fsync/replace discipline as every other checkpoint.
+    Labels are NOT persisted (derived data: re-obtainable via predict)."""
+    import dataclasses
+
+    from repro.embed import embedding_for
+
+    params = result.models[0][0].params  # shared by every candidate
+    emb = embedding_for(params)
+    arrays, config = emb.params_state(params)
+    trees: dict = {
+        "coeffs": arrays,
+        # f32: matches ClusterModel.inertia (and jax's x64-disabled restore)
+        "inertia": {"inertia": np.asarray(result.inertia, np.float32)},
+    }
+    for i in range(len(result.k_grid)):
+        trees[f"centroids_k{i}"] = {
+            "centroids": np.stack([
+                np.asarray(m.centroids) for m in result.models[i]
+            ])
+        }
+    meta = {
+        "sweep": {
+            "k_grid": [int(k) for k in result.k_grid],
+            "restarts": int(result.restarts),
+            "backend": result.backend,
+            "best": [int(result.best_k_index), int(result.best_restart)],
+            "embedding": {
+                "method": result.models[0][0].meta.method,
+                "config": config,
+            },
+            "fit": [
+                [dataclasses.asdict(m.meta) for m in row]
+                for row in result.models
+            ],
+        }
+    }
+    return save(ckpt_dir, step, trees, extra_meta=meta)
+
+
+def load_sweep_result(ckpt_dir: str | Path, *, step: int | None = None):
+    """Inverse of save_sweep_result: a `repro.sweep.SweepResult` whose models
+    share one restored params pytree. `labels` come back None (not persisted);
+    the selection indices are the saved ones, so best-model identity survives
+    the round trip bit-for-bit."""
+    import jax.numpy as jnp
+
+    from repro.api.model import ClusterModel, FitMeta
+    from repro.embed import get_embedding
+    from repro.sweep.result import SweepResult
+
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    manifest = json.loads(
+        (ckpt_dir / f"step_{step:08d}" / "manifest.json").read_text()
+    )
+    meta = manifest["meta"]["sweep"]
+
+    def templates(tree_name):
+        spec = manifest["trees"][tree_name]
+        return {
+            k: jax.ShapeDtypeStruct(tuple(v["shape"]), np.dtype(v["dtype"]))
+            for k, v in spec.items()
+        }
+
+    names = ["coeffs", "inertia"] + [
+        f"centroids_k{i}" for i in range(len(meta["k_grid"]))
+    ]
+    _, out = restore(
+        ckpt_dir, {name: templates(name) for name in names}, step=step
+    )
+    emb = get_embedding(meta["embedding"]["method"])
+    params = emb.params_restore(out["coeffs"], meta["embedding"]["config"])
+    inertia = np.asarray(out["inertia"]["inertia"])
+    models = []
+    for i in range(len(meta["k_grid"])):
+        stacked = out[f"centroids_k{i}"]["centroids"]
+        models.append([
+            ClusterModel(
+                params=params,
+                centroids=jnp.asarray(stacked[r]),
+                inertia=jnp.asarray(inertia[i, r], jnp.float32),
+                meta=FitMeta(**meta["fit"][i][r]),
+            )
+            for r in range(int(meta["restarts"]))
+        ])
+    return SweepResult(
+        models=models,
+        inertia=inertia,
+        labels=None,
+        k_grid=tuple(meta["k_grid"]),
+        restarts=int(meta["restarts"]),
+        backend=meta["backend"],
+        best_k_index=int(meta["best"][0]),
+        best_restart=int(meta["best"][1]),
+    )
+
+
 def save_clustering_model(ckpt_dir: str | Path, coeffs, centroids, *, step: int = 0) -> Path:
     """Legacy shim over save_cluster_model for (coeffs, centroids) call sites."""
     import jax.numpy as jnp

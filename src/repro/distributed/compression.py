@@ -13,7 +13,6 @@ gradient bytes across pods, where the links are thinnest (the "pod" axis).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax

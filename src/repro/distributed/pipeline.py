@@ -12,7 +12,6 @@ devices (pipe=4), loss equal to ~1e-5.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax

@@ -15,6 +15,7 @@ from repro.core.apnc import APNCCoefficients
 from repro.core.kernels_fn import Kernel
 from repro.kernels import apnc_assign as _assign
 from repro.kernels import apnc_embed as _embed
+from repro.kernels import rff_embed as _rff
 from repro.policy import ComputePolicy, resolve_policy
 
 Array = jax.Array
@@ -105,9 +106,6 @@ def apnc_assign(
     interpret = _auto_interpret(interpret)
     bn_eff = min(bn, max(8, ((Y.shape[0] + 7) // 8) * 8))
     return _assign_padded(Y, C, discrepancy, bn_eff, interpret)
-
-
-from repro.kernels import rff_embed as _rff
 
 
 @partial(jax.jit, static_argnames=("scale", "bn", "bm", "bd", "interpret"))

@@ -6,7 +6,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.apnc import APNCCoefficients, Discrepancy, pairwise_discrepancy
+from repro.core.apnc import Discrepancy, pairwise_discrepancy
 from repro.core.kernels_fn import Kernel
 
 Array = jax.Array

@@ -37,7 +37,9 @@ def _policy_of(args) -> ComputePolicy:
 
 
 def _fit_and_save(args, ckpt_dir: str) -> None:
-    """Train a clustering model on a blocked synthetic stream and persist it."""
+    """Train a clustering model on a blocked synthetic stream and persist it.
+    With --sweep-k-grid, run an embed-once sweep over the grid and persist the
+    SELECTED best model — the served model is the sweep's winner."""
     from repro.data.synthetic import gaussian_blobs_blocks
 
     X_store, _ = gaussian_blobs_blocks(
@@ -56,10 +58,25 @@ def _fit_and_save(args, ckpt_dir: str) -> None:
         method=args.method, backend=args.backend, l=args.l, m=args.m,
         iters=args.iters, policy=_policy_of(args),
     )
-    est.fit(X_store, key=jax.random.PRNGKey(args.seed + 1))
-    print(f"[cluster-serve] fit: n={args.n_fit} blocks of {args.block_rows}, "
-          f"backend={est.backend_}, {est.n_iter_} Lloyd iters, "
-          f"inertia {est.inertia_:.1f}")
+    if args.sweep_k_grid:
+        k_grid = [int(v) for v in args.sweep_k_grid.split(",")]
+        result = est.sweep(
+            X_store, k_grid, restarts=args.sweep_restarts,
+            key=jax.random.PRNGKey(args.seed + 1),
+        )
+        for k, r, _, inertia in result.candidates():
+            tag = " <- selected" if (
+                k == result.best_k and r == result.best_restart) else ""
+            print(f"[cluster-serve] sweep candidate k={k} restart={r}: "
+                  f"inertia {inertia:.1f}{tag}")
+        print(f"[cluster-serve] sweep: {len(k_grid)}x{result.restarts} "
+              f"candidates over ONE embedding pass (backend={est.backend_}); "
+              f"serving best k={result.best_k}")
+    else:
+        est.fit(X_store, key=jax.random.PRNGKey(args.seed + 1))
+        print(f"[cluster-serve] fit: n={args.n_fit} blocks of {args.block_rows}, "
+              f"backend={est.backend_}, {est.n_iter_} Lloyd iters, "
+              f"inertia {est.inertia_:.1f}")
     est.save(ckpt_dir)
 
 
@@ -102,6 +119,14 @@ def main(argv=None):
     ap.add_argument("--l", type=int, default=128)
     ap.add_argument("--m", type=int, default=128)
     ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument(
+        "--sweep-k-grid", default="",
+        help="comma-separated k grid (e.g. \"4,5,7\"): fit via an embed-once "
+             "sweep (KernelKMeans.sweep) and serve the selected best model "
+             "instead of a single fit at --k",
+    )
+    ap.add_argument("--sweep-restarts", type=int, default=2,
+                    help="k-means++ restarts per k-grid entry in --sweep-k-grid mode")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--use-pallas", action="store_true")
     ap.add_argument(

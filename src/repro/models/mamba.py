@@ -115,7 +115,6 @@ def fwd_decode(
     p: dict, cfg: ArchConfig, policy: Policy, x: Array, state: dict
 ) -> tuple[Array, dict]:
     """One decode step. x (B, 1, d); state = {h, conv}."""
-    B = x.shape[0]
     xb, z = _split_proj(p, cfg, policy, x)  # (B, 1, di)
     window = jnp.concatenate([state["conv"].astype(xb.dtype), xb], axis=1)  # (B, W, di)
     w = policy.cast(p["conv_w"])  # (W, di)

@@ -166,11 +166,9 @@ def _chunked_ce(params, cfg, policy, x, labels, mask):
     if cfg.frontend == "audio_codes":
         y = labels[:, :, 1:]
         m = mask[:, 1:]
-        perm = lambda a: a  # (B, K, S-1) already
     else:
         y = labels[:, 1:]
         m = mask[:, 1:]
-        perm = lambda a: a
     Sm = S - 1
     chunk = min(LOSS_CHUNK, Sm)
     n_even = (Sm // chunk) * chunk

@@ -61,7 +61,6 @@ def apply(p: dict, cfg: ArchConfig, policy: Policy, x: Array) -> tuple[Array, Ar
     T = B * S
     G = min(GROUP_SIZE, T)
     xg = x.reshape(T // G, G, d)
-    n = T // G
     C = _capacity(G, k, E, CAPACITY_FACTOR)
 
     logits = jnp.einsum("ngd,de->nge", xg, policy.cast(p["router"])).astype(jnp.float32)

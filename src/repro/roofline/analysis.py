@@ -20,7 +20,6 @@ attention-causal waste, MoE dispatch overhead and TP head padding.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 from pathlib import Path
 

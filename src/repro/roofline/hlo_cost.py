@@ -18,9 +18,7 @@ Used by repro.launch.dryrun (records per-cell terms) and repro.roofline.analysis
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from functools import lru_cache
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,

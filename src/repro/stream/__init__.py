@@ -10,8 +10,19 @@ and the request micro-batcher used by the online assignment service
 (`microbatch`).
 """
 from repro.stream.blockstore import BlockStore
-from repro.stream.engine import BlockPrefetcher, map_reduce
-from repro.stream.sharded import cross_device_sum, shard_devices, sharded_map_reduce
+from repro.stream.engine import (
+    BlockPrefetcher,
+    cache_embedding,
+    map_reduce,
+    pass_count,
+    reset_pass_counts,
+)
+from repro.stream.sharded import (
+    cross_device_sum,
+    shard_devices,
+    sharded_map_reduce,
+    stream_embed_sharded,
+)
 from repro.stream.lloyd import (
     StreamLloydResult,
     minibatch_lloyd,
@@ -25,9 +36,12 @@ from repro.stream.reservoir import reservoir_sample
 __all__ = [
     "BlockPrefetcher",
     "BlockStore",
+    "cache_embedding",
     "cross_device_sum",
     "map_reduce",
     "MicroBatcher",
+    "pass_count",
+    "reset_pass_counts",
     "shard_devices",
     "sharded_map_reduce",
     "StreamLloydResult",
@@ -35,5 +49,6 @@ __all__ = [
     "ooc_lloyd",
     "reservoir_sample",
     "stream_embed",
+    "stream_embed_sharded",
     "stream_fit_predict",
 ]

@@ -22,15 +22,40 @@ devices concurrently — D mappers pulling their own HDFS blocks.
 """
 from __future__ import annotations
 
+import collections
 import queue
 import threading
 from typing import Any, Callable
 
 import jax
+import numpy as np
 
-from repro.stream.blockstore import BlockStore
+from repro.stream.blockstore import BlockStore, WritableBlockStore
 
 _STOP = object()
+
+# Labeled engine-pass telemetry: every full pass over a store bumps its label's
+# count. Sweep-resume tests (and anyone auditing "did we really embed only
+# once?") read these; reset_pass_counts() scopes a measurement. The lock makes
+# the read-modify-write safe under the sharded executors' D worker threads.
+PASS_COUNTS: "collections.Counter[str]" = collections.Counter()
+_PASS_LOCK = threading.Lock()
+
+
+def _count_pass(label: str) -> None:
+    with _PASS_LOCK:
+        PASS_COUNTS[label] += 1
+
+
+def reset_pass_counts() -> None:
+    """Zero the engine-pass telemetry (test / measurement scoping)."""
+    with _PASS_LOCK:
+        PASS_COUNTS.clear()
+
+
+def pass_count(label: str) -> int:
+    """Engine passes recorded under `label` since the last reset."""
+    return PASS_COUNTS[label]
 
 
 def _producer(store: BlockStore, q: "queue.Queue", stop: threading.Event, device):
@@ -103,6 +128,7 @@ def map_reduce(
     prefetch: int = 2,
     emit: Callable[[int, Any], None] | None = None,
     device=None,
+    label: str = "map_reduce",
 ) -> Any:
     """Fold `combine_fn(acc, map_fn(block))` over every block of `store`.
 
@@ -120,7 +146,10 @@ def map_reduce(
 
     device: commit blocks (and therefore the map computation) to one specific
     device; None keeps the default-device behaviour.
+
+    label: telemetry tag — each call bumps PASS_COUNTS[label] by one full pass.
     """
+    _count_pass(label)
     if prefetch <= 0:
         acc = init
         for i in range(store.num_blocks):
@@ -143,3 +172,40 @@ def map_reduce(
     finally:
         pf.close()
     return acc
+
+
+def cache_embedding(
+    store: BlockStore,
+    map_fn: Callable[[Any], Any],
+    *,
+    d_out: int,
+    out: WritableBlockStore | None = None,
+    prefetch: int = 2,
+    device=None,
+    label: str = "cache_embedding",
+) -> WritableBlockStore:
+    """Materialize `map_fn` over every block of `store` into a staged host
+    store, through the same double-buffered prefetcher as any other pass.
+
+    This is the embed-ONCE pass of the sweep engine: X blocks stream in,
+    Y = map_fn(X) blocks are written back to host RAM by GLOBAL block id (so a
+    shard's local block i lands at its global offset and sharded writers can
+    share one `out`). The returned store is a `WritableBlockStore`, whose
+    unwritten-block guard turns any read of a block this pass never produced
+    into an error instead of silent zeros.
+
+    `out=` lets D sharded cache passes (one per device, disjoint round-robin
+    block subsets) fill one shared staging area; by default a fresh store
+    sized (store.n, d_out) is allocated.
+    """
+    if out is None:
+        out = BlockStore.empty(n=store.n, d=d_out, block_rows=store.block_rows)
+
+    def emit(i, y):
+        out.put(store.block_id(i), np.asarray(y))
+
+    map_reduce(
+        store, map_fn, lambda acc, _: acc, None,
+        prefetch=prefetch, emit=emit, device=device, label=label,
+    )
+    return out

@@ -37,7 +37,7 @@ from repro.core.lloyd import centroid_update, kmeanspp_init
 from repro.kernels import ops
 from repro.policy import ComputePolicy, resolve_policy
 from repro.stream.blockstore import BlockStore, WritableBlockStore
-from repro.stream.engine import map_reduce
+from repro.stream.engine import cache_embedding, map_reduce
 from repro.stream.reservoir import reservoir_sample
 
 Array = jax.Array
@@ -84,22 +84,14 @@ def stream_embed(
     several Lloyd iterations will reuse it."""
     pol = resolve_policy(policy, use_pallas, owner="stream.stream_embed: ")
     prefetch = pol.prefetch if prefetch is None else prefetch
-    out = BlockStore.empty(n=store.n, d=coeffs.m, block_rows=store.block_rows)
-
-    def emit(i, y):
-        # put by GLOBAL block id: a shard's local block i may be global block
-        # i * num_shards + shard_index
-        out.put(store.block_id(i), np.asarray(y))
-
-    map_reduce(
+    # cache_embedding writes by GLOBAL block id, so a shard's local block i
+    # lands at global block i * num_shards + shard_index
+    return cache_embedding(
         store,
         lambda x: ops.embed_block_map(x, coeffs, policy=pol),
-        lambda acc, _: acc,
-        None,
+        d_out=coeffs.m,
         prefetch=prefetch,
-        emit=emit,
     )
-    return out
 
 
 def _resolve_init(store, coeffs, discrepancy, k, init, key, seed_sample, pol):

@@ -107,6 +107,60 @@ def sharded_map_reduce(
     return accs
 
 
+def stream_embed_sharded(
+    store: BlockStore,
+    coeffs,
+    *,
+    devices: Sequence,
+    policy: ComputePolicy | None = None,
+    prefetch: int = 2,
+):
+    """The sharded embed-ONCE pass: device d embeds its round-robin block
+    shard `store.shard(d, D)` and all D streams write into ONE shared
+    host-staged Y store (disjoint global block ids, so concurrent writers
+    never touch the same rows). Returns the staged `WritableBlockStore`,
+    unwritten-block-guarded like the single-device `stream_embed`."""
+    from repro.policy import as_policy
+    from repro.stream.engine import cache_embedding
+    from repro.stream.blockstore import BlockStore as _BS
+
+    pol = as_policy(policy)
+    devices = list(devices)
+    D = len(devices)
+    out = _BS.empty(n=store.n, d=coeffs.m, block_rows=store.block_rows)
+    shards = [store.shard(d, D) for d in range(D)]
+    coeffs_d = [jax.device_put(coeffs, dev) for dev in devices]
+
+    def run(d: int):
+        cache_embedding(
+            shards[d],
+            lambda x, p=coeffs_d[d]: ops.embed_block_map(x, p, policy=pol),
+            d_out=coeffs.m, out=out, prefetch=prefetch, device=devices[d],
+        )
+
+    if D == 1:
+        run(0)
+    else:
+        errs: list = [None] * D
+
+        def guarded(d: int):
+            try:
+                run(d)
+            except BaseException as e:  # noqa: BLE001 - re-raised on the caller
+                errs[d] = e
+
+        threads = [threading.Thread(target=guarded, args=(d,), daemon=True)
+                   for d in range(D)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for e in errs:
+            if e is not None:
+                raise e
+    return out
+
+
 # ------------------------------------------------------- cross-device reduce
 
 

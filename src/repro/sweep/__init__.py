@@ -1,0 +1,43 @@
+"""repro.sweep — embed-once model selection over restarts and k.
+
+The paper's two-phase split (embed once, then cheap linear k-means) makes
+restarts and k-selection nearly free — IF the embedding is actually computed
+once. This package is that orchestration layer:
+
+  * `repro.sweep.engine`   — multi-candidate Lloyd drivers over a cached
+    embedding (single-device stream, sharded mesh stream, resident local);
+  * `repro.sweep.stage`    — crash-atomic persistence of the embed-once
+    artifacts, so an interrupted sweep resumes past the embedding pass;
+  * `repro.sweep.result`   — `SweepResult`: the candidate lattice of
+    `ClusterModel`s + inertia table + deterministic best-model selection;
+  * `repro.sweep.orchestrator` — the glue behind `KernelKMeans.sweep`.
+
+Entry point:
+
+    est = KernelKMeans(k=0_unused, method="rff", backend="stream", m=128)
+    result = est.sweep(store, k_grid=[4, 6, 8], restarts=4)
+    result.inertia_table()   # {k: [inertia per restart]}
+    result.best              # lowest-inertia ClusterModel, deterministic ties
+"""
+from repro.sweep.engine import (
+    SweepLloydOut,
+    sweep_lloyd,
+    sweep_lloyd_local,
+    sweep_lloyd_sharded,
+)
+from repro.sweep.orchestrator import SWEEP_BACKENDS, run_sweep, sweep_estimator
+from repro.sweep.result import SweepResult
+from repro.sweep.stage import load_embed_stage, save_embed_stage
+
+__all__ = [
+    "SWEEP_BACKENDS",
+    "SweepLloydOut",
+    "SweepResult",
+    "load_embed_stage",
+    "run_sweep",
+    "save_embed_stage",
+    "sweep_estimator",
+    "sweep_lloyd",
+    "sweep_lloyd_local",
+    "sweep_lloyd_sharded",
+]

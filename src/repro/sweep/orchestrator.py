@@ -1,0 +1,228 @@
+"""The sweep orchestrator: embed once, cluster the whole candidate lattice.
+
+`KernelKMeans.fit` pays the embedding pass (the dominant cost) once per Lloyd
+pass per candidate; model selection over R restarts x a k-grid therefore pays
+it R*|k_grid|*(iters+1) times. `sweep_estimator` restructures that:
+
+  phase 1  exactly `fit`'s phase 1 (same key splits, same reservoir sample,
+           same member fit, same seeding pool) — so candidate (k, r) seeds
+           from the SAME k-means++ draw fit(k, n_init>=r) would use;
+  phase 2  ONE embedding pass staging Y to the host cache (sharded across the
+           mesh's data devices for stream_shard), optionally persisted via
+           repro.sweep.stage so an interrupted sweep resumes past it;
+  phase 3  multi-candidate Lloyd over the cache (repro.sweep.engine): every
+           engine pass feeds every still-active candidate;
+  phase 4  deterministic best-model selection (SweepResult.select_best) and,
+           when a checkpoint_dir is given, SweepResult persistence.
+
+Keystone invariant (tests/test_sweep.py): `sweep(k_grid=[k], restarts=1)`
+reaches labels IDENTICAL to `fit(k)` from the same key, for every registered
+embedding member, on both the stream and stream_shard backends.
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.backends import FitContext, ensure_embedding_cache
+from repro.api.model import ClusterModel
+from repro.core.lloyd import kmeanspp_init
+from repro.sweep.engine import (
+    SweepLloydOut,
+    sweep_lloyd,
+    sweep_lloyd_local,
+    sweep_lloyd_sharded,
+)
+from repro.sweep.result import SweepResult
+from repro.sweep.stage import load_embed_stage, save_embed_stage
+
+#: Backends a sweep can amortize one embedding across. minibatch's decayed
+#: trajectory and shard_map's resident-mesh layout have no embed-once analogue
+#: worth the seam — fit() remains their entry point.
+SWEEP_BACKENDS = ("local", "stream", "stream_shard")
+
+
+def run_sweep(
+    ctx: FitContext,
+    k_grid: tuple[int, ...],
+    inits: list,
+    *,
+    backend: str,
+    devices=None,
+) -> SweepLloydOut:
+    """Dispatch the multi-candidate engine for one prepared context whose
+    embed cache is already filled (`ensure_embedding_cache`)."""
+    disc = ctx.params.discrepancy
+    if backend == "local":
+        return sweep_lloyd_local(
+            ctx.y_array, inits, disc, iters=ctx.iters, policy=ctx.policy
+        )
+    if backend == "stream":
+        return sweep_lloyd(
+            ctx.y_store, inits, disc, iters=ctx.iters, policy=ctx.policy,
+            prefetch=ctx.policy.prefetch,
+        )
+    if backend == "stream_shard":
+        return sweep_lloyd_sharded(
+            ctx.y_store, inits, disc, iters=ctx.iters, policy=ctx.policy,
+            devices=devices, prefetch=ctx.policy.prefetch,
+        )
+    raise ValueError(
+        f"backend {backend!r} cannot run an embed-once sweep; "
+        f"supported: {SWEEP_BACKENDS}"
+    )
+
+
+def sweep_estimator(
+    est,
+    X,
+    k_grid,
+    *,
+    restarts: int | None = None,
+    key=None,
+    checkpoint_dir: str | Path | None = None,
+) -> SweepResult:
+    """The engine behind `KernelKMeans.sweep` (est is the estimator)."""
+    k_grid = tuple(int(k) for k in k_grid)
+    if not k_grid:
+        raise ValueError("k_grid must name at least one candidate k")
+    if any(k < 1 for k in k_grid):
+        raise ValueError(f"every k in k_grid must be >= 1, got {k_grid}")
+    R = int(restarts) if restarts is not None else max(1, est.n_init)
+    if R < 1:
+        raise ValueError(f"restarts must be >= 1, got {restarts}")
+    key = key if key is not None else jax.random.PRNGKey(est.random_state)
+    backend = est._choose_backend(X)
+    if backend not in SWEEP_BACKENDS:
+        raise ValueError(
+            f"backend {backend!r} cannot run an embed-once sweep; "
+            f"supported: {SWEEP_BACKENDS}"
+        )
+    devices = None
+    if backend == "stream_shard":
+        from repro.stream.sharded import shard_devices
+
+        devices = shard_devices(est.mesh)
+
+    from repro.api.registry import get_embedding
+
+    get_embedding(est.method)  # reject typos before streaming any data
+
+    from repro.stream.blockstore import BlockStore as _BS
+
+    if isinstance(X, _BS):
+        input_shape = (X.n, X.d)
+    else:
+        x_shape = np.shape(X)
+        input_shape = (int(x_shape[0]), int(x_shape[1]))
+
+    stage = None
+    if checkpoint_dir is not None:
+        stage = load_embed_stage(
+            checkpoint_dir, method=est.method, sweep_key=key,
+            input_shape=input_shape,
+        )
+    if stage is not None:
+        params, pool, k_seed, y_store = stage
+        est.kernel_ = getattr(params, "kernel", None) or est.kernel_
+        ctx = FitContext(
+            store=y_store, array=None, params=params, k=k_grid[0],
+            inits=[], iters=est.iters, policy=est.policy, decay=est.decay,
+            epochs=est.epochs, mesh=est.mesh, y_store=y_store,
+        )
+        if backend == "local":
+            ctx.y_store = None
+            ctx.y_array = jnp.asarray(y_store.materialize())
+    else:
+        # Phase 1, identical to fit()'s: the same key split feeds the same
+        # reservoir, member fit and seeding pool.
+        store, array, params, pool, k_seed = est._phase1(X, key, backend)
+        ctx = FitContext(
+            store=store, array=array, params=params, k=k_grid[0], inits=[],
+            iters=est.iters, policy=est.policy, decay=est.decay,
+            epochs=est.epochs, mesh=est.mesh,
+        )
+        ensure_embedding_cache(ctx, devices=devices)
+        if backend == "local" and ctx.y_array is None:
+            # local backend over a BlockStore input: the cache staged Y to
+            # host blocks; the resident driver wants the concatenated array.
+            ctx.y_array = jnp.asarray(ctx.y_store.materialize())
+        if checkpoint_dir is not None:
+            y_store = ctx.y_store
+            if y_store is None:  # local backend, array input: stage resident Y
+                from repro.stream.blockstore import BlockStore
+
+                y_store = BlockStore.from_array(
+                    np.asarray(ctx.y_array, dtype=np.float32), est.block_rows
+                )
+            save_embed_stage(
+                checkpoint_dir, params=params, pool=pool, seed_key=k_seed,
+                y_store=y_store, sweep_key=key, method=est.method,
+                input_shape=(store.n, store.d),
+            )
+
+    # Restart r of EVERY k seeds from fold_in(k_seed, r) — the draw fit()
+    # uses for its r-th restart, which is what makes the single-candidate
+    # sweep replay fit() exactly.
+    disc = params.discrepancy
+    inits = [
+        jnp.stack([
+            kmeanspp_init(jax.random.fold_in(k_seed, r), pool, k, disc)
+            for r in range(R)
+        ])
+        for k in k_grid
+    ]
+
+    out = run_sweep(ctx, k_grid, inits, backend=backend, devices=devices)
+
+    n = ctx.y_store.n if ctx.y_store is not None else int(ctx.y_array.shape[0])
+    models = []
+    for i, k in enumerate(k_grid):
+        row = []
+        for r in range(R):
+            iters_r = int(out.iters[i, r])
+            meta = dataclasses.replace(
+                est._fit_meta(
+                    backend=backend, iters=iters_r,
+                    rows_seen=(iters_r + 1) * n, n_init=R,
+                ),
+                k=int(k),
+            )
+            row.append(ClusterModel(
+                params=params,
+                centroids=jnp.asarray(out.centroids[i][r]),
+                inertia=jnp.asarray(out.inertia[i, r], jnp.float32),
+                meta=meta,
+            ))
+        models.append(row)
+
+    best_i, best_r = SweepResult.select_best(out.inertia)
+    result = SweepResult(
+        models=models,
+        inertia=np.asarray(out.inertia),
+        labels=out.labels,
+        k_grid=k_grid,
+        restarts=R,
+        backend=backend,
+        best_k_index=best_i,
+        best_restart=best_r,
+    )
+    if checkpoint_dir is not None:
+        from repro.distributed.checkpoint import save_sweep_result
+
+        save_sweep_result(checkpoint_dir, result)
+
+    # The estimator adopts the selected model: predict/transform/score/save
+    # serve the sweep's best exactly as if fit() had produced it.
+    est.kernel_ = getattr(params, "kernel", est.kernel_)
+    est.model_ = result.best
+    est.labels_ = result.best_labels
+    est.inertia_ = result.best_inertia
+    est.n_iter_ = int(out.iters[best_i, best_r])
+    est.backend_ = backend
+    est._pf_state = None
+    return result

@@ -1,0 +1,93 @@
+"""SweepResult: the one artifact a multi-candidate sweep produces.
+
+A sweep evaluates R restarts x a k-grid of clusterings over ONE persisted
+embedding. Its result is the full candidate lattice — a `ClusterModel` per
+(k, restart) — plus the inertia table the selection reads, with a
+deterministic best-model rule:
+
+    best = argmin inertia, ties broken toward the EARLIER k-grid entry and
+    then the LOWER restart index (the flattened k-major argmin's first hit).
+
+The tie-break matters: restarts that converge to the same fixed point produce
+bit-equal inertias, and selection must not depend on dict ordering or float
+noise — `tests/test_sweep.py` asserts the same key always selects the same
+candidate.
+
+Registered as a jax pytree: every candidate's arrays (shared embedding params,
+centroids, inertia) are leaves; the grid geometry and the selection are static.
+Per-candidate labels ride along as host arrays when the sweep computed them
+(`labels=None` after a checkpoint load — labels are derived data, re-obtainable
+via `predict`, and are deliberately not persisted).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.api.model import ClusterModel
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SweepResult:
+    """All candidate models of one embed-once sweep, plus the selection."""
+
+    #: models[k_index][restart] — every candidate, sharing one EmbeddingParams.
+    models: list[list[ClusterModel]]
+    #: (len(k_grid), restarts) float32 achieved inertia per candidate.
+    inertia: np.ndarray
+    #: labels[k_index][restart] — (n,) int32 host labels per candidate, or
+    #: None when not materialized (e.g. after load_sweep_result).
+    labels: list[list[np.ndarray]] | None
+    k_grid: tuple[int, ...] = dataclasses.field(
+        metadata=dict(static=True), default=()
+    )
+    restarts: int = dataclasses.field(metadata=dict(static=True), default=1)
+    #: the registered backend that ran the candidate Lloyd iterations
+    backend: str = dataclasses.field(metadata=dict(static=True), default="")
+    best_k_index: int = dataclasses.field(metadata=dict(static=True), default=0)
+    best_restart: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+    # ------------------------------------------------------------ selection
+
+    @staticmethod
+    def select_best(inertia: np.ndarray) -> tuple[int, int]:
+        """Deterministic argmin over the (k_index, restart) lattice: exact
+        float comparison, first hit in k-major order wins ties."""
+        table = np.asarray(inertia)
+        flat = int(np.argmin(table))
+        return flat // table.shape[1], flat % table.shape[1]
+
+    @property
+    def best(self) -> ClusterModel:
+        """The selected model (lowest inertia, deterministic tie-break)."""
+        return self.models[self.best_k_index][self.best_restart]
+
+    @property
+    def best_k(self) -> int:
+        return self.k_grid[self.best_k_index]
+
+    @property
+    def best_inertia(self) -> float:
+        return float(self.inertia[self.best_k_index, self.best_restart])
+
+    @property
+    def best_labels(self) -> np.ndarray | None:
+        if self.labels is None:
+            return None
+        return self.labels[self.best_k_index][self.best_restart]
+
+    def candidates(self):
+        """Iterate (k, restart, ClusterModel, inertia) in selection order."""
+        for i, k in enumerate(self.k_grid):
+            for r in range(self.restarts):
+                yield k, r, self.models[i][r], float(self.inertia[i, r])
+
+    def inertia_table(self) -> dict[int, list[float]]:
+        """{k: [inertia per restart]} — the model-selection view."""
+        return {
+            k: [float(v) for v in self.inertia[i]]
+            for i, k in enumerate(self.k_grid)
+        }

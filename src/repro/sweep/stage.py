@@ -1,0 +1,131 @@
+"""Embed-stage persistence: resume a sweep past its dominant cost.
+
+The first thing a sweep does — fit the embedding member and materialize Y —
+is also the only expensive thing it does per the bench numbers, so an
+interrupted sweep should never pay it twice. `save_embed_stage` writes, crash-
+atomically (tmp dir -> fsync manifest -> os.replace, the checkpoint layer's
+discipline):
+
+    embed_stage/
+      params.npz   the fitted member's array fields (emb.params_state)
+      pool.npy     the embedded seeding pool (k-means++ reads it on resume)
+      Y.bin        the cached embedding, flat row-major f32 (memmap on load)
+      stage.json   member config + seeding key + a fingerprint of the run
+
+`load_embed_stage` returns the staged pieces ONLY when the fingerprint
+(embedding member, sweep key, and the input's (n, d) shape) matches the
+requesting sweep — a stale stage from a different run or dataset re-embeds
+instead of silently clustering the wrong cache. Same-shape data under the
+same key is indistinguishable without hashing the stream; the key is the
+user's lever there (a new dataset should get a new key or checkpoint_dir).
+The seeding key `k_seed` is part of the stage because init parity is what
+makes a resumed sweep reach bit-identical candidates: the k-means++ draws
+must replay exactly, per restart, from the same pool.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.stream.blockstore import BlockStore
+
+STAGE_DIR = "embed_stage"
+
+
+def _key_fingerprint(key) -> list[int]:
+    """Raw uint32 words of a PRNG key (typed keys unwrapped first — the
+    dtype check must precede np.asarray, which rejects PRNGKey dtypes)."""
+    import jax
+
+    arr = jnp.asarray(key)
+    if jax.dtypes.issubdtype(arr.dtype, jax.dtypes.prng_key):
+        arr = jax.random.key_data(arr)
+    return [int(v) for v in np.asarray(arr).ravel()]
+
+
+def save_embed_stage(
+    ckpt_dir: str | Path,
+    *,
+    params,
+    pool,
+    seed_key,
+    y_store: BlockStore,
+    sweep_key,
+    method: str,
+    input_shape: tuple[int, int],
+) -> Path:
+    """Persist the embed-once artifacts under `ckpt_dir/embed_stage/`."""
+    from repro.embed import embedding_for
+
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / STAGE_DIR
+    tmp = Path(tempfile.mkdtemp(prefix=".tmp_stage_", dir=ckpt_dir))
+    try:
+        arrays, config = embedding_for(params).params_state(params)
+        np.savez(tmp / "params.npz", **arrays)
+        np.save(tmp / "pool.npy", np.asarray(pool, dtype=np.float32))
+        with (tmp / "Y.bin").open("wb") as f:
+            for i in range(y_store.num_blocks):
+                f.write(np.ascontiguousarray(y_store.get(i), dtype=np.float32))
+        manifest = {
+            "method": method,
+            "config": config,
+            "seed_key": _key_fingerprint(seed_key),
+            "sweep_key": _key_fingerprint(sweep_key),
+            "n": int(y_store.n),
+            "m": int(y_store.d),
+            "block_rows": int(y_store.block_rows),
+            "input_shape": [int(v) for v in input_shape],
+        }
+        with (tmp / "stage.json").open("w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def load_embed_stage(
+    ckpt_dir: str | Path, *, method: str, sweep_key,
+    input_shape: tuple[int, int],
+):
+    """The staged (params, pool, seed_key, y_store) if `ckpt_dir` holds a
+    stage fingerprint-matching this sweep (member + key + input (n, d)),
+    else None (caller re-embeds)."""
+    from repro.embed import get_embedding
+
+    stage = Path(ckpt_dir) / STAGE_DIR
+    manifest_path = stage / "stage.json"
+    if not manifest_path.exists():
+        return None
+    manifest = json.loads(manifest_path.read_text())
+    if (manifest["method"] != method
+            or manifest["sweep_key"] != _key_fingerprint(sweep_key)
+            or manifest.get("input_shape") != [int(v) for v in input_shape]):
+        return None
+    data = np.load(stage / "params.npz")
+    params = get_embedding(method).params_restore(
+        {k: data[k] for k in data.files}, manifest["config"]
+    )
+    pool = jnp.asarray(np.load(stage / "pool.npy"))
+    seed_key = jnp.asarray(
+        np.asarray(manifest["seed_key"], dtype=np.uint32)
+    )
+    y_store = BlockStore.from_memmap(
+        stage / "Y.bin", d=manifest["m"], block_rows=manifest["block_rows"]
+    )
+    if y_store.n != manifest["n"]:
+        return None  # truncated / corrupt stage: fall back to re-embedding
+    return params, pool, seed_key, y_store

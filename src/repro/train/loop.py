@@ -18,7 +18,7 @@ import json
 import statistics
 import time
 from pathlib import Path
-from typing import Any, Callable, Iterator
+from typing import Callable, Iterator
 
 import jax
 

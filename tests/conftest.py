@@ -2,7 +2,6 @@
 on the single real CPU device; multi-device behaviour is exercised through
 subprocess tests (tests/test_distributed_subprocess.py) so the 8-device env var
 never leaks into this process."""
-import os
 import sys
 from pathlib import Path
 

@@ -16,7 +16,6 @@ The load-bearing claims:
   * partial_fit is the online face of the minibatch backend and clusters a
     block stream without ever seeing the full data.
 """
-import tempfile
 
 import jax
 import jax.numpy as jnp

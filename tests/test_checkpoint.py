@@ -1,8 +1,5 @@
 """Checkpointing: roundtrip, atomicity, async, keep_last, resume equivalence."""
-import json
-import os
 import shutil
-import time
 from pathlib import Path
 
 import jax

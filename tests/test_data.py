@@ -3,7 +3,7 @@ import numpy as np
 
 from repro.configs import get_arch, reduced
 from repro.data import tokens
-from repro.data.synthetic import gaussian_blobs, paper_standin
+from repro.data.synthetic import paper_standin
 
 
 def test_batch_deterministic_per_step():

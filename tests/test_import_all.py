@@ -1,0 +1,63 @@
+"""Tier-1 importability of every module under benchmarks/ and examples/.
+
+Neither tree is imported by the library or (fully) executed by the fast test
+tier, so a facade/API migration can silently strand them — PR 2's estimator
+migration nearly left stale call sites behind exactly this way. Importing
+every module catches renamed symbols, moved modules and signature drift at
+the cheapest possible tier.
+
+Scripts in these trees are written to be import-safe: work happens under
+`if __name__ == "__main__"` (covtype_scale parses its argv at import, so
+sys.argv is pinned to the bare script name for the duration). os.environ is
+snapshotted and restored — some scripts setdefault XLA flags at import, which
+must not leak into other tests. jax is touched first so its backend is
+already locked before any script-level flag fiddling could matter.
+"""
+import importlib.util
+import os
+import sys
+from pathlib import Path
+
+import jax
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+SCRIPT_DIRS = ("benchmarks", "examples")
+
+MODULES = sorted(
+    p for d in SCRIPT_DIRS for p in (REPO / d).glob("*.py")
+)
+
+
+def test_script_trees_are_nonempty():
+    """The parametrization below must never silently become a no-op."""
+    found = {p.parent.name for p in MODULES}
+    assert found == set(SCRIPT_DIRS), f"missing script tree(s): {found}"
+
+
+@pytest.mark.parametrize(
+    "path", MODULES, ids=lambda p: f"{p.parent.name}/{p.name}"
+)
+def test_module_imports(path, monkeypatch):
+    jax.devices()  # lock the backend before any script-level env fiddling
+    monkeypatch.setattr(sys, "argv", [str(path)])
+    env_before = dict(os.environ)
+    name = f"_importcheck_{path.parent.name}_{path.stem}"
+    try:
+        spec = importlib.util.spec_from_file_location(name, path)
+        module = importlib.util.module_from_spec(spec)
+        sys.modules[name] = module
+        spec.loader.exec_module(module)
+        # every EXECUTABLE script exposes a main() entry point (the CLI
+        # contract); library-style bench modules are driven by benchmarks/run
+        if 'if __name__ == "__main__"' in path.read_text():
+            assert callable(getattr(module, "main", None)), \
+                f"{path.name} has no main()"
+    finally:
+        sys.modules.pop(name, None)
+        for k, v in list(os.environ.items()):
+            if env_before.get(k) != v:
+                if k in env_before:
+                    os.environ[k] = env_before[k]
+                else:
+                    del os.environ[k]

@@ -169,7 +169,6 @@ def test_padded_heads_exactness():
 
 def test_chunked_ce_matches_direct():
     """The memory-saving chunked CE == direct full-logits CE."""
-    from repro.models.model import LOSS_CHUNK, _chunked_ce, _head_logits
     import repro.models.model as M
 
     cfg = reduced(get_arch("qwen1.5-0.5b"))

@@ -16,7 +16,7 @@ import pytest
 
 from repro.core.apnc import embed
 from repro.core.kernels_fn import Kernel
-from repro.core.kkmeans import APNCConfig, fit_coefficients, predict
+from repro.core.kkmeans import APNCConfig, fit_coefficients
 from repro.core.lloyd import kmeanspp_init, lloyd
 from repro.core.metrics import nmi
 from repro.data.synthetic import gaussian_blobs_blocks, rings, rings_blocks

@@ -1,0 +1,309 @@
+"""Tests for the embed-once sweep engine (repro.sweep).
+
+The load-bearing claims:
+  * KEYSTONE: `sweep(k_grid=[k], restarts=1)` reaches labels IDENTICAL to
+    `fit(k)` from the same key, through the public API, for EVERY registered
+    embedding member, on both the "stream" and "stream_shard" backends (the
+    registry-coverage loop fails if a new member ships without sweep parity);
+  * a multi-candidate sweep's inertia table matches per-candidate fits, the
+    estimator adopts the selected best model, and selection is deterministic
+    with a documented tie-break;
+  * SweepResult save/load round-trips (centroids bit-equal, selection
+    preserved, labels deliberately absent after load);
+  * an interrupted sweep resumes PAST the embedding pass: the cached Y store
+    is reused and the engine runs NO second cache_embedding pass (asserted
+    via the engine's labeled pass counter), while a stage from a different
+    key is rejected and re-embedded;
+  * the backends' embed-cache path (FitContext.y_store) reaches the same
+    fixed point as the fused embed+assign path.
+
+Device count adapts to the running process (the CI sharded matrix entry runs
+this file under XLA_FLAGS=--xla_force_host_platform_device_count=8).
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.api import KernelKMeans, available_embeddings, get_embedding
+from repro.core.kernels_fn import Kernel
+from repro.distributed.checkpoint import load_sweep_result
+from repro.stream import engine as stream_engine
+from repro.stream.blockstore import BlockStore
+from repro.sweep import SweepResult
+from repro.data.synthetic import gaussian_blobs
+
+
+K_TRUE = 4
+
+
+def BlockStoreFromArray(X):
+    return BlockStore.from_array(np.asarray(X), 96)
+
+
+def _est(k=K_TRUE, **kw):
+    kw.setdefault("l", 48)
+    kw.setdefault("m", 32)
+    kw.setdefault("iters", 12)
+    kw.setdefault("n_init", 1)
+    kw.setdefault("block_rows", 96)
+    return KernelKMeans(k, **kw)
+
+
+def _member_kwargs(name):
+    """Kernel selection per member, mirroring cluster_serve's registry-driven
+    choice (tensorsketch needs a polynomial kernel, etc.)."""
+    families = get_embedding(name).kernel_families
+    if families is None or "rbf" in families:
+        return dict(method=name, kernel=Kernel("rbf", gamma=0.5))
+    if "poly" in families:
+        return dict(method=name, kernel="poly",
+                    kernel_params=dict(degree=2, coef0=1.0))
+    return dict(method=name, kernel=families[0])
+
+
+@pytest.fixture(scope="module")
+def data():
+    X, _ = gaussian_blobs(jax.random.PRNGKey(1), 480, 8, K_TRUE, separation=5.0)
+    return np.asarray(X)
+
+
+# ------------------------------------------------------------------ keystone
+
+
+@pytest.mark.parametrize("backend", ["stream", "stream_shard"])
+@pytest.mark.parametrize("member", sorted(available_embeddings()))
+def test_keystone_single_candidate_sweep_equals_fit(data, member, backend):
+    """sweep([k], restarts=1) == fit(k), same key, every member, both stream
+    backends — the invariant that makes the sweep's candidates trustworthy."""
+    store = BlockStoreFromArray(data)
+    key = jax.random.PRNGKey(7)
+    kw = _member_kwargs(member)
+    a = _est(backend=backend, **kw).fit(store, key=key)
+    b = _est(backend=backend, **kw)
+    result = b.sweep(store, k_grid=[K_TRUE], restarts=1, key=key)
+    assert np.array_equal(a.labels_, b.labels_), member
+    assert b.inertia_ == pytest.approx(a.inertia_, rel=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(a.model_.centroids), np.asarray(result.best.centroids),
+        atol=1e-5,
+    )
+    assert result.k_grid == (K_TRUE,) and result.restarts == 1
+
+
+def test_keystone_local_backend(data):
+    key = jax.random.PRNGKey(7)
+    a = _est(backend="local").fit(data, key=key)
+    b = _est(backend="local")
+    b.sweep(data, k_grid=[K_TRUE], restarts=1, key=key)
+    assert np.array_equal(a.labels_, b.labels_)
+
+
+def test_sweep_restarts_match_fit_n_init(data):
+    """restarts=R replays fit(n_init=R)'s seeding lineages: the sweep's best
+    over one k must equal the multi-restart fit's winner."""
+    store = BlockStoreFromArray(data)
+    key = jax.random.PRNGKey(3)
+    a = _est(backend="stream", n_init=3).fit(store, key=key)
+    b = _est(backend="stream")
+    result = b.sweep(store, k_grid=[K_TRUE], restarts=3, key=key)
+    assert np.array_equal(a.labels_, b.labels_)
+    assert min(result.inertia_table()[K_TRUE]) == pytest.approx(
+        a.inertia_, rel=1e-5
+    )
+
+
+# ------------------------------------------------------- multi-candidate run
+
+
+def test_multi_candidate_sweep_table_and_selection(data):
+    store = BlockStoreFromArray(data)
+    key = jax.random.PRNGKey(5)
+    est = _est(backend="stream")
+    result = est.sweep(store, k_grid=[2, K_TRUE, 6], restarts=2, key=key)
+    assert result.inertia.shape == (3, 2)
+    assert result.k_grid == (2, K_TRUE, 6)
+    # selection = first flat argmin, and the estimator adopted exactly it
+    bi, br = SweepResult.select_best(result.inertia)
+    assert (bi, br) == (result.best_k_index, result.best_restart)
+    assert est.inertia_ == pytest.approx(result.best_inertia)
+    assert np.array_equal(est.labels_, result.best_labels)
+    assert est.model_ is result.best
+    assert est.backend_ == "stream"
+    # per-candidate artifacts are complete and well-formed
+    for k, r, model, inertia in result.candidates():
+        assert model.k == k
+        assert model.meta.k == k
+        assert model.meta.n_init == 2
+        assert np.isfinite(inertia)
+        assert model.centroids.shape[0] == k
+    # each candidate's labels use only its own k cluster ids
+    for i, k in enumerate(result.k_grid):
+        for r in range(result.restarts):
+            lab = result.labels[i][r]
+            assert lab.shape == (store.n,)
+            assert lab.min() >= 0 and lab.max() < k
+    # the adopted model serves: predict through the estimator must agree with
+    # the winner's labels on the training stream
+    assert np.array_equal(est.predict(store), est.labels_)
+
+
+def test_candidate_matches_independent_fit(data):
+    """Each sweep candidate IS the corresponding fit: spot-check a non-first
+    grid entry against an independent single-restart fit at that k."""
+    store = BlockStoreFromArray(data)
+    key = jax.random.PRNGKey(11)
+    result = _est(backend="stream").sweep(
+        store, k_grid=[3, 5], restarts=1, key=key
+    )
+    ref = _est(k=5, backend="stream").fit(store, key=key)
+    assert np.array_equal(result.labels[1][0], ref.labels_)
+    assert float(result.inertia[1, 0]) == pytest.approx(ref.inertia_, rel=1e-5)
+
+
+def test_sweep_rejects_unsupported_backend(data):
+    store = BlockStoreFromArray(data)
+    est = _est(backend="minibatch")
+    with pytest.raises(ValueError, match="embed-once sweep"):
+        est.sweep(store, k_grid=[3], key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="at least one candidate"):
+        _est(backend="stream").sweep(store, k_grid=[], key=jax.random.PRNGKey(0))
+
+
+# -------------------------------------------------- selection / tie-breaking
+
+
+def test_select_best_tie_breaks_toward_first_candidate():
+    """Exact ties must resolve to the earlier k-grid entry, then the lower
+    restart index — selection can never depend on float noise or ordering."""
+    table = np.asarray([[2.0, 1.0], [1.0, 3.0]])
+    assert SweepResult.select_best(table) == (0, 1)
+    tie_all = np.full((3, 4), 7.5)
+    assert SweepResult.select_best(tie_all) == (0, 0)
+
+
+def test_best_model_selection_is_deterministic(data):
+    """Same key, two runs: identical tables, identical selection — including
+    when restarts converge to bit-equal inertias (separated blobs make most
+    restarts land on the same fixed point)."""
+    store = BlockStoreFromArray(data)
+    key = jax.random.PRNGKey(2)
+    r1 = _est(backend="stream").sweep(store, k_grid=[K_TRUE], restarts=3, key=key)
+    r2 = _est(backend="stream").sweep(store, k_grid=[K_TRUE], restarts=3, key=key)
+    np.testing.assert_array_equal(r1.inertia, r2.inertia)
+    assert (r1.best_k_index, r1.best_restart) == (r2.best_k_index, r2.best_restart)
+    # and the winner is literally the first flat argmin of the table
+    flat = int(np.argmin(r1.inertia))
+    assert (r1.best_k_index, r1.best_restart) == (
+        flat // r1.inertia.shape[1], flat % r1.inertia.shape[1]
+    )
+
+
+# --------------------------------------------------- checkpointing and resume
+
+
+def test_sweep_result_roundtrip(tmp_path, data):
+    store = BlockStoreFromArray(data)
+    key = jax.random.PRNGKey(13)
+    result = _est(backend="stream").sweep(
+        store, k_grid=[3, K_TRUE], restarts=2, key=key,
+        checkpoint_dir=tmp_path,
+    )
+    loaded = load_sweep_result(tmp_path)
+    assert loaded.k_grid == result.k_grid
+    assert loaded.restarts == result.restarts
+    assert loaded.backend == result.backend
+    assert (loaded.best_k_index, loaded.best_restart) == (
+        result.best_k_index, result.best_restart
+    )
+    assert loaded.labels is None  # labels are derived data, not persisted
+    np.testing.assert_allclose(
+        loaded.inertia, np.asarray(result.inertia, np.float32), rtol=1e-6
+    )
+    for i in range(len(result.k_grid)):
+        for r in range(result.restarts):
+            np.testing.assert_array_equal(
+                np.asarray(loaded.models[i][r].centroids),
+                np.asarray(result.models[i][r].centroids),
+            )
+            assert loaded.models[i][r].meta == result.models[i][r].meta
+    # the restored best model predicts identically to the in-memory one
+    q = data[:64]
+    np.testing.assert_array_equal(
+        np.asarray(loaded.best.predict(q)), np.asarray(result.best.predict(q))
+    )
+
+
+def test_resume_skips_embedding_pass(tmp_path, data):
+    """Re-running an interrupted sweep with the same key and checkpoint_dir
+    must reuse the staged Y cache: zero cache_embedding engine passes, and
+    bit-identical candidates."""
+    store = BlockStoreFromArray(data)
+    key = jax.random.PRNGKey(17)
+    stream_engine.reset_pass_counts()
+    r1 = _est(backend="stream").sweep(
+        store, k_grid=[3, K_TRUE], restarts=2, key=key, checkpoint_dir=tmp_path
+    )
+    assert stream_engine.pass_count("cache_embedding") == 1
+
+    stream_engine.reset_pass_counts()
+    r2 = _est(backend="stream").sweep(
+        store, k_grid=[3, K_TRUE], restarts=2, key=key, checkpoint_dir=tmp_path
+    )
+    assert stream_engine.pass_count("cache_embedding") == 0  # resumed past it
+    np.testing.assert_array_equal(r1.inertia, r2.inertia)
+    for a_row, b_row in zip(r1.labels, r2.labels):
+        for a, b in zip(a_row, b_row):
+            np.testing.assert_array_equal(a, b)
+
+    # a DIFFERENT key fingerprints differently: stale stage rejected, fresh
+    # embedding pass runs
+    stream_engine.reset_pass_counts()
+    _est(backend="stream").sweep(
+        store, k_grid=[3], restarts=1, key=jax.random.PRNGKey(99),
+        checkpoint_dir=tmp_path,
+    )
+    assert stream_engine.pass_count("cache_embedding") == 1
+
+
+def test_estimator_serves_sweep_winner_after_save_load(tmp_path, data):
+    """est.save() after sweep persists the SELECTED model; a load serves it."""
+    store = BlockStoreFromArray(data)
+    est = _est(backend="stream")
+    result = est.sweep(store, k_grid=[3, K_TRUE], restarts=2,
+                       key=jax.random.PRNGKey(23))
+    est.save(tmp_path / "best")
+    served = KernelKMeans.load(tmp_path / "best")
+    assert served.k == result.best_k
+    q = data[:64]
+    np.testing.assert_array_equal(served.predict(q), est.predict(q))
+
+
+# ------------------------------------------------- backends' embed-cache path
+
+
+def test_fit_over_prefilled_embed_cache_matches_fused_path(data):
+    """FitContext.y_store routes the stream backend over staged Y blocks;
+    the fixed point must match the fused embed+assign path bit-for-bit."""
+    from repro.api import ensure_embedding_cache, get_backend
+    from repro.api.backends import FitContext
+
+    store = BlockStoreFromArray(data)
+    key = jax.random.PRNGKey(29)
+    est = _est(backend="stream")
+    ref = _est(backend="stream").fit(store, key=key)
+
+    s, arr, params, pool, k_seed = est._phase1(store, key, "stream")
+    from repro.core.lloyd import kmeanspp_init
+
+    init = kmeanspp_init(
+        jax.random.fold_in(k_seed, 0), pool, K_TRUE, params.discrepancy
+    )
+    ctx = FitContext(
+        store=s, array=arr, params=params, k=K_TRUE, inits=[init],
+        iters=est.iters, policy=est.policy, decay=est.decay,
+        epochs=est.epochs, mesh=None,
+    )
+    ensure_embedding_cache(ctx)
+    assert ctx.y_store is not None
+    out = get_backend("stream")(ctx)
+    assert np.array_equal(out.labels, ref.labels_)

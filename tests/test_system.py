@@ -2,8 +2,6 @@
 placeholder): the full embed-and-conquer pipeline including online assignment,
 plus an end-to-end reduced LM training run through the public launcher."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import Kernel, nmi
