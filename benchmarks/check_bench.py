@@ -1,6 +1,9 @@
-"""Schema checker for the BENCH_*.json perf-trajectory files.
+"""Schema checker for the BENCH_*.json perf-trajectory files and the
+repro.obs trace/metric outputs.
 
     PYTHONPATH=src python benchmarks/check_bench.py [files...]
+    PYTHONPATH=src python benchmarks/check_bench.py --trace t.json --min-lanes 2
+    PYTHONPATH=src python benchmarks/check_bench.py --metrics t.metrics.json
 
 With no arguments, validates every BENCH_*.json in the repo root. The CI
 bench-smoke job also points it at freshly produced smoke outputs, so both the
@@ -14,9 +17,17 @@ with a "config" object, and each known BENCH family must carry its headline
 keys with sane types/ranges. Unknown BENCH_*.json files still get the shared
 checks (strict JSON, config present, finite numbers) so new benches are
 covered the moment they are named BENCH_something.json.
+
+`--trace` files are checked as Chrome trace-event JSON (what stream_bench
+--trace and repro.obs.write_chrome_trace emit): a traceEvents list whose
+"X" (complete) events carry finite ts/dur and a pid/tid lane that a
+thread_name "M" metadata event names; `--min-lanes N` additionally requires
+N distinct lanes (e.g. 2 device producers). `--metrics` files must be flat
+strict-JSON objects of finite numbers / histogram-stat dicts.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import math
 import sys
@@ -118,6 +129,73 @@ def check_sweep(path: Path, d: dict):
         _fail(path, f"full-size sweep speedup {d['speedup']:.2f}x < 3x")
 
 
+# ------------------------------------------------------- obs trace / metrics
+
+
+def _strict_load(path: Path):
+    return json.loads(path.read_text(), parse_constant=lambda c: _fail(
+        path, f"non-strict JSON constant {c!r}"))
+
+
+def check_trace(path: Path, *, min_lanes: int = 1):
+    """Validate a Chrome trace-event file (repro.obs.write_chrome_trace):
+    every complete ("X") event must carry a finite ts and dur >= 0 and sit in
+    a (pid, tid) lane that a thread_name metadata ("M") event names; at least
+    `min_lanes` distinct lanes must appear. Returns the lane-name set."""
+    d = _strict_load(path)
+    if not isinstance(d, dict):
+        _fail(path, "top level must be a JSON object")
+    events = _need(path, d, "traceEvents", list)
+    if not events:
+        _fail(path, "traceEvents is empty")
+    named = {}  # (pid, tid) -> lane name from thread_name metadata
+    lanes = set()
+    n_complete = 0
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict) or "ph" not in ev:
+            _fail(path, f"traceEvents[{i}] is not an event object with 'ph'")
+        if ev["ph"] == "M" and ev.get("name") == "thread_name":
+            named[(ev.get("pid"), ev.get("tid"))] = ev["args"]["name"]
+        elif ev["ph"] == "X":
+            n_complete += 1
+            _need(path, ev, "name", str)
+            for key in ("ts", "dur"):
+                v = _need(path, ev, key, (int, float))
+                if not math.isfinite(v):
+                    _fail(path, f"traceEvents[{i}].{key} is not finite")
+            if ev["dur"] < 0:
+                _fail(path, f"traceEvents[{i}].dur is negative")
+            lane = (ev.get("pid"), ev.get("tid"))
+            if lane not in named:
+                _fail(path, f"traceEvents[{i}] lane pid={lane[0]} tid={lane[1]} "
+                            "has no thread_name metadata event")
+            lanes.add(lane)
+    if n_complete == 0:
+        _fail(path, "no complete ('X') events")
+    if len(lanes) < min_lanes:
+        _fail(path, f"{len(lanes)} lane(s) {sorted(named[l] for l in lanes)}, "
+                    f"want >= {min_lanes}")
+    print(f"[check-bench] {path} OK (trace: {n_complete} events, "
+          f"{len(lanes)} lane(s): {sorted(named[l] for l in lanes)})")
+    return {named[l] for l in lanes}
+
+
+def check_metrics(path: Path):
+    """Validate a metric-snapshot file (what stream_bench --trace writes next
+    to the trace): a flat strict-JSON object mapping metric names to finite
+    numbers or histogram-stat dicts."""
+    d = _strict_load(path)
+    if not isinstance(d, dict):
+        _fail(path, "top level must be a JSON object")
+    if not d:
+        _fail(path, "metric snapshot is empty")
+    for name, v in d.items():
+        if not isinstance(v, (int, float, dict)):
+            _fail(path, f"metric {name!r} has type {type(v).__name__}")
+    _finite_numbers(path, d)
+    print(f"[check-bench] {path} OK (metrics: {len(d)} instruments)")
+
+
 FAMILIES = {
     "BENCH_stream.json": check_stream,
     "BENCH_api.json": check_api,
@@ -144,14 +222,37 @@ def check_file(path: Path):
 
 def main(argv=None):
     argv = sys.argv[1:] if argv is None else argv
-    paths = [Path(a) for a in argv] or sorted(REPO.glob("BENCH_*.json"))
-    if not paths:
-        raise SystemExit("[check-bench] no BENCH_*.json files found")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*", help="BENCH_*.json files (default: "
+                    "every BENCH_*.json in the repo root)")
+    ap.add_argument("--trace", action="append", default=[],
+                    help="Chrome trace-event file to validate (repeatable)")
+    ap.add_argument("--metrics", action="append", default=[],
+                    help="metric-snapshot JSON to validate (repeatable)")
+    ap.add_argument("--min-lanes", type=int, default=1,
+                    help="minimum distinct lanes each --trace must contain")
+    args = ap.parse_args(argv)
+    paths = [Path(a) for a in args.files]
+    if not paths and not args.trace and not args.metrics:
+        paths = sorted(REPO.glob("BENCH_*.json"))
+        if not paths:
+            raise SystemExit("[check-bench] no BENCH_*.json files found")
     for p in paths:
         if not p.exists():
             _fail(p, "file does not exist")
         check_file(p)
-    print(f"[check-bench] {len(paths)} file(s) valid")
+    for t in args.trace:
+        p = Path(t)
+        if not p.exists():
+            _fail(p, "file does not exist")
+        check_trace(p, min_lanes=args.min_lanes)
+    for m in args.metrics:
+        p = Path(m)
+        if not p.exists():
+            _fail(p, "file does not exist")
+        check_metrics(p)
+    total = len(paths) + len(args.trace) + len(args.metrics)
+    print(f"[check-bench] {total} file(s) valid")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,23 @@
 """Micro-benchmarks of the APNC hot loops (XLA path wall-clock on this CPU;
 the Pallas path is correctness-validated in interpret mode — its perf story is
-the structural VMEM/MXU analysis in EXPERIMENTS.md section Kernels)."""
+the structural VMEM/MXU analysis in EXPERIMENTS.md section Kernels).
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py --smoke \
+        --out /tmp/BENCH_kernel.json
+
+`run_all()` stays the library entry (benchmarks/run.py builds its table from
+it); the CLI wraps it with a CI-sized `--smoke` mode (shrunk shapes, fewer
+reps) and a BENCH-schema JSON output for the bench-smoke job.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
 import jax.numpy as jnp
@@ -16,11 +30,11 @@ from repro.core import nystrom
 def _time(fn, *args, reps=5):
     fn(*args)  # compile + warm
     jax.block_until_ready(fn(*args))
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(reps):
         out = fn(*args)
     jax.block_until_ready(out)
-    return (time.time() - t0) / reps * 1e6  # us
+    return (time.perf_counter() - t0) / reps * 1e6  # us
 
 
 def bench_embed(n=8192, d=256, l=512, m=256):
@@ -84,6 +98,37 @@ def bench_flash_attention(B=1, S=1024, H=4, Dh=64):
             "derived": f"{flops / (us * 1e-6) / 1e9:.2f}GFLOPs B={B} S={S} H={H} Dh={Dh}"}
 
 
-def run_all():
+def run_all(*, smoke: bool = False):
+    if smoke:  # CI-sized shapes: same code paths, seconds not minutes
+        return [
+            bench_embed(n=1024, d=64, l=128, m=64),
+            bench_assign(n=4096, m=64, k=16, disc="l2"),
+            bench_assign(n=2048, m=64, k=16, disc="l1"),
+            bench_lloyd_iteration(n=4096, m=64, k=16),
+            bench_flash_attention(B=1, S=256, H=2, Dh=32),
+        ]
     return [bench_embed(), bench_assign(disc="l2"), bench_assign(disc="l1", n=16384),
             bench_lloyd_iteration(), bench_flash_attention()]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized shapes so the drivers stay exercisable on "
+                         "every PR")
+    ap.add_argument("--out", default="",
+                    help="write rows as BENCH-schema JSON ({config, rows}) here")
+    args = ap.parse_args(argv)
+    rows = run_all(smoke=args.smoke)
+    for row in rows:
+        print(f"[kernel-bench] {row['name']}: {row['us_per_call']:.0f}us/call "
+              f"({row['derived']})")
+    if args.out:
+        result = {"config": {"smoke": args.smoke}, "rows": rows}
+        Path(args.out).write_text(json.dumps(result, indent=2))
+        print(f"[kernel-bench] wrote {args.out}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -35,6 +35,12 @@ parallelizes across mappers exactly as the paper's HDFS reads do. Results go
 to BENCH_stream_shard.json; `--sharded-only` skips the single-device benches.
 
 Results go to BENCH_stream.json / BENCH_api.json next to this file's parent.
+
+Observability: `--trace trace.json` enables `repro.obs` span tracing for the
+whole run and writes a Chrome trace-event file (load it at ui.perfetto.dev —
+one lane per producer thread) plus the engine metric snapshot at
+trace.metrics.json. `--smoke` additionally asserts the tracing-DISABLED
+overhead gate: the null-span fast path must cost <=2% of an engine pass.
 """
 from __future__ import annotations
 
@@ -70,6 +76,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.api import ComputePolicy, KernelKMeans
 from repro.core.kernels_fn import Kernel
 from repro.core.kkmeans import APNCConfig, fit_coefficients
@@ -155,6 +162,49 @@ def bench_sharded(args, store, kern, policy, config):
     return result
 
 
+def measure_disabled_overhead(blocks: int, pass_s: float) -> float:
+    """The tracing-disabled overhead gate (ISSUE 6 acceptance): the per-call
+    cost of a DISABLED span times the spans one engine pass issues must stay
+    <= 2% of the measured pass wall time. Measured, not assumed — the whole
+    point of the NULL_SPAN fast path."""
+    was = obs.tracing_enabled()
+    obs.disable_tracing()
+    try:
+        reps = 100_000
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            with obs.span("overhead.probe"):
+                pass
+        per_span_s = (time.perf_counter() - t0) / reps
+    finally:
+        if was:
+            obs.enable_tracing()
+    # instrumented sites per block on the engine path: block.get + h2d spans
+    # in the producer, the stall-span check in the consumer, plus one
+    # pass-level span — call it 4 spans/block to stay conservative.
+    overhead_pct = 100.0 * per_span_s * 4 * blocks / max(pass_s, 1e-9)
+    print(f"[stream-bench] tracing-disabled span cost {per_span_s*1e9:.0f}ns/call "
+          f"-> {overhead_pct:.4f}% of one engine pass (gate: <=2%)")
+    if overhead_pct > 2.0:  # explicit raise: must survive python -O
+        raise AssertionError(
+            f"tracing-disabled overhead {overhead_pct:.3f}% exceeds the 2% gate"
+        )
+    return overhead_pct
+
+
+def write_trace_outputs(trace_path: str) -> None:
+    """Dump the collected spans (Chrome trace-event or JSONL by suffix) plus
+    the engine/backend metric snapshot next to it (<trace>.metrics.json)."""
+    obs.write_trace(trace_path)
+    metrics_path = Path(trace_path).with_suffix(".metrics.json")
+    metrics = obs.snapshot("engine.") | obs.snapshot("backend.")
+    metrics_path.write_text(json.dumps(metrics, indent=2, sort_keys=True))
+    n_spans = len(obs.TRACER.spans())
+    print(f"[stream-bench] wrote {n_spans} spans across "
+          f"{len(obs.TRACER.lanes())} lanes to {trace_path}; "
+          f"metrics -> {metrics_path}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=1_000_000)
@@ -174,12 +224,20 @@ def main(argv=None):
                     help="run ONLY the sharded sweep")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: small n/blocks, no modeled ingest "
-                         "latency — keeps the driver exercisable on every PR")
+                         "latency — keeps the driver exercisable on every PR; "
+                         "also asserts the tracing-disabled overhead gate")
+    ap.add_argument("--trace", default="",
+                    help="enable span tracing and write a Chrome trace-event "
+                         "file here (.jsonl suffix for JSONL instead); the "
+                         "metric snapshot lands at <trace>.metrics.json")
     ap.add_argument("--out", default=str(Path(__file__).parent.parent / "BENCH_stream.json"))
     ap.add_argument("--api-out", default=str(Path(__file__).parent.parent / "BENCH_api.json"))
     ap.add_argument("--shard-out",
                     default=str(Path(__file__).parent.parent / "BENCH_stream_shard.json"))
     args = ap.parse_args(argv)
+    if args.trace:
+        obs.clear_trace()
+        obs.enable_tracing()
     if args.smoke:
         args.n = min(args.n, 16384)
         args.block_rows = min(args.block_rows, 2048)
@@ -226,6 +284,8 @@ def main(argv=None):
     if args.sharded or args.sharded_only:
         sharded_result = bench_sharded(args, store, kern, policy, config)
         if args.sharded_only:
+            if args.trace:
+                write_trace_outputs(args.trace)
             return sharded_result
 
     # Engine micro-bench: coefficients fit once on a reservoir sample.
@@ -244,6 +304,10 @@ def main(argv=None):
     asyn = bench_stream_embed(store, coeffs, prefetch=args.prefetch)
     print(f"[stream-bench] embed async  {asyn/1e6:.2f}M rows/s "
           f"(overlap speedup {asyn/sync:.2f}x)")
+
+    overhead_pct = None
+    if args.smoke:
+        overhead_pct = measure_disabled_overhead(store.num_blocks, args.n / sync)
 
     def make_est(backend, **kw):
         return KernelKMeans(
@@ -323,6 +387,8 @@ def main(argv=None):
         "minibatch_rows_per_s": mb_rows,
         "minibatch_inertia": mb.inertia_,
     }
+    if overhead_pct is not None:
+        result["tracing_disabled_overhead_pct"] = overhead_pct
     Path(args.out).write_text(json.dumps(result, indent=2))
     print(f"[stream-bench] wrote {args.out}")
 
@@ -345,6 +411,8 @@ def main(argv=None):
     }
     Path(args.api_out).write_text(json.dumps(api_result, indent=2))
     print(f"[stream-bench] wrote {args.api_out}")
+    if args.trace:
+        write_trace_outputs(args.trace)
     return result, api_result
 
 

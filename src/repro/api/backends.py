@@ -63,6 +63,11 @@ def ensure_embedding_cache(ctx: FitContext, *, devices=None) -> FitContext:
     """Fill the context's embed-once cache if it is empty: ONE embedding pass
     (sharded across `devices` when given) staging Y, after which every
     backend run over this context is re-embedding-free. Idempotent."""
+    from repro import obs
+
+    if (ctx.array is not None and ctx.y_array is not None) or \
+            (ctx.array is None and ctx.y_store is not None):
+        obs.counter("backend.embed_cache_hits").inc()  # idempotent re-entry
     if ctx.array is not None and ctx.y_array is None:
         from repro import embed
 
@@ -92,6 +97,11 @@ class BackendFit:
     inertia: float
     iters: int
     rows_seen: int
+    # The winner's measured trajectory: per-iteration inertia (last entry ==
+    # `inertia`, the final-pass cost under the final centroids) and centroid
+    # shifts. Feeds the estimator's FitReport.
+    trajectory: list = dataclasses.field(default_factory=list)
+    shifts: list = dataclasses.field(default_factory=list)
 
 
 def _materialize(ctx: FitContext) -> Array:
@@ -115,6 +125,7 @@ def _from_stream(res) -> BackendFit:
     return BackendFit(
         labels=res.labels, centroids=res.centroids,
         inertia=res.inertia, iters=res.iters, rows_seen=res.rows_seen,
+        trajectory=list(res.trajectory), shifts=list(res.shifts),
     )
 
 
@@ -140,12 +151,19 @@ def fit_local(ctx: FitContext) -> BackendFit:
             Y, ctx.k, discrepancy=ctx.params.discrepancy, iters=ctx.iters,
             init=init, policy=ctx.policy,
         )
+        it = int(res.iters)
+        costs = np.asarray(res.costs[:it], np.float64)
+        shifts = np.asarray(res.shifts[:it], np.float64)
         return BackendFit(
             labels=np.asarray(res.labels, np.int32),
             centroids=res.centroids,
             inertia=float(res.inertia),
-            iters=int(res.iters),
-            rows_seen=(int(res.iters) + 1) * n,
+            iters=it,
+            rows_seen=(it + 1) * n,
+            # trajectory ends at the final-pass inertia, like the streaming
+            # drivers: it's the same quantity (block_cost under the final c)
+            trajectory=[float(v) for v in costs] + [float(res.inertia)],
+            shifts=[float(v) for v in shifts],
         )
 
     return _run_restarts(ctx, run_one)
@@ -156,6 +174,9 @@ def _stream_source(ctx: FitContext) -> dict:
     per-block map) by default, or the staged-Y cache when the context carries
     one — the drivers' existing `discrepancy=` (Y blocks) mode."""
     if ctx.y_store is not None:
+        from repro import obs
+
+        obs.counter("backend.embed_cache_hits").inc()
         return dict(store=ctx.y_store, discrepancy=ctx.params.discrepancy)
     return dict(store=ctx.store, coeffs=ctx.params)
 
@@ -222,16 +243,18 @@ def fit_shard_map(ctx: FitContext) -> BackendFit:
         return block_cost(Y, c, disc)
 
     def run_one(init):
-        labels, centroids = distributed_lloyd(
+        labels, centroids, costs = distributed_lloyd(
             mesh, Y, init, k=ctx.k, discrepancy=disc, iters=ctx.iters,
-            policy=ctx.policy,
+            policy=ctx.policy, return_costs=True,
         )
+        inertia = float(inertia_of(centroids))
         return BackendFit(
             labels=np.asarray(labels, np.int32),
             centroids=centroids,
-            inertia=float(inertia_of(centroids)),
+            inertia=inertia,
             iters=ctx.iters,  # fori_loop runs the full budget on-mesh
             rows_seen=(ctx.iters + 1) * int(X.shape[0]),
+            trajectory=[float(v) for v in np.asarray(costs)] + [inertia],
         )
 
     return _run_restarts(ctx, run_one)

@@ -20,6 +20,7 @@ from the identical init (asserted in tests/test_api.py).
 """
 from __future__ import annotations
 
+import time
 from pathlib import Path
 from typing import Any
 
@@ -27,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.api.backends import FitContext
 from repro.api.model import ClusterModel, FitMeta
 from repro.api.registry import get_backend, get_embedding, resolve_kernel
@@ -80,7 +82,9 @@ class KernelKMeans:
 
     After fit: `model_` (the ClusterModel artifact), `labels_`, `inertia_`,
     `n_iter_`, `kernel_` (the resolved Kernel), `backend_` (the backend that
-    actually ran).
+    actually ran), and `fit_report_` (a `repro.obs.FitReport`: phase
+    wall-times, the per-iteration inertia trajectory, pass counts, bytes
+    streamed — also attached to `model_.report`).
     """
 
     def __init__(
@@ -127,7 +131,9 @@ class KernelKMeans:
         self.n_iter_: int | None = None
         self.kernel_: Kernel | None = None
         self.backend_: str | None = None
+        self.fit_report_: obs.FitReport | None = None
         self._pf_state: tuple[Array, Array, int] | None = None  # (Z, g, rows)
+        self._phases: dict[str, float] = {}  # phase1/backend wall times
 
     # ------------------------------------------------------------- dispatch
 
@@ -202,22 +208,49 @@ class KernelKMeans:
         # embedding fit's draws, and the k-means++ seeding — one key must not
         # feed two draws (reservoir selection would correlate with the fit).
         k_sample, k_fit, k_seed = jax.random.split(key, 3)
-        sample = jnp.asarray(
-            reservoir_sample(store, self.landmark_sample, seed=int(k_sample[-1]))
-        )
-        params, pool = self._fit_params_and_pool(sample, k_fit)
+        self._phases = {}
+        with self._phase("reservoir"):
+            sample = jnp.asarray(
+                reservoir_sample(store, self.landmark_sample,
+                                 seed=int(k_sample[-1]))
+            )
+        with self._phase("embed_fit"):
+            params, pool = self._fit_params_and_pool(sample, k_fit)
+            jax.block_until_ready(pool)
         return store, array, params, pool, k_seed
+
+    def _phase(self, name: str):
+        """Span + wall-time accounting for one pipeline phase; the accumulated
+        seconds become the FitReport's `phases` dict."""
+        phases = self._phases
+        span = obs.span(f"phase.{name}", cat="phase")
+
+        class _Timer:
+            def __enter__(self_t):
+                span.__enter__()
+                self_t.t0 = time.perf_counter()
+                return self_t
+
+            def __exit__(self_t, *exc):
+                phases[name] = (phases.get(name, 0.0)
+                                + time.perf_counter() - self_t.t0)
+                return span.__exit__(*exc)
+
+        return _Timer()
 
     def _prepare(self, X, key: Array, backend_name: str) -> FitContext:
         """Phase 1, shared by every backend: blocked view, landmark sample,
         embedding fit, k-means++ seeding."""
         store, array, params, pool, k_seed = self._phase1(X, key, backend_name)
-        inits = [
-            kmeanspp_init(
-                jax.random.fold_in(k_seed, r), pool, self.k, params.discrepancy
-            )
-            for r in range(max(1, self.n_init))
-        ]
+        with self._phase("seed"):
+            inits = [
+                kmeanspp_init(
+                    jax.random.fold_in(k_seed, r), pool, self.k,
+                    params.discrepancy
+                )
+                for r in range(max(1, self.n_init))
+            ]
+            jax.block_until_ready(inits)
         return FitContext(
             store=store, array=array, params=params, k=self.k, inits=inits,
             iters=self.iters, policy=self.policy, decay=self.decay,
@@ -230,9 +263,12 @@ class KernelKMeans:
         name = self._choose_backend(X)
         backend = get_backend(name)  # fail fast, before the embedding fit
         get_embedding(self.method)  # likewise: reject typos before streaming data
+        metrics_before = obs.snapshot("engine.")
         ctx = self._prepare(X, key, name)
-        out = backend(ctx)
+        with self._phase("lloyd"):
+            out = backend(ctx)
         self._finish(ctx.params, out, name)
+        self._attach_report(name, out=out, metrics_before=metrics_before)
         self._pf_state = None
         return self
 
@@ -355,6 +391,35 @@ class KernelKMeans:
             block_rows=self.block_rows, random_state=self.random_state,
             **kw,
         )
+
+    def _attach_report(self, backend_name: str, *, out=None,
+                       metrics_before: dict | None = None,
+                       trajectory: list | None = None,
+                       shifts: list | None = None,
+                       iters: int | None = None,
+                       rows_seen: int | None = None,
+                       extra: dict | None = None) -> obs.FitReport:
+        """Assemble the FitReport for the run that just finished and surface
+        it (`fit_report_`, and `model_.report` as a plain non-pytree
+        attribute — measurement, not model state)."""
+        d = obs.delta(metrics_before or {}, obs.snapshot("engine."))
+        report = obs.FitReport(
+            backend=backend_name,
+            phases=dict(self._phases),
+            inertia_trajectory=(list(out.trajectory) if out is not None
+                                else list(trajectory or [])),
+            centroid_shifts=(list(out.shifts) if out is not None
+                             else list(shifts or [])),
+            iters=int(out.iters) if out is not None else int(iters or 0),
+            rows_seen=(int(out.rows_seen) if out is not None
+                       else int(rows_seen or 0)),
+            extra=dict(extra or {}),
+            **obs.report_from_metrics_delta(d),
+        )
+        self.fit_report_ = report
+        if self.model_ is not None:
+            self.model_.report = report
+        return report
 
     def _finish(self, params, out, backend_name: str) -> None:
         meta = self._fit_meta(

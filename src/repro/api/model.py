@@ -68,6 +68,15 @@ class ClusterModel:
         metadata=dict(static=True), default_factory=FitMeta
     )
 
+    # `report` (a repro.obs.FitReport) is attached by the estimator as a PLAIN
+    # instance attribute, deliberately NOT a dataclass/pytree field: it is
+    # measurement of the fitting process, not model state — unhashable dicts
+    # would poison jit caching as a static field, and a checkpointed-then-
+    # restored model's timings would describe the wrong process. It therefore
+    # does not survive pytree flattening or persistence; this class default
+    # is what reads see before/after.
+    report = None
+
     @property
     def coeffs(self) -> EmbeddingParams:
         """Legacy alias from when APNC coefficients were the only params."""

@@ -78,6 +78,7 @@ def distributed_lloyd(
     iters: int = 20,
     policy: ComputePolicy | None = None,
     use_pallas: bool | None = None,
+    return_costs: bool = False,
 ) -> tuple[Array, Array]:
     """Algorithm 2 on the mesh. Per iteration, each shard:
       map:     assign its rows to the nearest centroid under e  (Eq. 4)
@@ -85,11 +86,20 @@ def distributed_lloyd(
       shuffle: psum((Z, g)) over the data axes       <- the ONLY communication
       reduce:  Y_bar = Z / g, computed redundantly everywhere
 
-    Returns (labels row-sharded, final centroids replicated).
+    Returns (labels row-sharded, final centroids replicated); with
+    `return_costs=True`, also the (iters,) per-iteration global inertia
+    (each iteration's assignment cost under its pre-update centroids) — a
+    separate jit'd program, so the default path's compiled artifact is
+    untouched.
     """
     pallas = resolve_policy(
         policy, use_pallas, owner="distributed_lloyd: "
     ).resolve_pallas()
+    if return_costs:
+        return _distributed_lloyd_costs(
+            mesh, Y, init_centroids, k=k, discrepancy=discrepancy, iters=iters,
+            pallas=pallas,
+        )
     return _distributed_lloyd(
         mesh, Y, init_centroids, k=k, discrepancy=discrepancy, iters=iters,
         pallas=pallas,
@@ -127,6 +137,56 @@ def _distributed_lloyd(
         mesh=mesh,
         in_specs=(P(axes), P()),
         out_specs=(P(axes), P()),
+    )
+    return fn(Y, init_centroids)
+
+
+@partial(jax.jit, static_argnames=("mesh", "k", "discrepancy", "iters", "pallas"))
+def _distributed_lloyd_costs(
+    mesh: Mesh,
+    Y: Array,
+    init_centroids: Array,
+    *,
+    k: int,
+    discrepancy: Discrepancy,
+    iters: int,
+    pallas: bool,
+) -> tuple[Array, Array, Array]:
+    """`_distributed_lloyd` plus the per-iteration global inertia. The costs
+    carried through the loop stay shard-LOCAL (psum'ing inside the body would
+    flip the carry's replication type mid-loop, which shard_map rejects); the
+    whole (iters,) vector is reduced ONCE after the loop — also cheaper than
+    iters scalar psums."""
+    axes = data_axes_of(mesh)
+
+    def shard_fn(y_shard, c0):
+        def body(i, carry):
+            c, costs = carry
+            Z, g, _ = assign_stats(
+                y_shard, c, k, discrepancy, policy=ComputePolicy(pallas=pallas)
+            )
+            local_cost = jnp.sum(
+                jnp.min(pairwise_discrepancy(y_shard, c, discrepancy), axis=-1)
+            )
+            costs = costs.at[i].set(local_cost)
+            Z = jax.lax.psum(Z, axes)
+            g = jax.lax.psum(g, axes)
+            return centroid_update(Z, g, c), costs
+
+        # Seed the carry from the shard so its replication type matches the
+        # device-varying local costs written into it (a bare constant would
+        # enter the loop replicated and trip the carry check).
+        costs0 = jnp.zeros((iters,), jnp.float32) + 0.0 * y_shard[0, 0]
+        c, costs = jax.lax.fori_loop(0, iters, body, (c0, costs0))
+        costs = jax.lax.psum(costs, axes)
+        D = pairwise_discrepancy(y_shard, c, discrepancy)
+        return jnp.argmin(D, axis=-1).astype(jnp.int32), c, costs
+
+    fn = shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(P(axes), P()),
+        out_specs=(P(axes), P(), P()),
     )
     return fn(Y, init_centroids)
 

@@ -37,6 +37,12 @@ class LloydResult(NamedTuple):
     centroids: Array  # (k, m)
     inertia: Array  # () sum of e(y_i, c_{pi(i)})
     iters: Array  # () iterations actually run
+    # Observability trailers (defaulted: legacy positional construction and
+    # 4-way unpacking keep working). costs[i] is the inertia of iteration i's
+    # assignment (labels under the centroids that made them); shifts[i] is
+    # ||c_{i+1} - c_i||_F. Only the first `iters` entries are meaningful.
+    costs: Array | None = None  # (iters_cap,) f32
+    shifts: Array | None = None  # (iters_cap,) f32
 
 
 def centroid_update(Z: Array, g: Array, prev: Array) -> Array:
@@ -110,23 +116,33 @@ def lloyd(
         init = kmeanspp_init(key, Y, k, discrepancy)
 
     def body(carry):
-        i, centroids, labels, _ = carry
+        i, centroids, labels, _, costs, shifts = carry
         Z, g, new_labels = assign_stats(Y, centroids, k, discrepancy, policy=policy)
+        # Iteration i's inertia: cost of THIS assignment under the centroids
+        # that made it — an extra reduction over the same distance matrix (the
+        # streaming drivers record the identical quantity per block).
+        costs = costs.at[i].set(block_cost(Y, centroids, discrepancy))
         new_centroids = centroid_update(Z, g, centroids)
+        shifts = shifts.at[i].set(
+            jnp.linalg.norm(new_centroids - centroids)
+        )
         changed = jnp.any(new_labels != labels)
-        return i + 1, new_centroids, new_labels, changed
+        return i + 1, new_centroids, new_labels, changed, costs, shifts
 
     def cond(carry):
-        i, _, _, changed = carry
+        i, _, _, changed, _, _ = carry
         return jnp.logical_and(i < iters, changed)
 
     n = Y.shape[0]
-    state = (jnp.asarray(0), init, jnp.full((n,), -1, jnp.int32), jnp.asarray(True))
-    it, centroids, _, _ = jax.lax.while_loop(cond, body, state)
+    state = (
+        jnp.asarray(0), init, jnp.full((n,), -1, jnp.int32), jnp.asarray(True),
+        jnp.zeros((iters,), jnp.float32), jnp.zeros((iters,), jnp.float32),
+    )
+    it, centroids, _, _, costs, shifts = jax.lax.while_loop(cond, body, state)
     # Labels AND inertia under the FINAL centroids (the loop's labels lag one
     # update), routed through the SAME policy as the in-loop assignments —
     # mirrors the streaming variants' final pass, so a budget-capped (or
     # Pallas-routed) run still matches ooc_lloyd label-for-label.
     _, _, labels = assign_stats(Y, centroids, k, discrepancy, policy=policy)
     inertia = block_cost(Y, centroids, discrepancy)
-    return LloydResult(labels, centroids, inertia, it)
+    return LloydResult(labels, centroids, inertia, it, costs, shifts)

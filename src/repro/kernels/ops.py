@@ -188,6 +188,34 @@ def embed_assign_block(
 
 
 @partial(jax.jit, static_argnames=("policy",))
+def _embed_assign_block_cost(
+    x: Array, params, centroids: Array, policy: ComputePolicy
+) -> tuple[Array, Array, Array, Array]:
+    from repro.core.lloyd import assign_stats, block_cost
+
+    y = _embed_block_map(x, params, policy)
+    Z, g, labels = assign_stats(
+        y, centroids, centroids.shape[0], params.discrepancy, policy=policy
+    )
+    return Z, g, labels, block_cost(y, centroids, params.discrepancy)
+
+
+def embed_assign_block_cost(
+    x: Array, params, centroids: Array, *,
+    policy: ComputePolicy | None = None,
+) -> tuple[Array, Array, Array, Array]:
+    """`embed_assign_block` plus the block's inertia contribution under the
+    SAME centroids, in the same dispatch: (Z, g, labels, cost). The assignment
+    routes through the identical policy path as `embed_assign_block` — the
+    cost is an extra reduction over the shared distance matrix (CSE'd on the
+    jnp path), so labels cannot differ from the cost-free op. This is how the
+    streaming drivers record the per-iteration inertia trajectory without an
+    extra pass."""
+    pol = resolve_policy(policy, owner="ops.embed_assign_block_cost: ")
+    return _embed_assign_block_cost(x, params, centroids, pol)
+
+
+@partial(jax.jit, static_argnames=("policy",))
 def _embed_predict_block(
     x: Array, params, centroids: Array, policy: ComputePolicy
 ) -> Array:

@@ -9,13 +9,16 @@ Loads a fitted `ClusterModel` — training one through the unified
 `distributed/checkpoint.save_cluster_model` so the served model always comes
 off disk (the train->serve loop) — and serves `predict` over a replayed
 request stream with micro-batching: up to B requests (or a deadline) are
-collected and assigned in ONE fused embed+assign dispatch. Reports p50/p99
-per-request latency and throughput, then verifies every served label against
-`core.kkmeans.predict` on the replayed log.
+collected and assigned in ONE fused embed+assign dispatch. Reports p50/p90/p99
+per-request latency and throughput (a periodic stats line while the replay
+runs, a final summary, and an optional --stats-json dump of the full metric
+snapshot), then verifies every served label against `core.kkmeans.predict`
+on the replayed log.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import tempfile
 import time
 
@@ -23,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.api import ComputePolicy, KernelKMeans
 from repro.core.kkmeans import predict
 from repro.distributed.checkpoint import load_cluster_model
@@ -129,6 +133,10 @@ def main(argv=None):
                     help="k-means++ restarts per k-grid entry in --sweep-k-grid mode")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--stats-json", default="",
+                    help="write the end-of-run serve metrics snapshot here")
+    ap.add_argument("--stats-every", type=int, default=2000,
+                    help="print a rolling stats line every N requests (0 = off)")
     ap.add_argument(
         "--backend", default="stream",
         help="clustering backend used when fitting; \"stream_shard\" streams "
@@ -161,27 +169,38 @@ def main(argv=None):
     process = make_process_fn(model, max_batch=args.micro_batch, policy=policy)
     process(X_req[: args.micro_batch])  # warm the compile outside the timed loop
 
+    obs.reset_metrics("serve.")
     batcher = MicroBatcher(
         process, max_batch=args.micro_batch, max_delay_s=args.max_delay_ms / 1e3
     )
+    lat_hist = obs.histogram("serve.latency_ms")  # fed by the batcher
     interarrival = 1.0 / args.rate if args.rate > 0 else 0.0
-    t0 = time.monotonic()
+    t0 = time.perf_counter()
     next_arrival = t0
     for i in range(args.requests):
         if interarrival:
             next_arrival += interarrival
             while True:  # honor pending deadlines while waiting for the arrival
-                now = time.monotonic()
+                now = time.perf_counter()
                 deadline = batcher.next_deadline
                 target = next_arrival if deadline is None else min(next_arrival, deadline)
                 if target > now:
                     time.sleep(target - now)
                 batcher.poll()
-                if time.monotonic() >= next_arrival:
+                if time.perf_counter() >= next_arrival:
                     break
         batcher.submit(i, X_req[i])
+        if args.stats_every and (i + 1) % args.stats_every == 0:
+            done = len(batcher.completed)
+            elapsed = time.perf_counter() - t0
+            print(f"[cluster-serve] {i + 1}/{args.requests} submitted, "
+                  f"{done} served at {done / max(elapsed, 1e-9):.0f} req/s | "
+                  f"rolling latency p50 {lat_hist.percentile(50):.2f}ms "
+                  f"p90 {lat_hist.percentile(90):.2f}ms "
+                  f"p99 {lat_hist.percentile(99):.2f}ms | "
+                  f"queue depth {obs.gauge('serve.queue_depth').value:.0f}")
     batcher.drain()
-    wall = time.monotonic() - t0
+    wall = time.perf_counter() - t0
 
     lat_ms = np.asarray([lat for _, _, lat in batcher.completed]) * 1e3
     served = np.asarray([lab for _, lab, _ in batcher.completed], dtype=np.int32)
@@ -192,18 +211,30 @@ def main(argv=None):
     ref = np.asarray(predict(jnp.asarray(X_req), model.params, model.centroids,
                              policy=policy))
     mismatches = int(np.sum(served != ref))
-    p50, p99 = np.percentile(lat_ms, 50), np.percentile(lat_ms, 99)
+    p50, p90, p99 = (np.percentile(lat_ms, p) for p in (50, 90, 99))
     print(f"[cluster-serve] {args.requests} requests, micro-batch {args.micro_batch} "
           f"(mean actual {np.mean(batcher.batch_sizes):.1f}), "
           f"{args.requests / wall:.0f} req/s")
-    print(f"[cluster-serve] latency p50 {p50:.2f}ms p99 {p99:.2f}ms")
+    print(f"[cluster-serve] latency p50 {p50:.2f}ms p90 {p90:.2f}ms p99 {p99:.2f}ms")
     print(f"[cluster-serve] replay check vs core.kkmeans.predict: "
           f"{args.requests - mismatches}/{args.requests} exact"
           + (" [OK]" if mismatches == 0 else " [MISMATCH]"))
+    stats = {
+        "requests": args.requests, "micro_batch": args.micro_batch,
+        "wall_s": float(wall), "req_per_s": args.requests / wall,
+        "p50_ms": float(p50), "p90_ms": float(p90), "p99_ms": float(p99),
+        "mismatches": mismatches,
+        # full rolling-metric snapshot: latency/batch-size histogram stats,
+        # queue-depth gauge (value + high-water mark)
+        "metrics": obs.snapshot("serve."),
+    }
+    if args.stats_json:
+        with open(args.stats_json, "w") as f:
+            json.dump(stats, f, indent=2, sort_keys=True)
+        print(f"[cluster-serve] stats JSON -> {args.stats_json}")
     if mismatches:
         raise SystemExit(1)
-    return {"p50_ms": float(p50), "p99_ms": float(p99),
-            "req_per_s": args.requests / wall, "mismatches": mismatches}
+    return stats
 
 
 if __name__ == "__main__":

@@ -114,7 +114,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, opts=(),
            "mesh": dict(zip(mesh.axis_names, (mesh.shape[a] for a in mesh.axis_names))),
            "opts": list(opts)}
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh:
         batch_specs = shd.to_shardings(mesh, shd.batch_pspecs(cfg, shape_name, mesh))
         inputs = cfg.input_specs(shape_name)
@@ -152,10 +152,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, opts=(),
             )
             lowered = jitted.lower(params, inputs, cache, jax.ShapeDtypeStruct((), jnp.int32))
 
-        rec["lower_s"] = round(time.time() - t0, 2)
-        t1 = time.time()
+        rec["lower_s"] = round(time.perf_counter() - t0, 2)
+        t1 = time.perf_counter()
         compiled = lowered.compile()
-        rec["compile_s"] = round(time.time() - t1, 2)
+        rec["compile_s"] = round(time.perf_counter() - t1, 2)
 
         cost = compiled.cost_analysis() or {}
         rec["xla_flops_once"] = float(cost.get("flops", -1))  # loop bodies once!
@@ -169,11 +169,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, opts=(),
         # loop-aware per-device terms (repro.roofline.hlo_cost): while bodies are
         # multiplied by their known_trip_count, collectives included.
         from repro.roofline.hlo_cost import analyze_hlo
-        t2 = time.time()
+        t2 = time.perf_counter()
         hlo = compiled.as_text()
         rec.update(analyze_hlo(hlo))
         rec["total_collective_bytes"] = rec.get("collective_bytes", 0.0)
-        rec["analyze_s"] = round(time.time() - t2, 2)
+        rec["analyze_s"] = round(time.perf_counter() - t2, 2)
         if dump_hlo_dir is not None:
             import gzip
             dump_hlo_dir.mkdir(parents=True, exist_ok=True)

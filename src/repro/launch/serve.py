@@ -53,7 +53,7 @@ def main(argv=None):
     batch = tok_lib.synthetic_batch(cfg, 0, args.batch, args.prompt_len)
     batch.pop("loss_mask")
     with mesh:
-        t0 = time.time()
+        t0 = time.perf_counter()
         logits, cache = prefill(params, {k: jnp.asarray(v) for k, v in batch.items()})
         # grow the kv cache to max_len so decode has room
         def grow(x):
@@ -73,7 +73,7 @@ def main(argv=None):
                 return c
             cache = {k: quant_group(v) for k, v in cache.items()}
         jax.block_until_ready(logits)
-        t_prefill = time.time() - t0
+        t_prefill = time.perf_counter() - t0
 
         key = jax.random.PRNGKey(1)
         toks = []
@@ -82,7 +82,7 @@ def main(argv=None):
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, K)
         else:
             nxt = sample(logits, key, args.temperature)  # (B,)
-        t1 = time.time()
+        t1 = time.perf_counter()
         for i in range(args.gen):
             toks.append(nxt)
             step_batch = (
@@ -95,7 +95,7 @@ def main(argv=None):
             nxt = (jnp.argmax(logits, -1).astype(jnp.int32)
                    if cfg.frontend == "audio_codes" else sample(logits, sk, args.temperature))
         jax.block_until_ready(logits)
-        t_decode = time.time() - t1
+        t_decode = time.perf_counter() - t1
 
     out = jnp.stack(toks, axis=-1)
     print(f"[serve] {cfg.name}: prefill {args.batch}x{args.prompt_len} in "

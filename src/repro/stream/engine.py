@@ -25,46 +25,65 @@ from __future__ import annotations
 import collections
 import queue
 import threading
+import time
 from typing import Any, Callable
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.stream.blockstore import BlockStore, WritableBlockStore
 
 _STOP = object()
 
-# Labeled engine-pass telemetry: every full pass over a store bumps its label's
-# count. Sweep-resume tests (and anyone auditing "did we really embed only
-# once?") read these; reset_pass_counts() scopes a measurement. The lock makes
-# the read-modify-write safe under the sharded executors' D worker threads.
+# Labeled engine-pass telemetry, now canonically in the obs metrics registry
+# under "engine.passes.<label>". PASS_COUNTS is kept in lockstep as a
+# deprecation shim — existing readers (sweep-resume tests, external scripts)
+# keep seeing the same Counter. reset_pass_counts() scopes a measurement. The
+# lock makes the read-modify-write safe under the sharded executors' D worker
+# threads.
 PASS_COUNTS: "collections.Counter[str]" = collections.Counter()
 _PASS_LOCK = threading.Lock()
 
 
 def _count_pass(label: str) -> None:
+    obs.counter(f"engine.passes.{label}").inc()
     with _PASS_LOCK:
         PASS_COUNTS[label] += 1
 
 
 def reset_pass_counts() -> None:
     """Zero the engine-pass telemetry (test / measurement scoping)."""
+    obs.reset_metrics("engine.passes.")
     with _PASS_LOCK:
         PASS_COUNTS.clear()
 
 
 def pass_count(label: str) -> int:
     """Engine passes recorded under `label` since the last reset."""
-    return PASS_COUNTS[label]
+    return int(obs.counter(f"engine.passes.{label}").value)
 
 
-def _producer(store: BlockStore, q: "queue.Queue", stop: threading.Event, device):
+def _producer(store: BlockStore, q: "queue.Queue", stop: threading.Event,
+              device, lane: str):
+    # One metrics lane per producer thread: the per-device block counter is
+    # what a sharded FitReport reports as per_device_blocks, and the span lane
+    # is what renders as this producer's Perfetto row.
+    obs.set_lane(lane)
+    blocks = obs.counter("engine.blocks_read")
+    dev_blocks = obs.counter(f"engine.device_blocks.{lane.split(':', 1)[-1]}")
+    nbytes = obs.counter("engine.bytes_h2d")
     try:
         for i in range(store.num_blocks):
             if stop.is_set():
                 return
-            blk = store.get(i)  # host-side cost: generation / disk read
-            dev = jax.device_put(blk, device)  # starts the H2D copy immediately
+            with obs.span("block.get", cat="ingest", block=i):
+                blk = store.get(i)  # host-side cost: generation / disk read
+            with obs.span("h2d", cat="ingest", block=i):
+                dev = jax.device_put(blk, device)  # starts the H2D copy
+            blocks.inc()
+            dev_blocks.inc()
+            nbytes.inc(getattr(blk, "nbytes", 0))
             q.put((i, dev, None))
         q.put(_STOP)
     except BaseException as e:  # noqa: BLE001 - re-raised on the consumer side
@@ -85,8 +104,11 @@ class BlockPrefetcher:
         self._q: "queue.Queue" = queue.Queue(maxsize=max(1, prefetch))
         self._stop = threading.Event()
         self._done = False
+        self.lane = f"producer:{device if device is not None else 'default'}"
+        self._stall = obs.counter("engine.prefetch_stall_s")
         self._t = threading.Thread(
-            target=_producer, args=(store, self._q, self._stop, device), daemon=True
+            target=_producer,
+            args=(store, self._q, self._stop, device, self.lane), daemon=True,
         )
         self._t.start()
 
@@ -96,7 +118,18 @@ class BlockPrefetcher:
     def __next__(self):
         if self._done:
             raise StopIteration
+        # Time spent blocked on an empty queue is THE ingest-bound signal:
+        # the producer (host generation / disk / H2D), not the device, is the
+        # bottleneck. Accumulated always; a span only when tracing.
+        t0 = time.perf_counter()
         item = self._q.get()
+        wait = time.perf_counter() - t0
+        self._stall.inc(wait)
+        if obs.TRACER.enabled and wait > 0:
+            s = obs.Span(obs.TRACER, "stall.queue_empty", "stall",
+                         obs.TRACER.current_lane(), {"producer": self.lane})
+            s.t0, s.dur = t0, wait
+            obs.TRACER._record(s)
         if item is _STOP:
             self._done = True
             raise StopIteration
@@ -150,27 +183,39 @@ def map_reduce(
     label: telemetry tag — each call bumps PASS_COUNTS[label] by one full pass.
     """
     _count_pass(label)
+    dispatches = obs.counter("engine.map_dispatches")
     if prefetch <= 0:
-        acc = init
-        for i in range(store.num_blocks):
-            dev = jax.device_put(store.get(i), device)
-            out = map_fn(dev)
-            if emit is not None:
-                emit(i, out)
-            acc = combine_fn(acc, out)
-            jax.block_until_ready(acc)
+        blocks = obs.counter("engine.blocks_read")
+        nbytes = obs.counter("engine.bytes_h2d")
+        with obs.span(f"pass.{label}", cat="pass", blocks=store.num_blocks,
+                      prefetch=prefetch):
+            acc = init
+            for i in range(store.num_blocks):
+                blk = store.get(i)
+                blocks.inc()
+                nbytes.inc(getattr(blk, "nbytes", 0))
+                dev = jax.device_put(blk, device)
+                out = map_fn(dev)
+                dispatches.inc()
+                if emit is not None:
+                    emit(i, out)
+                acc = combine_fn(acc, out)
+                jax.block_until_ready(acc)
         return acc
 
-    pf = BlockPrefetcher(store, prefetch=prefetch, device=device)
-    acc = init
-    try:
-        for i, dev in pf:
-            out = map_fn(dev)
-            if emit is not None:
-                emit(i, out)
-            acc = combine_fn(acc, out)
-    finally:
-        pf.close()
+    with obs.span(f"pass.{label}", cat="pass", blocks=store.num_blocks,
+                  prefetch=prefetch):
+        pf = BlockPrefetcher(store, prefetch=prefetch, device=device)
+        acc = init
+        try:
+            for i, dev in pf:
+                out = map_fn(dev)
+                dispatches.inc()
+                if emit is not None:
+                    emit(i, out)
+                acc = combine_fn(acc, out)
+        finally:
+            pf.close()
     return acc
 
 

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.apnc import Discrepancy
 from repro.embed.base import EmbeddingParams
 from repro.core.lloyd import centroid_update, kmeanspp_init
@@ -49,24 +50,34 @@ class StreamLloydResult(NamedTuple):
     inertia: float  # sum of e(y_i, c_{pi(i)})
     iters: int  # iterations actually run
     rows_seen: int  # total rows streamed (epochs * n for exact)
+    # Observability trailers (defaulted so legacy positional construction and
+    # unpacking keep working): per-iteration inertia (exact drivers: the cost
+    # of iteration t's assignment; minibatch: per-epoch accumulated block
+    # costs) and per-update centroid shifts ||c_{t+1} - c_t||_F.
+    trajectory: tuple = ()
+    shifts: tuple = ()
 
 
 def _block_map(coeffs, discrepancy, centroids_cell, pol: ComputePolicy):
-    """jit'd (Z, g, labels) map for one block; embeds first when coeffs given.
-    `centroids_cell` is a 1-element list so minibatch can swap centroids
-    between blocks without retracing."""
+    """jit'd (Z, g, labels, cost) map for one block; embeds first when coeffs
+    given. Labels stay at index 2 (emit callbacks read out[2]); the trailing
+    cost is the block's inertia under the SAME centroids, an extra reduction
+    over the shared distance matrix — the per-iteration trajectory costs no
+    extra pass. `centroids_cell` is a 1-element list so minibatch can swap
+    centroids between blocks without retracing."""
     if coeffs is not None:
         def fn(x):
-            return ops.embed_assign_block(
+            return ops.embed_assign_block_cost(
                 x, coeffs, centroids_cell[0], policy=pol
             )
         return fn
 
-    from repro.core.lloyd import assign_stats
+    from repro.core.lloyd import assign_stats, block_cost
 
     @jax.jit
     def assign(y, c):
-        return assign_stats(y, c, c.shape[0], discrepancy, policy=pol)
+        Z, g, labels = assign_stats(y, c, c.shape[0], discrepancy, policy=pol)
+        return Z, g, labels, block_cost(y, c, discrepancy)
 
     return lambda y: assign(y, centroids_cell[0])
 
@@ -177,24 +188,38 @@ def ooc_lloyd(
             changed_cell[0] = True
         labels_host[lo:lo + new.shape[0]] = new
 
-    zero = (jnp.zeros((k, m), jnp.float32), jnp.zeros((k,), jnp.float32))
+    zero = (jnp.zeros((k, m), jnp.float32), jnp.zeros((k,), jnp.float32),
+            jnp.zeros((), jnp.float32))
+    trajectory: list[float] = []
+    shifts: list[float] = []
     it = 0
     while it < iters and changed_cell[0]:
         changed_cell[0] = False
-        Z, g = map_reduce(
-            store, map_fn,
-            lambda acc, out: (acc[0] + out[0], acc[1] + out[1]),
-            zero, prefetch=prefetch, emit=emit,
-        )
-        centroids_cell[0] = centroid_update(Z, g, centroids_cell[0])
+        with obs.span("lloyd.iter", cat="lloyd", iter=it) as sp:
+            Z, g, cost = map_reduce(
+                store, map_fn,
+                lambda acc, out: (acc[0] + out[0], acc[1] + out[1], acc[2] + out[3]),
+                zero, prefetch=prefetch, emit=emit,
+            )
+            new_c = centroid_update(Z, g, centroids_cell[0])
+            shift = float(jnp.linalg.norm(new_c - centroids_cell[0]))
+            trajectory.append(float(cost))
+            shifts.append(shift)
+            sp.set(inertia=trajectory[-1], shift=shift)
+            centroids_cell[0] = new_c
         it += 1
 
     # Final pass under the final centroids: labels + inertia (matches the
-    # post-loop assignment of core.lloyd at any fixed point).
+    # post-loop assignment of core.lloyd at any fixed point). Its inertia is
+    # the trajectory's last point — exactly the model's reported inertia.
     inertia = _final_assign(
         store, coeffs, disc, centroids_cell, labels_host, prefetch, pol
     )
-    return StreamLloydResult(labels_host, centroids_cell[0], inertia, it, (it + 1) * store.n)
+    trajectory.append(inertia)
+    return StreamLloydResult(
+        labels_host, centroids_cell[0], inertia, it, (it + 1) * store.n,
+        tuple(trajectory), tuple(shifts),
+    )
 
 
 def _final_assign(store, coeffs, disc, centroids_cell, labels_host, prefetch, pol):
@@ -287,31 +312,44 @@ def minibatch_lloyd(
     labels_host = np.full(store.n, -1, dtype=np.int32)
 
     @jax.jit
-    def fold(Z, g, out, c):
+    def fold(Z, g, cost, out, c):
         Zn = decay * Z + out[0]
         gn = decay * g + out[1]
-        return Zn, gn, centroid_update(Zn, gn, c)
+        return Zn, gn, cost + out[3], centroid_update(Zn, gn, c)
 
-    state = [jnp.zeros((k, m), jnp.float32), jnp.zeros((k,), jnp.float32)]
+    state = [jnp.zeros((k, m), jnp.float32), jnp.zeros((k,), jnp.float32),
+             jnp.zeros((), jnp.float32)]
 
     def emit(i, out):
         lo = store.row_offset(i)
         labels_host[lo:lo + out[2].shape[0]] = np.asarray(out[2], dtype=np.int32)
 
     def combine(acc, out):
-        state[0], state[1], centroids_cell[0] = fold(
-            state[0], state[1], out, centroids_cell[0]
+        state[0], state[1], state[2], centroids_cell[0] = fold(
+            state[0], state[1], state[2], out, centroids_cell[0]
         )
         return acc
 
-    for _ in range(epochs):
-        map_reduce(store, map_fn, combine, None, prefetch=prefetch, emit=emit)
+    # Per-EPOCH trajectory: the accumulated block costs of that epoch's
+    # assignments (each under the centroids current when its block streamed —
+    # the decayed trajectory has no single per-iteration centroid snapshot).
+    trajectory: list[float] = []
+    seen_cost = 0.0
+    for ep in range(epochs):
+        with obs.span("lloyd.epoch", cat="lloyd", epoch=ep) as sp:
+            map_reduce(store, map_fn, combine, None, prefetch=prefetch, emit=emit)
+            total = float(state[2])
+            trajectory.append(total - seen_cost)
+            seen_cost = total
+            sp.set(inertia=trajectory[-1])
 
     inertia = _final_assign(
         store, coeffs, disc, centroids_cell, labels_host, prefetch, pol
     )
+    trajectory.append(inertia)
     return StreamLloydResult(  # +1 pass: _final_assign streams everything again
-        labels_host, centroids_cell[0], inertia, epochs, (epochs + 1) * store.n
+        labels_host, centroids_cell[0], inertia, epochs, (epochs + 1) * store.n,
+        tuple(trajectory), (),
     )
 
 

@@ -18,6 +18,8 @@ from typing import Any, Callable
 
 import numpy as np
 
+from repro import obs
+
 
 @dataclass
 class _Pending:
@@ -42,7 +44,7 @@ class MicroBatcher:
         *,
         max_batch: int = 256,
         max_delay_s: float = 0.002,
-        clock: Callable[[], float] = time.monotonic,
+        clock: Callable[[], float] = time.perf_counter,
     ):
         if max_batch <= 0:
             raise ValueError("max_batch must be positive")
@@ -53,10 +55,17 @@ class MicroBatcher:
         self._queue: list[_Pending] = []
         self.completed: list[tuple[Any, int, float]] = []
         self.batch_sizes: list[int] = []
+        # Rolling service metrics (repro.obs): per-request latency and
+        # per-flush batch size as windowed histograms, live queue depth as a
+        # gauge. Shared registry names, so any co-resident monitor sees them.
+        self._lat = obs.histogram("serve.latency_ms")
+        self._bs = obs.histogram("serve.batch_size")
+        self._depth = obs.gauge("serve.queue_depth")
 
     def submit(self, request_id: Any, x) -> None:
         """Enqueue one request; flushes immediately when the batch fills."""
         self._queue.append(_Pending(request_id, np.asarray(x), self.clock()))
+        self._depth.set(len(self._queue))
         if len(self._queue) >= self.max_batch:
             self.flush()
 
@@ -84,8 +93,12 @@ class MicroBatcher:
         labels = np.asarray(self.process_fn(X)).astype(np.int32)
         now = self.clock()
         for p, lab in zip(batch, labels):
-            self.completed.append((p.request_id, int(lab), now - p.t_submit))
+            lat = now - p.t_submit
+            self.completed.append((p.request_id, int(lab), lat))
+            self._lat.observe(lat * 1e3)
         self.batch_sizes.append(len(batch))
+        self._bs.observe(len(batch))
+        self._depth.set(len(self._queue))
         if len(self._queue) >= self.max_batch:  # spillover from a burst
             self.flush()
 

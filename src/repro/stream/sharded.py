@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.core.lloyd import assign_stats, block_cost, centroid_update
 from repro.kernels import ops
 from repro.policy import ComputePolicy
@@ -84,6 +85,10 @@ def sharded_map_reduce(
     errs: list = [None] * D
 
     def run(d: int) -> None:
+        if d > 0 or threading.current_thread() is not threading.main_thread():
+            # per-device executor threads trace on a stable shard lane (the
+            # degenerate D==1 call runs inline on the driver's own lane)
+            obs.set_lane(f"shard:{devices[d]}")
         try:
             accs[d] = map_reduce(
                 shards[d], map_fns[d], combine_fn, inits[d],
@@ -198,15 +203,17 @@ def cross_device_sum(accs: Sequence, devices) -> Any:
     the psum-equivalent, moving exactly the per-device stat bytes."""
     if len(devices) == 1:
         return accs[0]
-    sharding = NamedSharding(_shard_mesh(tuple(devices)), P("shard"))
+    with obs.span("reduce.cross_device", cat="reduce", devices=len(devices)):
+        sharding = NamedSharding(_shard_mesh(tuple(devices)), P("shard"))
 
-    def stack_sum(*leaves):
-        glob = jax.make_array_from_single_device_arrays(
-            (len(devices),) + leaves[0].shape, sharding, [l[None] for l in leaves]
-        )
-        return jnp.sum(glob, axis=0)
+        def stack_sum(*leaves):
+            glob = jax.make_array_from_single_device_arrays(
+                (len(devices),) + leaves[0].shape, sharding,
+                [l[None] for l in leaves]
+            )
+            return jnp.sum(glob, axis=0)
 
-    return jax.tree_util.tree_map(stack_sum, *accs)
+        return jax.tree_util.tree_map(stack_sum, *accs)
 
 
 # ------------------------------------------------------------ jit'd map fns
@@ -215,6 +222,16 @@ def cross_device_sum(accs: Sequence, devices) -> Any:
 @partial(jax.jit, static_argnames=("k", "discrepancy", "policy"))
 def _assign_stats_y(y, c, k, discrepancy, policy):
     return assign_stats(y, c, k, discrepancy, policy=policy)
+
+
+# (Z, g, labels) plus the block's inertia contribution in the same dispatch:
+# an extra reduction over the shared distance matrix. Labels stay at index 2
+# — the emit callbacks and the label-identity invariants see the exact same
+# assignment as the cost-free map.
+@partial(jax.jit, static_argnames=("k", "discrepancy", "policy"))
+def _assign_stats_cost_y(y, c, k, discrepancy, policy):
+    Z, g, labels = assign_stats(y, c, k, discrepancy, policy=policy)
+    return Z, g, labels, block_cost(y, c, discrepancy)
 
 
 # Final-pass labels go through the SAME policy-routed assign_stats as the
@@ -239,19 +256,19 @@ def _assign_cost_y(y, c, discrepancy, policy):
 
 
 def _stat_map_fns(coeffs_d, cells, k, disc, pol, devices):
-    """Per-device (Z, g, labels) maps reading the device's centroid cell —
-    swapped between iterations/rounds without retracing."""
+    """Per-device (Z, g, labels, cost) maps reading the device's centroid
+    cell — swapped between iterations/rounds without retracing."""
     fns = []
     for d in range(len(devices)):
         if coeffs_d[d] is not None:
             fns.append(
                 lambda x, p=coeffs_d[d], cell=cells[d]:
-                    ops.embed_assign_block(x, p, cell[0], policy=pol)
+                    ops.embed_assign_block_cost(x, p, cell[0], policy=pol)
             )
         else:
             fns.append(
                 lambda y, cell=cells[d]:
-                    _assign_stats_y(y, cell[0], k, disc, pol)
+                    _assign_stats_cost_y(y, cell[0], k, disc, pol)
             )
     return fns
 
@@ -334,29 +351,42 @@ def ooc_lloyd_sharded(
     labels_host = np.full(store.n, -1, dtype=np.int32)
     changed = [True]
     emits = _label_emits(shards, labels_host, changed)
-    zero = (jnp.zeros((k, m), jnp.float32), jnp.zeros((k,), jnp.float32))
+    zero = (jnp.zeros((k, m), jnp.float32), jnp.zeros((k,), jnp.float32),
+            jnp.zeros((), jnp.float32))
     zeros_d = [jax.device_put(zero, dev) for dev in devices]
 
+    trajectory: list[float] = []
+    shifts: list[float] = []
     it = 0
     while it < iters and changed[0]:
         changed[0] = False
-        for d, cd in enumerate(_device_copies(c, devices)):
-            cells[d][0] = cd
-        accs = sharded_map_reduce(
-            shards, map_fns,
-            lambda acc, out: (acc[0] + out[0], acc[1] + out[1]),
-            list(zeros_d), devices=devices, prefetch=prefetch, emits=emits,
-        )
-        Z, g = cross_device_sum(accs, devices)
-        c = centroid_update(Z, g, c)
+        with obs.span("lloyd.iter", cat="lloyd", iter=it, devices=D) as sp:
+            for d, cd in enumerate(_device_copies(c, devices)):
+                cells[d][0] = cd
+            accs = sharded_map_reduce(
+                shards, map_fns,
+                lambda acc, out: (acc[0] + out[0], acc[1] + out[1], acc[2] + out[3]),
+                list(zeros_d), devices=devices, prefetch=prefetch, emits=emits,
+            )
+            Z, g, cost = cross_device_sum(accs, devices)
+            new_c = centroid_update(Z, g, c)
+            shift = float(jnp.linalg.norm(new_c - c))
+            trajectory.append(float(cost))
+            shifts.append(shift)
+            sp.set(inertia=trajectory[-1], shift=shift)
+            c = new_c
         it += 1
 
     c_locals = _device_copies(c, devices)
     inertia = _final_assign_sharded(
         shards, coeffs_d, disc, c_locals, labels_host, policy, prefetch, devices
     )
+    trajectory.append(inertia)
     centroids = jnp.asarray(np.asarray(c))  # off the mesh: plain default-device array
-    return StreamLloydResult(labels_host, centroids, inertia, it, (it + 1) * store.n)
+    return StreamLloydResult(
+        labels_host, centroids, inertia, it, (it + 1) * store.n,
+        tuple(trajectory), tuple(shifts),
+    )
 
 
 def minibatch_lloyd_sharded(
@@ -390,48 +420,57 @@ def minibatch_lloyd_sharded(
     cells: list[list] = [[None] for _ in range(D)]
     map_fns = _stat_map_fns(coeffs_d, cells, k, disc, policy, devices)
 
-    zero = (jnp.zeros((k, m), jnp.float32), jnp.zeros((k,), jnp.float32))
+    zero = (jnp.zeros((k, m), jnp.float32), jnp.zeros((k,), jnp.float32),
+            jnp.zeros((), jnp.float32))
     zeros_d = [jax.device_put(zero, dev) for dev in devices]
-    Z, g = _replicate(zero, devices)
+    Z, g = _replicate(zero[:2], devices)
 
     labels_host = np.full(store.n, -1, dtype=np.int32)
 
-    for _ in range(epochs):
-        pfs = [BlockPrefetcher(shards[d], prefetch=prefetch, device=devices[d])
-               for d in range(D)]
-        try:
-            while True:
-                for d, cd in enumerate(_device_copies(c, devices)):
-                    cells[d][0] = cd
-                round_outs = []
-                stats = list(zeros_d)
-                for d in range(D):
-                    item = next(pfs[d], None)
-                    if item is None:
-                        continue
-                    i, blk = item
-                    out = map_fns[d](blk)
-                    stats[d] = (out[0], out[1])
-                    round_outs.append((d, i, out))
-                if not round_outs:
-                    break
-                Zb, gb = cross_device_sum(stats, devices)
-                Z = decay * Z + Zb
-                g = decay * g + gb
-                c = centroid_update(Z, g, c)
-                for d, i, out in round_outs:
-                    lo = shards[d].row_offset(i)
-                    lab = np.asarray(out[2], dtype=np.int32)
-                    labels_host[lo:lo + lab.shape[0]] = lab
-        finally:
-            for pf in pfs:
-                pf.close()
+    trajectory: list[float] = []
+    for ep in range(epochs):
+        epoch_cost = 0.0
+        with obs.span("lloyd.epoch", cat="lloyd", epoch=ep, devices=D) as sp:
+            pfs = [BlockPrefetcher(shards[d], prefetch=prefetch, device=devices[d])
+                   for d in range(D)]
+            try:
+                while True:
+                    for d, cd in enumerate(_device_copies(c, devices)):
+                        cells[d][0] = cd
+                    round_outs = []
+                    stats = list(zeros_d)
+                    for d in range(D):
+                        item = next(pfs[d], None)
+                        if item is None:
+                            continue
+                        i, blk = item
+                        out = map_fns[d](blk)
+                        stats[d] = (out[0], out[1], out[3])
+                        round_outs.append((d, i, out))
+                    if not round_outs:
+                        break
+                    Zb, gb, costb = cross_device_sum(stats, devices)
+                    Z = decay * Z + Zb
+                    g = decay * g + gb
+                    c = centroid_update(Z, g, c)
+                    epoch_cost += float(costb)
+                    for d, i, out in round_outs:
+                        lo = shards[d].row_offset(i)
+                        lab = np.asarray(out[2], dtype=np.int32)
+                        labels_host[lo:lo + lab.shape[0]] = lab
+            finally:
+                for pf in pfs:
+                    pf.close()
+            trajectory.append(epoch_cost)
+            sp.set(inertia=epoch_cost)
 
     c_locals = _device_copies(c, devices)
     inertia = _final_assign_sharded(
         shards, coeffs_d, disc, c_locals, labels_host, policy, prefetch, devices
     )
+    trajectory.append(inertia)
     centroids = jnp.asarray(np.asarray(c))
     return StreamLloydResult(
-        labels_host, centroids, inertia, epochs, (epochs + 1) * store.n
+        labels_host, centroids, inertia, epochs, (epochs + 1) * store.n,
+        tuple(trajectory), (),
     )

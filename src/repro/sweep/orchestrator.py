@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.api.backends import FitContext, ensure_embedding_cache
 from repro.api.model import ClusterModel
 from repro.core.lloyd import kmeanspp_init
@@ -120,13 +121,17 @@ def sweep_estimator(
         x_shape = np.shape(X)
         input_shape = (int(x_shape[0]), int(x_shape[1]))
 
+    metrics_before = obs.snapshot("engine.")
     stage = None
     if checkpoint_dir is not None:
-        stage = load_embed_stage(
-            checkpoint_dir, method=est.method, sweep_key=key,
-            input_shape=input_shape,
-        )
+        with obs.span("sweep.stage_load", cat="sweep"):
+            stage = load_embed_stage(
+                checkpoint_dir, method=est.method, sweep_key=key,
+                input_shape=input_shape,
+            )
+    resumed = stage is not None
     if stage is not None:
+        est._phases = {}
         params, pool, k_seed, y_store = stage
         est.kernel_ = getattr(params, "kernel", None) or est.kernel_
         ctx = FitContext(
@@ -146,11 +151,12 @@ def sweep_estimator(
             iters=est.iters, policy=est.policy, decay=est.decay,
             epochs=est.epochs, mesh=est.mesh,
         )
-        ensure_embedding_cache(ctx, devices=devices)
-        if backend == "local" and ctx.y_array is None:
-            # local backend over a BlockStore input: the cache staged Y to
-            # host blocks; the resident driver wants the concatenated array.
-            ctx.y_array = jnp.asarray(ctx.y_store.materialize())
+        with est._phase("embed_cache"):
+            ensure_embedding_cache(ctx, devices=devices)
+            if backend == "local" and ctx.y_array is None:
+                # local backend over a BlockStore input: the cache staged Y to
+                # host blocks; the resident driver wants the concatenated array.
+                ctx.y_array = jnp.asarray(ctx.y_store.materialize())
         if checkpoint_dir is not None:
             y_store = ctx.y_store
             if y_store is None:  # local backend, array input: stage resident Y
@@ -159,11 +165,12 @@ def sweep_estimator(
                 y_store = BlockStore.from_array(
                     np.asarray(ctx.y_array, dtype=np.float32), est.block_rows
                 )
-            save_embed_stage(
-                checkpoint_dir, params=params, pool=pool, seed_key=k_seed,
-                y_store=y_store, sweep_key=key, method=est.method,
-                input_shape=(store.n, store.d),
-            )
+            with obs.span("sweep.stage_save", cat="sweep"):
+                save_embed_stage(
+                    checkpoint_dir, params=params, pool=pool, seed_key=k_seed,
+                    y_store=y_store, sweep_key=key, method=est.method,
+                    input_shape=(store.n, store.d),
+                )
 
     # Restart r of EVERY k seeds from fold_in(k_seed, r) — the draw fit()
     # uses for its r-th restart, which is what makes the single-candidate
@@ -177,7 +184,10 @@ def sweep_estimator(
         for k in k_grid
     ]
 
-    out = run_sweep(ctx, k_grid, inits, backend=backend, devices=devices)
+    with est._phase("lloyd"):
+        with obs.span("sweep.lloyd", cat="sweep", backend=backend,
+                      candidates=len(k_grid) * R):
+            out = run_sweep(ctx, k_grid, inits, backend=backend, devices=devices)
 
     n = ctx.y_store.n if ctx.y_store is not None else int(ctx.y_array.shape[0])
     models = []
@@ -225,4 +235,19 @@ def sweep_estimator(
     est.n_iter_ = int(out.iters[best_i, best_r])
     est.backend_ = backend
     est._pf_state = None
+    # Sweep-level FitReport: phases (incl. the embed-once cache pass), total
+    # passes/bytes, candidate accounting. Attached to the SweepResult and the
+    # estimator; the best candidate's model carries it too.
+    report = est._attach_report(
+        backend, metrics_before=metrics_before,
+        iters=int(out.iters[best_i, best_r]),
+        rows_seen=int(result.best.meta.rows_seen),
+        extra=dict(
+            sweep=True, k_grid=list(k_grid), restarts=R, resumed=resumed,
+            candidates=len(k_grid) * R, best_k=int(k_grid[best_i]),
+            best_restart=int(best_r),
+            lloyd_passes=int(out.passes),
+        ),
+    )
+    result.report = report
     return result

@@ -50,6 +50,12 @@ class SweepResult:
     best_k_index: int = dataclasses.field(metadata=dict(static=True), default=0)
     best_restart: int = dataclasses.field(metadata=dict(static=True), default=0)
 
+    # `report` (a repro.obs.FitReport for the whole sweep) is attached by the
+    # orchestrator as a PLAIN instance attribute, not a pytree field — it is
+    # measurement, not result state, and does not survive flattening or
+    # persistence (same convention as ClusterModel.report).
+    report = None
+
     # ------------------------------------------------------------ selection
 
     @staticmethod

@@ -85,10 +85,10 @@ class TrainLoop:
                 if self.fault_hook is not None:
                     self.fault_hook(step)
                 batch = next(data)
-                t0 = time.time()
+                t0 = time.perf_counter()
                 params, opt_state, metrics = self.train_step(params, opt_state, batch)
                 jax.block_until_ready(metrics["loss"])
-                dt = time.time() - t0
+                dt = time.perf_counter() - t0
                 self._watchdog(step, dt)
                 if step % self.cfg.log_every == 0 or step == self.cfg.total_steps - 1:
                     rec = {

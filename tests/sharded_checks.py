@@ -50,6 +50,35 @@ def main():
         report[f"{method}_labels_equal"] = bool(np.array_equal(a.labels_, b.labels_))
         report[f"{method}_inertia_rel_err"] = abs(b.inertia_ - a.inertia_) / max(
             abs(a.inertia_), 1e-9)
+
+    # Observability under genuinely-8 producer threads: a traced stream_shard
+    # fit must land one trace lane + one device_blocks counter per producer,
+    # and the concurrently-bumped block counters must account exactly.
+    from repro import obs
+
+    obs.reset_metrics("engine.")
+    obs.clear_trace()
+    obs.enable_tracing()
+    kernel_name, kernel_params, kw = SETUPS["rff"]
+    est = KernelKMeans(4, kernel=Kernel(kernel_name, **kernel_params),
+                       method="rff", iters=6, n_init=1, block_rows=128,
+                       backend="stream_shard", mesh=mesh, **kw)
+    est.fit(store, key=key)
+    obs.disable_tracing()
+    snap = obs.snapshot("engine.")
+    per_dev = {k: v for k, v in snap.items()
+               if k.startswith("engine.device_blocks.")}
+    report["obs_blocks_read"] = snap.get("engine.blocks_read", 0)
+    # the fit's reservoir/seed passes stream on the "default" (driver) lane;
+    # the Lloyd passes add one device lane per producer
+    report["obs_device_counters"] = len(
+        [k for k in per_dev if not k.endswith(".default")])
+    report["obs_per_device_sum_matches"] = (
+        sum(per_dev.values()) == snap.get("engine.blocks_read", -1))
+    report["obs_producer_lanes"] = len(
+        {s.lane for s in obs.TRACER.spans()
+         if s.lane.startswith("producer:") and s.lane != "producer:default"})
+    obs.clear_trace()
     print(json.dumps(report))
 
 

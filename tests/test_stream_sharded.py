@@ -152,6 +152,11 @@ def test_stream_shard_forced_8_devices_subprocess():
         assert report[f"{method}_backend"] == "stream_shard"
         assert report[f"{method}_labels_equal"], report
         assert report[f"{method}_inertia_rel_err"] < 1e-4
+    # observability under 8 real producer threads (see sharded_checks.py)
+    assert report["obs_blocks_read"] > 0
+    assert report["obs_device_counters"] == 8, report
+    assert report["obs_per_device_sum_matches"], report
+    assert report["obs_producer_lanes"] == 8, report
 
 
 def test_stream_shard_label_identity_under_pallas_policy():
@@ -247,6 +252,66 @@ def test_minibatch_sharded_quality_and_coverage():
 
 
 # ------------------------------------------------------------ auto dispatch
+
+
+# ------------------------------------------------------------ observability
+
+
+def test_sharded_metrics_account_for_every_block():
+    """Metrics-registry thread safety under the executor's D concurrent
+    producer threads: the engine counters must account for EVERY block exactly
+    (no lost updates), and the per-device breakdown must sum to the total."""
+    from repro import obs
+
+    store, _ = gaussian_blobs_blocks(0, 2048, 8, 4, block_rows=128)
+    shards = [store.shard(d, D) for d in range(D)]
+    fn = jax.jit(lambda x: x.sum())
+    before = obs.snapshot("engine.")
+    out = sharded_map_reduce(
+        shards, [fn] * D, lambda a, b: a + b,
+        [jnp.zeros(())] * D, devices=DEVICES,
+    )
+    seen = obs.delta(before, obs.snapshot("engine."))
+    total = sum(s.num_blocks for s in shards)
+    assert seen["engine.blocks_read"] == total == store.num_blocks
+    per_dev = {k: v for k, v in seen.items()
+               if k.startswith("engine.device_blocks.") and v}
+    assert len(per_dev) == D  # one active lane counter per producer
+    assert sum(per_dev.values()) == total
+    assert seen["engine.bytes_h2d"] == store.n * store.d * 4
+    assert seen["engine.map_dispatches"] == total
+    assert len(out) == D
+
+
+@multi_device
+def test_traced_stream_shard_fit_emits_device_lanes(tmp_path):
+    """Acceptance: a tracing-enabled KernelKMeans.fit on stream_shard writes a
+    Chrome trace-event file that the CI schema gate accepts with DISTINCT
+    lanes for >= 2 device producers."""
+    from repro import obs
+
+    store, _ = gaussian_blobs_blocks(0, 1200, 8, 4, block_rows=128, separation=4.0)
+    obs.clear_trace()
+    obs.enable_tracing()
+    try:
+        est = KernelKMeans(4, kernel=Kernel("rbf", gamma=0.1), method="rff",
+                           m=64, iters=6, n_init=1, block_rows=128,
+                           backend="stream_shard", mesh=_mesh())
+        est.fit(store, key=jax.random.PRNGKey(7))
+        path = obs.write_chrome_trace(tmp_path / "shard_trace.json")
+    finally:
+        obs.disable_tracing()
+        obs.clear_trace()
+
+    sys.path.insert(0, str(HERE.parent / "benchmarks"))
+    try:
+        import check_bench
+        lanes = check_bench.check_trace(path, min_lanes=2)
+    finally:
+        sys.path.pop(0)
+    producers = {l for l in lanes if l.startswith("producer:")}
+    assert len(producers) >= 2, lanes  # one lane per device producer
+    assert "main" in lanes  # the driver lane carries pass./lloyd. spans
 
 
 def test_auto_prefers_stream_shard_only_with_multi_device_mesh():
