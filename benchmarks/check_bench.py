@@ -99,6 +99,27 @@ def check_stream_shard(path: Path, d: dict):
         _fail(path, f"min_label_agreement_vs_1dev out of [0, 1]: {agree}")
 
 
+def check_pool(path: Path, d: dict):
+    scenarios = _need(path, d, "scenarios", dict)
+    for name in ("fault_free", "killed_1", "killed_2", "straggler"):
+        if name not in scenarios:
+            _fail(path, f"scenarios missing {name!r}")
+        entry = scenarios[name]
+        _positive(path, entry, "fit_s", "rows_per_s", "tasks_completed")
+        if entry.get("labels_identical_to_fault_free") is not True:
+            _fail(path, f"scenarios.{name}.labels_identical_to_fault_free "
+                        "must be true")
+    if scenarios["killed_1"].get("worker_deaths", 0) < 1:
+        _fail(path, "killed_1 recorded no worker deaths")
+    if d.get("labels_identical") is not True:
+        _fail(path, "labels_identical must be true")
+    ratio = _need(path, d, "straggler_throughput_ratio", (int, float))
+    # the acceptance gate rides in the JSON: a full-size straggler run must
+    # keep >= 70% of fault-free throughput (stealing absorbs the slow device)
+    if not d["config"].get("smoke") and ratio < 0.7:
+        _fail(path, f"straggler throughput ratio {ratio:.2f} < 0.7")
+
+
 def check_embed(path: Path, d: dict):
     members = _need(path, d, "members", dict)
     if not members:
@@ -200,6 +221,7 @@ FAMILIES = {
     "BENCH_stream.json": check_stream,
     "BENCH_api.json": check_api,
     "BENCH_stream_shard.json": check_stream_shard,
+    "BENCH_pool.json": check_pool,
     "BENCH_embed.json": check_embed,
     "BENCH_sweep.json": check_sweep,
 }

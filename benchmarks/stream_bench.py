@@ -162,6 +162,108 @@ def bench_sharded(args, store, kern, policy, config):
     return result
 
 
+def bench_chaos(args, store, kern, policy, config):
+    """BENCH_pool.json: pool-scheduler fits under injected faults.
+
+    Every scenario runs the UNCHANGED public estimator (backend=stream_shard,
+    scheduler="pool") under an ambient ChaosPlan and must return labels
+    bitwise identical to the fault-free pool fit — the deterministic
+    duplicate-drop merge, at benchmark scale. The throughput claim: a 10x
+    per-block straggler on one device loses < 30% of fault-free throughput,
+    because idle workers steal its unread blocks and speculatively re-execute
+    its in-flight one (gated when not --smoke)."""
+    from jax.sharding import Mesh
+
+    from repro import pool as pool_mod
+
+    devs = jax.local_devices()
+    D = len(devs)
+    if D < 2:
+        raise SystemExit(
+            "--chaos needs >1 device for a surviving worker: pass "
+            "--force-devices 8 (or run under a multi-device runtime)")
+    mesh = Mesh(np.array(devs).reshape(D, 1), ("data", "model"))
+    est = KernelKMeans(
+        args.k, kernel=kern, backend="stream_shard", scheduler="pool",
+        l=args.l, m=args.m, iters=args.iters, n_init=1, policy=policy,
+        mesh=mesh,
+    )
+    key = jax.random.PRNGKey(3)
+    est.fit(store, key=key)  # warm the per-device compiles, fault-free
+
+    delay_s = 10.0 * args.ingest_delay_ms / 1e3 or 0.03
+    scenarios = {
+        "fault_free": None,
+        "killed_1": lambda: pool_mod.ChaosPlan().kill(0, after_blocks=2),
+        "killed_2": lambda: (pool_mod.ChaosPlan()
+                             .kill(0, after_blocks=2)
+                             .kill(D // 2, after_blocks=3)),
+        "straggler": lambda: pool_mod.ChaosPlan().delay(0, delay_s),
+    }
+    per = {}
+    base_labels = None
+    for name, make_plan in scenarios.items():
+        before = obs.snapshot("pool.")
+        t0 = time.perf_counter()
+        if make_plan is None:
+            fit = est.fit(store, key=key)
+        else:
+            with pool_mod.inject(make_plan()):
+                fit = est.fit(store, key=key)
+        dt = time.perf_counter() - t0
+        seen = obs.delta(before, obs.snapshot("pool."))
+        rows = args.n * (fit.n_iter_ + 1) / dt
+        if base_labels is None:
+            base_labels = fit.labels_
+        identical = bool(np.array_equal(fit.labels_, base_labels))
+        if not identical:  # explicit raise: must survive python -O
+            raise AssertionError(
+                f"pool/{name}: labels diverged from the fault-free pool fit")
+        per[name] = {
+            "fit_s": dt, "rows_per_s": rows, "iters": fit.n_iter_,
+            "inertia": fit.inertia_,
+            "labels_identical_to_fault_free": identical,
+            "tasks_completed": seen.get("pool.tasks_completed", 0),
+            "tasks_requeued": seen.get("pool.tasks_requeued", 0),
+            "tasks_stolen": seen.get("pool.tasks_stolen", 0),
+            "tasks_speculated": seen.get("pool.tasks_speculated", 0),
+            "duplicates_dropped": seen.get("pool.duplicates_dropped", 0),
+            "worker_deaths": seen.get("pool.worker_deaths", 0),
+        }
+        print(f"[stream-bench] pool/{name}: {fit.n_iter_} iters in {dt:.1f}s "
+              f"({rows/1e6:.2f}M rows/s, deaths "
+              f"{per[name]['worker_deaths']:.0f}, stolen "
+              f"{per[name]['tasks_stolen']:.0f}, speculated "
+              f"{per[name]['tasks_speculated']:.0f})")
+    ff = per["fault_free"]["rows_per_s"]
+    straggler_ratio = per["straggler"]["rows_per_s"] / ff
+    killed_ratio = per["killed_1"]["rows_per_s"] / ff
+    print(f"[stream-bench] pool throughput vs fault-free: straggler "
+          f"{straggler_ratio:.2f}x, killed-1 {killed_ratio:.2f}x "
+          f"(gate: straggler >= 0.7)")
+    if not args.smoke and straggler_ratio < 0.7:  # must survive python -O
+        raise AssertionError(
+            f"straggler throughput ratio {straggler_ratio:.2f} below the 0.7 "
+            "gate: stealing/speculation is not absorbing the slow device")
+    result = {
+        "config": config | {"devices": D, "scheduler": "pool",
+                            "straggler_delay_s": delay_s,
+                            "smoke": bool(args.smoke)},
+        "scenarios": per,
+        "labels_identical": True,
+        "straggler_throughput_ratio": straggler_ratio,
+        "killed_1_throughput_ratio": killed_ratio,
+        "note": "rows/s = n * (iters + 1) / wall over the full pool-scheduled "
+                "fit (warm; includes the identical seeding phase). Chaos "
+                "plans are injected around the UNCHANGED public estimator; "
+                "labels_identical asserts the duplicate-drop block-ordered "
+                "merge returns the fault-free answer under every scenario",
+    }
+    Path(args.chaos_out).write_text(json.dumps(result, indent=2))
+    print(f"[stream-bench] wrote {args.chaos_out}")
+    return result
+
+
 def measure_disabled_overhead(blocks: int, pass_s: float) -> float:
     """The tracing-disabled overhead gate (ISSUE 6 acceptance): the per-call
     cost of a DISABLED span times the spans one engine pass issues must stay
@@ -197,7 +299,8 @@ def write_trace_outputs(trace_path: str) -> None:
     the engine/backend metric snapshot next to it (<trace>.metrics.json)."""
     obs.write_trace(trace_path)
     metrics_path = Path(trace_path).with_suffix(".metrics.json")
-    metrics = obs.snapshot("engine.") | obs.snapshot("backend.")
+    metrics = (obs.snapshot("engine.") | obs.snapshot("backend.")
+               | obs.snapshot("pool."))
     metrics_path.write_text(json.dumps(metrics, indent=2, sort_keys=True))
     n_spans = len(obs.TRACER.spans())
     print(f"[stream-bench] wrote {n_spans} spans across "
@@ -222,6 +325,11 @@ def main(argv=None):
                     help="also sweep backend=stream_shard over device counts")
     ap.add_argument("--sharded-only", action="store_true",
                     help="run ONLY the sharded sweep")
+    ap.add_argument("--chaos", action="store_true",
+                    help="also bench the pool scheduler under injected "
+                         "faults (killed producers, straggler) -> BENCH_pool")
+    ap.add_argument("--chaos-only", action="store_true",
+                    help="run ONLY the chaos bench")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: small n/blocks, no modeled ingest "
                          "latency — keeps the driver exercisable on every PR; "
@@ -234,6 +342,8 @@ def main(argv=None):
     ap.add_argument("--api-out", default=str(Path(__file__).parent.parent / "BENCH_api.json"))
     ap.add_argument("--shard-out",
                     default=str(Path(__file__).parent.parent / "BENCH_stream_shard.json"))
+    ap.add_argument("--chaos-out",
+                    default=str(Path(__file__).parent.parent / "BENCH_pool.json"))
     args = ap.parse_args(argv)
     if args.trace:
         obs.clear_trace()
@@ -283,10 +393,17 @@ def main(argv=None):
 
     if args.sharded or args.sharded_only:
         sharded_result = bench_sharded(args, store, kern, policy, config)
-        if args.sharded_only:
+        if args.sharded_only and not (args.chaos or args.chaos_only):
             if args.trace:
                 write_trace_outputs(args.trace)
             return sharded_result
+
+    if args.chaos or args.chaos_only:
+        chaos_result = bench_chaos(args, store, kern, policy, config)
+        if args.chaos_only or args.sharded_only:
+            if args.trace:
+                write_trace_outputs(args.trace)
+            return chaos_result
 
     # Engine micro-bench: coefficients fit once on a reservoir sample.
     sample = jnp.asarray(reservoir_sample(store, 4096, seed=1))

@@ -57,6 +57,21 @@ class FitContext:
     # array instead of re-embedding X on every pass.
     y_store: BlockStore | None = None  # host-staged Y blocks (stream backends)
     y_array: Array | None = None  # resident Y (local backend)
+    # Control plane (stream backends): "lockstep" or "pool" pass scheduling
+    # for stream_shard, and the root directory for mid-fit Lloyd checkpoints
+    # (per-restart subdirs; None = no checkpointing).
+    scheduler: str = "lockstep"
+    checkpoint_dir: Any | None = None
+
+
+def _restart_ckpt(ctx: FitContext, r: int):
+    """Per-restart checkpoint subdir: restarts have different inits (distinct
+    fingerprints), so sharing one state dir would thrash keep_last."""
+    if ctx.checkpoint_dir is None:
+        return None
+    from pathlib import Path
+
+    return Path(ctx.checkpoint_dir) / f"restart_{r}"
 
 
 def ensure_embedding_cache(ctx: FitContext, *, devices=None) -> FitContext:
@@ -114,8 +129,9 @@ def _run_restarts(ctx: FitContext, run_one) -> BackendFit:
     """The shared restart loop: run every init, keep the lowest-inertia fit,
     total rows_seen over ALL restarts (it is documented as total rows visited
     during clustering, not the winner's). One place to change restart
-    semantics for every backend."""
-    fits = [run_one(init) for init in ctx.inits]
+    semantics for every backend. `run_one(init, r)` gets the restart index so
+    checkpointing backends can key per-restart state dirs."""
+    fits = [run_one(init, r) for r, init in enumerate(ctx.inits)]
     best = min(fits, key=lambda f: f.inertia)
     return dataclasses.replace(best, rows_seen=sum(f.rows_seen for f in fits))
 
@@ -146,7 +162,7 @@ def fit_local(ctx: FitContext) -> BackendFit:
         n = int(X.shape[0])
         Y = embed.transform(ctx.params, X, ctx.policy)
 
-    def run_one(init):
+    def run_one(init, r):
         res = lloyd(
             Y, ctx.k, discrepancy=ctx.params.discrepancy, iters=ctx.iters,
             init=init, policy=ctx.policy,
@@ -186,8 +202,9 @@ def fit_stream(ctx: FitContext) -> BackendFit:
     """Exact out-of-core Lloyd: identical update rule (and fixed point) to
     `local`, memory O(block). A filled embed-cache routes the iterations over
     the staged Y blocks instead of re-embedding X every pass."""
-    return _run_restarts(ctx, lambda init: _from_stream(ooc_lloyd(
+    return _run_restarts(ctx, lambda init, r: _from_stream(ooc_lloyd(
         k=ctx.k, iters=ctx.iters, init=init, policy=ctx.policy,
+        checkpoint_dir=_restart_ckpt(ctx, r),
         **_stream_source(ctx),
     )))
 
@@ -199,13 +216,18 @@ def fit_stream_shard(ctx: FitContext) -> BackendFit:
     round-robin block shard `store.shard(d, D)` through its own producer; per
     iteration the per-device (Z, g) are reduced once (the MapReduce shuffle)
     and `centroid_update` runs once. Same fixed point as `stream` — identical
-    labels from the same init — at memory O(block) PER DEVICE."""
+    labels from the same init — at memory O(block) PER DEVICE.
+
+    ctx.scheduler routes the passes: "lockstep" (default) or "pool" — the
+    fault-tolerant repro.pool control plane (leases, requeue, stealing)."""
     from repro.stream.sharded import shard_devices
 
     devices = shard_devices(ctx.mesh)
-    return _run_restarts(ctx, lambda init: _from_stream(ooc_lloyd(
+    return _run_restarts(ctx, lambda init, r: _from_stream(ooc_lloyd(
         k=ctx.k, iters=ctx.iters, init=init, policy=ctx.policy,
-        devices=devices, **_stream_source(ctx),
+        devices=devices, scheduler=ctx.scheduler,
+        checkpoint_dir=_restart_ckpt(ctx, r),
+        **_stream_source(ctx),
     )))
 
 
@@ -213,9 +235,10 @@ def fit_stream_shard(ctx: FitContext) -> BackendFit:
 def fit_minibatch(ctx: FitContext) -> BackendFit:
     """Single-pass streaming Lloyd with decayed (Z, g): clustering cost
     decoupled from n, for larger-than-disk / continuous-ingest streams."""
-    return _run_restarts(ctx, lambda init: _from_stream(minibatch_lloyd(
+    return _run_restarts(ctx, lambda init, r: _from_stream(minibatch_lloyd(
         k=ctx.k, decay=ctx.decay, epochs=ctx.epochs, init=init,
-        policy=ctx.policy, **_stream_source(ctx),
+        policy=ctx.policy, checkpoint_dir=_restart_ckpt(ctx, r),
+        **_stream_source(ctx),
     )))
 
 
@@ -242,7 +265,7 @@ def fit_shard_map(ctx: FitContext) -> BackendFit:
 
         return block_cost(Y, c, disc)
 
-    def run_one(init):
+    def run_one(init, r):
         labels, centroids, costs = distributed_lloyd(
             mesh, Y, init, k=ctx.k, discrepancy=disc, iters=ctx.iters,
             policy=ctx.policy, return_costs=True,

@@ -78,6 +78,11 @@ class KernelKMeans:
     seed_sample:     rows of the landmark sample used for k-means++ seeding.
     policy:          `ComputePolicy` (pallas routing, precision, prefetch).
     mesh:            jax Mesh for the shard_map / stream_shard backends.
+    scheduler:       stream_shard pass scheduling: "lockstep" (fixed
+                     block->device placement, on-mesh reduce) or "pool" (the
+                     fault-tolerant repro.pool control plane: leased
+                     reassignable block tasks, straggler stealing, identical
+                     labels — see DESIGN.md section 14).
     random_state:    seed used when fit() is not given an explicit key.
 
     After fit: `model_` (the ClusterModel artifact), `labels_`, `inertia_`,
@@ -108,6 +113,7 @@ class KernelKMeans:
         seed_sample: int = 1024,
         policy: ComputePolicy | None = None,
         mesh: Any | None = None,
+        scheduler: str = "lockstep",
         random_state: int = 0,
     ):
         self.k = int(k)
@@ -123,6 +129,7 @@ class KernelKMeans:
         self.seed_sample = seed_sample
         self.policy = policy if policy is not None else ComputePolicy()
         self.mesh = mesh
+        self.scheduler = scheduler
         self.random_state = random_state
 
         self.model_: ClusterModel | None = None
@@ -238,7 +245,8 @@ class KernelKMeans:
 
         return _Timer()
 
-    def _prepare(self, X, key: Array, backend_name: str) -> FitContext:
+    def _prepare(self, X, key: Array, backend_name: str,
+                 checkpoint_dir=None) -> FitContext:
         """Phase 1, shared by every backend: blocked view, landmark sample,
         embedding fit, k-means++ seeding."""
         store, array, params, pool, k_seed = self._phase1(X, key, backend_name)
@@ -254,17 +262,27 @@ class KernelKMeans:
         return FitContext(
             store=store, array=array, params=params, k=self.k, inits=inits,
             iters=self.iters, policy=self.policy, decay=self.decay,
-            epochs=self.epochs, mesh=self.mesh,
+            epochs=self.epochs, mesh=self.mesh, scheduler=self.scheduler,
+            checkpoint_dir=checkpoint_dir,
         )
 
-    def fit(self, X, y=None, *, key: Array | None = None) -> "KernelKMeans":
-        """Fit on an in-memory array or a BlockStore; backend per `backend=`."""
+    def fit(self, X, y=None, *, key: Array | None = None,
+            checkpoint_dir: str | Path | None = None) -> "KernelKMeans":
+        """Fit on an in-memory array or a BlockStore; backend per `backend=`.
+
+        checkpoint_dir= turns on mid-fit Lloyd checkpoints for the streaming
+        backends: iteration-granular (epoch-granular for minibatch) state is
+        saved crash-atomically under `checkpoint_dir/restart_<r>/`, and a
+        killed fit re-invoked with the same key and checkpoint_dir resumes
+        mid-Lloyd (phase 1 re-runs — it's cheap and key-deterministic — but no
+        completed Lloyd iteration is repeated; pair with `sweep`'s staged
+        embedding or a Y-block store to also skip re-embedding)."""
         key = key if key is not None else jax.random.PRNGKey(self.random_state)
         name = self._choose_backend(X)
         backend = get_backend(name)  # fail fast, before the embedding fit
         get_embedding(self.method)  # likewise: reject typos before streaming data
         metrics_before = obs.snapshot("engine.")
-        ctx = self._prepare(X, key, name)
+        ctx = self._prepare(X, key, name, checkpoint_dir)
         with self._phase("lloyd"):
             out = backend(ctx)
         self._finish(ctx.params, out, name)

@@ -17,13 +17,15 @@ it); in this single-process container every array is fully addressable.
 """
 from __future__ import annotations
 
+import contextlib
+import hashlib
 import json
 import os
 import shutil
 import tempfile
 import threading
 from pathlib import Path
-from typing import Any
+from typing import Any, Iterator
 
 import jax
 import numpy as np
@@ -31,6 +33,36 @@ import numpy as np
 Array = jax.Array
 
 _SEP = "/"
+
+
+@contextlib.contextmanager
+def atomic_publish_dir(parent: str | Path, final_name: str) -> Iterator[Path]:
+    """Crash-atomic directory publication — THE staging discipline of this
+    repo, shared by checkpoints, the sweep's embed stage, and mid-fit Lloyd
+    state. Yields a tmp dir to fill; on clean exit the tmp dir is os.replace'd
+    onto `parent/final_name` (readers see the old version or the new one,
+    never a partial write); on error the tmp dir is removed."""
+    parent = Path(parent)
+    parent.mkdir(parents=True, exist_ok=True)
+    tmp = Path(tempfile.mkdtemp(prefix=f".tmp_{final_name}_", dir=parent))
+    try:
+        yield tmp
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    final = parent / final_name
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+
+
+def fsync_json(path: str | Path, obj: Any) -> None:
+    """Write strict JSON and fsync before returning — the manifest must be
+    durable before the directory rename that publishes it."""
+    with Path(path).open("w") as f:
+        json.dump(obj, f)
+        f.flush()
+        os.fsync(f.fileno())
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -54,10 +86,8 @@ def save(
 ) -> Path:
     """Atomically write `trees` (e.g. {"params": ..., "opt_state": ...})."""
     ckpt_dir = Path(ckpt_dir)
-    ckpt_dir.mkdir(parents=True, exist_ok=True)
     final = ckpt_dir / f"step_{step:08d}"
-    tmp = Path(tempfile.mkdtemp(prefix=f".tmp_step_{step}_", dir=ckpt_dir))
-    try:
+    with atomic_publish_dir(ckpt_dir, final.name) as tmp:
         manifest = {"step": step, "trees": {}, "meta": extra_meta or {}}
         for name, tree in trees.items():
             flat = _flatten(tree)
@@ -66,16 +96,7 @@ def save(
                 k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                 for k, v in flat.items()
             }
-        with (tmp / "manifest.json").open("w") as f:
-            json.dump(manifest, f)
-            f.flush()
-            os.fsync(f.fileno())
-        if final.exists():
-            shutil.rmtree(final)
-        os.replace(tmp, final)
-    except BaseException:
-        shutil.rmtree(tmp, ignore_errors=True)
-        raise
+        fsync_json(tmp / "manifest.json", manifest)
     # `latest` pointer written last: readers never see a partial checkpoint
     latest_tmp = ckpt_dir / ".latest.tmp"
     latest_tmp.write_text(final.name)
@@ -353,6 +374,105 @@ def load_sweep_result(ckpt_dir: str | Path, *, step: int | None = None):
         best_k_index=int(meta["best"][0]),
         best_restart=int(meta["best"][1]),
     )
+
+
+# --------------------------------------------------------------------------
+# Mid-fit Lloyd checkpoints (control-plane recovery; DESIGN.md section 14).
+#
+# A killed fit's dominant sunk cost is the embedding, not the iterations —
+# so the state saved after every Lloyd iteration is tiny: iteration number,
+# centroids, labels (the early-stop `changed` flag needs last labels to stay
+# exact on resume), cost trajectory / centroid shifts, and for minibatch the
+# decayed (Z, g) sufficient statistics. Deliberately NO mesh or scheduler
+# info: a fit saved under 8 devices resumes under 1 (elastic restore), and a
+# lockstep fit can resume under the pool scheduler.
+
+LLOYD_STATE_DIR = "lloyd_state"
+
+
+def lloyd_fingerprint(*, kind: str, n: int, d: int, k: int, m: int,
+                      init, decay: float | None = None) -> dict:
+    """Identity of a Lloyd run for resume-matching: problem shape plus a hash
+    of the exact init centroids. Same estimator key => same init => match;
+    anything else re-runs from scratch rather than adopting foreign state."""
+    raw = np.ascontiguousarray(np.asarray(init, np.float32)).tobytes()
+    fp = {
+        "kind": kind, "n": int(n), "d": int(d), "k": int(k), "m": int(m),
+        "init_sha": hashlib.sha256(raw).hexdigest()[:16],
+    }
+    if decay is not None:
+        fp["decay"] = float(decay)
+    return fp
+
+
+def save_lloyd_state(
+    ckpt_dir: str | Path,
+    *,
+    step: int,
+    centroids,
+    labels,
+    trajectory,
+    shifts,
+    changed: bool,
+    fingerprint: dict,
+    devices_used: int,
+    stats: dict | None = None,
+    keep_last: int = 2,
+) -> Path:
+    """Crash-atomically persist the state after `step` completed iterations
+    (epochs for minibatch). `stats` carries minibatch's decayed {"Z", "g",
+    "seen_cost"}. Reuses `save`'s step/manifest/latest discipline, so a kill
+    at any point leaves the previous iteration's state loadable."""
+    from repro import obs
+
+    trees: dict[str, Any] = {
+        "state": {
+            "centroids": np.asarray(centroids, np.float32),
+            "labels": np.asarray(labels, np.int32),
+            "trajectory": np.asarray(trajectory, np.float64),
+            "shifts": np.asarray(shifts, np.float64),
+        }
+    }
+    if stats is not None:
+        trees["stats"] = {k: np.asarray(v) for k, v in stats.items()}
+    meta = {"lloyd": {"fingerprint": fingerprint, "changed": bool(changed),
+                      "devices_used": int(devices_used)}}
+    out = save(Path(ckpt_dir) / LLOYD_STATE_DIR, step, trees,
+               keep_last=keep_last, extra_meta=meta)
+    obs.counter("pool.ckpt_saves").inc()
+    return out
+
+
+def load_lloyd_state(ckpt_dir: str | Path, *, fingerprint: dict) -> dict | None:
+    """The latest saved Lloyd state under `ckpt_dir`, or None when absent or
+    fingerprint-mismatched (different data/k/init: start fresh, never adopt
+    foreign centroids). Host-side load — no device placement is recorded or
+    imposed; the resuming driver puts arrays wherever its mesh wants them."""
+    state_dir = Path(ckpt_dir) / LLOYD_STATE_DIR
+    step = latest_step(state_dir)
+    if step is None:
+        return None
+    d = state_dir / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    meta = manifest.get("meta", {}).get("lloyd")
+    if not meta or meta.get("fingerprint") != fingerprint:
+        return None
+    data = np.load(d / "state.npz")
+    out = {
+        "step": int(manifest["step"]),
+        "changed": bool(meta["changed"]),
+        "devices_used": int(meta.get("devices_used", 0)),
+        "centroids": np.asarray(data["centroids"], np.float32),
+        "labels": np.asarray(data["labels"], np.int32),
+        "trajectory": [float(v) for v in data["trajectory"]],
+        "shifts": [float(v) for v in data["shifts"]],
+        "stats": None,
+    }
+    stats_path = d / "stats.npz"
+    if stats_path.exists():
+        sdata = np.load(stats_path)
+        out["stats"] = {k: np.asarray(sdata[k]) for k in sdata.files}
+    return out
 
 
 def save_clustering_model(ckpt_dir: str | Path, coeffs, centroids, *, step: int = 0) -> Path:

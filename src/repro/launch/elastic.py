@@ -2,9 +2,25 @@
 
 Checkpoints carry no device placement (manifest = logical shapes only), so
 elasticity is just: build the new mesh, rebuild shardings from the SAME rules,
-restore with device_put onto them. `reshard_restore` is the one-call version the
-launcher uses after detecting a changed device count (e.g. a lost node =>
-fall back from (4, 2) to (2, 2) host mesh; on a pod, from 2 pods to 1).
+restore with device_put onto them. `reshard_restore` is the one-call version
+the train launcher uses after detecting a changed device count (e.g. a lost
+node => fall back from (4, 2) to (2, 2) host mesh; on a pod, from 2 pods to 1).
+
+Beyond the train stack, the same discipline covers the clustering artifacts:
+
+  * `restore_cluster_model` / `restore_sweep_result` — mesh-agnostic loads of
+    the `ClusterModel` / `SweepResult` checkpoints (arrays land on whatever
+    the current default device is; centroids and embedding params are small
+    and replicate wherever the caller's mesh wants them);
+  * `resume_lloyd_state` — the pool's recovery hook: adopt a mid-fit Lloyd
+    checkpoint regardless of the worker fleet that wrote it. A fit saved
+    under 8 pool workers resumes under 3 (or under the lockstep scheduler on
+    one device) because the state is pure host arrays keyed by iteration;
+    when the device count changed between save and resume the adoption is
+    counted as `pool.elastic_resumes`.
+
+Heavy train-stack imports live inside `reshard_restore` so the clustering
+paths (and the stream drivers' resume hook) don't drag in models/optim.
 """
 from __future__ import annotations
 
@@ -12,19 +28,16 @@ from pathlib import Path
 
 import jax
 
-from repro.configs.base import ArchConfig
 from repro.distributed import checkpoint as ckpt_lib
-from repro.distributed import sharding as shd
-from repro.models import model as model_lib
-from repro.models.common import Policy
-from repro.optim import adamw
-from repro.optim.adamw import AdamWConfig
 
 
-def reshard_restore(ckpt_dir: str | Path, cfg: ArchConfig, policy: Policy,
-                    opt_cfg: AdamWConfig, mesh):
+def reshard_restore(ckpt_dir: str | Path, cfg, policy, opt_cfg, mesh):
     """Returns (step, params, opt_state) placed on `mesh` regardless of the mesh
     the checkpoint was written under."""
+    from repro.models import model as model_lib
+    from repro.optim import adamw
+    from repro.distributed import sharding as shd
+
     params_t = jax.eval_shape(lambda k: model_lib.init(k, cfg, policy), jax.random.PRNGKey(0))
     opt_t = jax.eval_shape(lambda: adamw.init(params_t, opt_cfg))
     p_sh = shd.to_shardings(mesh, shd.param_pspecs(cfg, params_t))
@@ -34,3 +47,36 @@ def reshard_restore(ckpt_dir: str | Path, cfg: ArchConfig, policy: Policy,
         shardings={"params": p_sh, "opt_state": o_sh},
     )
     return step, trees["params"], trees["opt_state"]
+
+
+def restore_cluster_model(ckpt_dir: str | Path, *, step: int | None = None):
+    """Mesh-agnostic `ClusterModel` restore: the artifact records no
+    placement, so this works on any device count — including one that differs
+    from the fleet that fit the model."""
+    return ckpt_lib.load_cluster_model(ckpt_dir, step=step)
+
+
+def restore_sweep_result(ckpt_dir: str | Path, *, step: int | None = None):
+    """Mesh-agnostic `SweepResult` restore (see `restore_cluster_model`)."""
+    return ckpt_lib.load_sweep_result(ckpt_dir, step=step)
+
+
+def resume_lloyd_state(ckpt_dir: str | Path, *, fingerprint: dict,
+                       devices_used: int | None = None):
+    """Adopt a mid-fit Lloyd checkpoint if one matches `fingerprint`, else
+    None. Counts every adoption (`pool.ckpt_resumes`) and flags elastic ones
+    (`pool.elastic_resumes`: the device count changed between save and
+    resume — the state is placement-free, so adoption proceeds anyway).
+    `devices_used` is the resuming run's worker count (defaults to the local
+    device count)."""
+    from repro import obs
+
+    state = ckpt_lib.load_lloyd_state(ckpt_dir, fingerprint=fingerprint)
+    if state is None:
+        return None
+    obs.counter("pool.ckpt_resumes").inc()
+    saved = int(state.get("devices_used", 0))
+    now = int(devices_used) if devices_used else jax.local_device_count()
+    if saved and saved != now:
+        obs.counter("pool.elastic_resumes").inc()
+    return state

@@ -1,0 +1,22 @@
+"""`repro.pool` — master/worker block-task control plane for sharded fits.
+
+Turns the fixed block→device placement of the lockstep sharded executor into
+leased, reassignable tasks: per-device worker loops pull blocks from a
+central `TaskPool` with heartbeats, lease timeouts, failed-worker requeue,
+straggler stealing and speculative backups, while a duplicate-drop,
+block-id-ordered merge keeps the fit's labels identical to the fault-free
+run. `chaos` injects kills/delays for CI. See DESIGN.md §14.
+"""
+from repro.pool.chaos import ChaosPlan, active, inject
+from repro.pool.executor import pool_map_reduce
+from repro.pool.tasks import Lease, TaskPool, WorkerKilled
+
+__all__ = [
+    "ChaosPlan",
+    "Lease",
+    "TaskPool",
+    "WorkerKilled",
+    "active",
+    "inject",
+    "pool_map_reduce",
+]

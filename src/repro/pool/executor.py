@@ -1,0 +1,153 @@
+"""Per-device worker loops over a TaskPool — the worker half of the plane.
+
+`pool_map_reduce(store, map_fns, devices=...)` runs one pass over every block
+of `store`: D worker threads (one per device) pull leased block tasks from a
+shared `TaskPool`, read the block from the host store (through the chaos
+harness, where injected faults surface), `device_put` it to their own device,
+run their per-device jitted map_fn, fetch the small per-block output back to
+host, and hand it to the pool keyed by block id.
+
+Contrast with the lockstep executor (`repro.stream.sharded
+.sharded_map_reduce`): there the block→device placement is fixed at fit start
+and every device must finish its shard before the cross-device reduction can
+run — one dead producer hangs the pass, one straggler gates it. Here
+placement is only *affinity*: any worker can execute any block, dead workers'
+tasks are requeued, stragglers' unread blocks are stolen, and in-flight
+leases are speculatively backed up, so the pass completes as long as one
+worker survives.
+
+The price is that partial stats come back to host per block instead of being
+reduced on device. The payoff is determinism under faults: the caller merges
+`pool_map_reduce`'s outputs in global block-id order with host float32 sums,
+so the merged result is bitwise identical no matter the schedule, retries, or
+injected chaos (duplicates are dropped at the pool; every execution of a
+block is the same pure function of the same bits).
+"""
+from __future__ import annotations
+
+import atexit
+import threading
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+
+from repro import obs
+from repro.pool import chaos
+from repro.pool.tasks import TaskPool
+from repro.stream.blockstore import BlockStore
+from repro.stream.engine import _count_pass
+
+
+# Workers whose pass already ended (their last read was re-executed elsewhere
+# and they were still draining when the pass returned). They exit on their own
+# within one block execution; joining them before interpreter teardown keeps
+# them out of XLA during shutdown.
+_stale_lock = threading.Lock()
+_stale: list[threading.Thread] = []
+
+
+def drain_stale(timeout: float = 10.0) -> None:
+    with _stale_lock:
+        threads, _stale[:] = list(_stale), []
+    deadline = time.monotonic() + timeout
+    for t in threads:
+        t.join(timeout=max(0.0, deadline - time.monotonic()))
+
+
+atexit.register(drain_stale)
+
+
+def _worker(pool: TaskPool, store: BlockStore, map_fn, worker: int, device,
+            emit: Callable[[int, Any], None] | None):
+    obs.set_lane(f"worker:{device}")
+    blocks = obs.counter("engine.blocks_read")
+    dev_blocks = obs.counter(f"engine.device_blocks.{device}")
+    nbytes = obs.counter("engine.bytes_h2d")
+    dispatches = obs.counter("engine.map_dispatches")
+    plan = chaos.active()
+    try:
+        while True:
+            task = pool.acquire(worker)
+            if task is None:
+                return
+            with obs.span("pool.lease", cat="pool", block=task, worker=worker):
+                if plan is not None:
+                    plan.before_read(worker)
+                blk = store.get(task)
+                blocks.inc()
+                dev_blocks.inc()
+                nbytes.inc(getattr(blk, "nbytes", 0))
+                dev = jax.device_put(blk, device)
+                out = map_fn(dev)
+                dispatches.inc()
+                host = jax.device_get(out)
+            if pool.complete(worker, task, host) and emit is not None:
+                emit(task, host)
+    except BaseException as e:  # noqa: BLE001 - surfaced via pool.results()
+        pool.fail_worker(worker, e)
+
+
+def pool_map_reduce(
+    store: BlockStore,
+    map_fns: Sequence[Callable[[Any], Any]],
+    *,
+    devices: Sequence,
+    lease_timeout: float = 60.0,
+    emit: Callable[[int, Any], None] | None = None,
+    label: str = "pool_pass",
+) -> list[Any]:
+    """One fault-tolerant pass of `map_fns[w]` over every block of `store`.
+
+    Returns the host-fetched per-block outputs in GLOBAL block-id order —
+    the deterministic-merge contract: callers fold these with host float32
+    sums and get a schedule-independent result.
+
+    emit(block_id, host_out) fires once per block on the ACCEPTED (first)
+    completion, from the completing worker's thread; duplicate re-executions
+    never reach it.
+
+    Raises the first worker error if the pass cannot complete (e.g. every
+    worker died). A pass with at least one surviving worker always completes.
+    """
+    if len(map_fns) != len(devices):
+        raise ValueError("need one map_fn per device")
+    _count_pass(label)
+    pool = TaskPool(store.num_blocks, len(devices),
+                    lease_timeout=lease_timeout)
+    # The pass ends on pool completion, NOT on thread joins: a straggler
+    # still sleeping inside a read whose block was re-executed elsewhere must
+    # not gate the pass (that is the whole point of stealing/speculation).
+    # Its daemon thread drains on its next acquire; its late completion is a
+    # dropped duplicate. Accepted emits ARE barriered: the driver reads the
+    # emitted state (labels) right after this returns.
+    ecv = threading.Condition()
+    emitted = [0]
+
+    def _emit(task_id, host):
+        if emit is not None:
+            emit(task_id, host)
+        with ecv:
+            emitted[0] += 1
+            ecv.notify_all()
+
+    with obs.span(f"pass.{label}", cat="pass", blocks=store.num_blocks,
+                  workers=len(devices)):
+        threads = [
+            threading.Thread(
+                target=_worker, name=f"pool-worker:{dev}",
+                args=(pool, store, fn, w, dev, _emit), daemon=True)
+            for w, (fn, dev) in enumerate(zip(map_fns, devices))
+        ]
+        for t in threads:
+            t.start()
+        pool.wait()
+        if pool.done:
+            with ecv:
+                while (emitted[0] < store.num_blocks
+                       and pool.first_error() is None):
+                    ecv.wait(timeout=0.05)
+    with _stale_lock:
+        _stale[:] = [t for t in _stale if t.is_alive()]
+        _stale.extend(t for t in threads if t.is_alive())
+    return pool.results()

@@ -64,6 +64,21 @@ def pass_count(label: str) -> int:
     return int(obs.counter(f"engine.passes.{label}").value)
 
 
+def _offer(q: "queue.Queue", item, stop: threading.Event) -> bool:
+    """Bounded-queue put that aborts when `stop` is set. Every producer-side
+    put MUST go through this: an unconditional `q.put` on a full maxsize-1
+    queue after `close()` has drained once would block forever and deadlock
+    the `join()` in `close()` (the poison-pill/_STOP put at end-of-stream was
+    exactly that bug)."""
+    while not stop.is_set():
+        try:
+            q.put(item, timeout=0.05)
+            return True
+        except queue.Full:
+            continue
+    return False
+
+
 def _producer(store: BlockStore, q: "queue.Queue", stop: threading.Event,
               device, lane: str):
     # One metrics lane per producer thread: the per-device block counter is
@@ -84,10 +99,11 @@ def _producer(store: BlockStore, q: "queue.Queue", stop: threading.Event,
             blocks.inc()
             dev_blocks.inc()
             nbytes.inc(getattr(blk, "nbytes", 0))
-            q.put((i, dev, None))
-        q.put(_STOP)
+            if not _offer(q, (i, dev, None), stop):
+                return
+        _offer(q, _STOP, stop)
     except BaseException as e:  # noqa: BLE001 - re-raised on the consumer side
-        q.put((None, None, e))
+        _offer(q, (None, None, e), stop)
 
 
 class BlockPrefetcher:
@@ -107,7 +123,7 @@ class BlockPrefetcher:
         self.lane = f"producer:{device if device is not None else 'default'}"
         self._stall = obs.counter("engine.prefetch_stall_s")
         self._t = threading.Thread(
-            target=_producer,
+            target=_producer, name=f"block-{self.lane}",
             args=(store, self._q, self._stop, device, self.lane), daemon=True,
         )
         self._t.start()
@@ -140,15 +156,27 @@ class BlockPrefetcher:
         return i, dev
 
     def close(self):
-        """Stop and join the producer; safe to call more than once."""
+        """Stop and join the producer; safe to call more than once.
+
+        Drain and join interleave in a loop: a single drain is not enough,
+        because a producer that was blocked mid-`put` can enqueue one more
+        item after the drain (its in-flight block, then the _STOP pill) and
+        refill a maxsize-1 queue before `join` is reached. The producer's
+        `_offer` puts give up once the stop flag is set, so this converges.
+        """
         self._stop.set()
-        # drain so a blocked producer can observe the stop flag and exit
+        while self._t.is_alive():
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._t.join(timeout=0.05)
+        # final sweep so queued device blocks are released promptly
         while True:
             try:
                 self._q.get_nowait()
             except queue.Empty:
                 break
-        self._t.join()
         self._done = True
 
 

@@ -149,6 +149,9 @@ def ooc_lloyd(
     prefetch: int | None = None,
     devices=None,
     mesh=None,
+    scheduler: str = "lockstep",
+    checkpoint_dir=None,
+    lease_timeout: float = 60.0,
 ) -> StreamLloydResult:
     """Exact out-of-core Lloyd: identical update rule to `core.lloyd.lloyd`,
     memory O(block). Stops early when no label changes (same criterion as the
@@ -157,7 +160,15 @@ def ooc_lloyd(
     devices=/mesh= routes the iteration through `repro.stream.sharded`: each
     device streams a round-robin block shard through its own producer and the
     per-device (Z, g) are reduced once per iteration — same fixed point,
-    memory O(block) per device."""
+    memory O(block) per device.
+
+    scheduler= selects the sharded pass executor: "lockstep" (fixed
+    placement, on-mesh reduce) or "pool" (repro.pool leased tasks: survives
+    dead/slow workers, deterministic block-ordered merge). Single-device runs
+    are inherently lockstep; asking for "pool" without devices is an error.
+
+    checkpoint_dir= enables mid-fit crash recovery: iteration-granular state
+    saves, resumed on a refit with the same data/k/init (same key)."""
     if (coeffs is None) == (discrepancy is None):
         raise ValueError("pass exactly one of coeffs= (raw X blocks) or discrepancy= (Y blocks)")
     pol = resolve_policy(policy, use_pallas, owner="stream.ooc_lloyd: ")
@@ -173,7 +184,13 @@ def ooc_lloyd(
         return ooc_lloyd_sharded(
             store, k, coeffs=coeffs, discrepancy=discrepancy, iters=iters,
             init=centroids_cell[0], policy=pol, prefetch=prefetch, devices=devs,
+            scheduler=scheduler, checkpoint_dir=checkpoint_dir,
+            lease_timeout=lease_timeout,
         )
+    if scheduler != "lockstep":
+        raise ValueError(
+            f"scheduler={scheduler!r} needs devices=/mesh=: the single-device "
+            "driver has no worker pool")
     m = int(centroids_cell[0].shape[1])
     map_fn = _block_map(coeffs, disc, centroids_cell, pol)
 
@@ -193,6 +210,22 @@ def ooc_lloyd(
     trajectory: list[float] = []
     shifts: list[float] = []
     it = 0
+    fp = None
+    if checkpoint_dir is not None:
+        from repro.distributed.checkpoint import lloyd_fingerprint
+        from repro.launch.elastic import resume_lloyd_state
+
+        fp = lloyd_fingerprint(kind="ooc", n=store.n, d=store.d, k=k, m=m,
+                               init=centroids_cell[0])
+        state = resume_lloyd_state(checkpoint_dir, fingerprint=fp,
+                                   devices_used=1)
+        if state is not None:
+            it = state["step"]
+            labels_host[:] = state["labels"]
+            changed_cell[0] = state["changed"]
+            trajectory = list(state["trajectory"])
+            shifts = list(state["shifts"])
+            centroids_cell[0] = jnp.asarray(state["centroids"])
     while it < iters and changed_cell[0]:
         changed_cell[0] = False
         with obs.span("lloyd.iter", cat="lloyd", iter=it) as sp:
@@ -208,6 +241,14 @@ def ooc_lloyd(
             sp.set(inertia=trajectory[-1], shift=shift)
             centroids_cell[0] = new_c
         it += 1
+        if checkpoint_dir is not None:
+            from repro.distributed.checkpoint import save_lloyd_state
+
+            save_lloyd_state(
+                checkpoint_dir, step=it, centroids=centroids_cell[0],
+                labels=labels_host, trajectory=trajectory, shifts=shifts,
+                changed=changed_cell[0], fingerprint=fp, devices_used=1,
+            )
 
     # Final pass under the final centroids: labels + inertia (matches the
     # post-loop assignment of core.lloyd at any fixed point). Its inertia is
@@ -277,6 +318,7 @@ def minibatch_lloyd(
     prefetch: int | None = None,
     devices=None,
     mesh=None,
+    checkpoint_dir=None,
 ) -> StreamLloydResult:
     """Single-pass (per epoch) streaming Lloyd with decayed sufficient stats:
 
@@ -304,7 +346,7 @@ def minibatch_lloyd(
         return minibatch_lloyd_sharded(
             store, k, coeffs=coeffs, discrepancy=discrepancy, decay=decay,
             epochs=epochs, init=centroids_cell[0], policy=pol,
-            prefetch=prefetch, devices=devs,
+            prefetch=prefetch, devices=devs, checkpoint_dir=checkpoint_dir,
         )
     m = int(centroids_cell[0].shape[1])
     map_fn = _block_map(coeffs, disc, centroids_cell, pol)
@@ -335,13 +377,41 @@ def minibatch_lloyd(
     # the decayed trajectory has no single per-iteration centroid snapshot).
     trajectory: list[float] = []
     seen_cost = 0.0
-    for ep in range(epochs):
+    start_ep = 0
+    fp = None
+    if checkpoint_dir is not None:
+        from repro.distributed.checkpoint import lloyd_fingerprint
+        from repro.launch.elastic import resume_lloyd_state
+
+        fp = lloyd_fingerprint(kind="minibatch", n=store.n, d=store.d, k=k,
+                               m=m, init=centroids_cell[0], decay=decay)
+        saved = resume_lloyd_state(checkpoint_dir, fingerprint=fp,
+                                   devices_used=1)
+        if saved is not None:
+            start_ep = saved["step"]
+            labels_host[:] = saved["labels"]
+            trajectory = list(saved["trajectory"])
+            centroids_cell[0] = jnp.asarray(saved["centroids"])
+            state[0] = jnp.asarray(saved["stats"]["Z"])
+            state[1] = jnp.asarray(saved["stats"]["g"])
+            state[2] = jnp.asarray(saved["stats"]["seen_cost"])
+            seen_cost = float(state[2])
+    for ep in range(start_ep, epochs):
         with obs.span("lloyd.epoch", cat="lloyd", epoch=ep) as sp:
             map_reduce(store, map_fn, combine, None, prefetch=prefetch, emit=emit)
             total = float(state[2])
             trajectory.append(total - seen_cost)
             seen_cost = total
             sp.set(inertia=trajectory[-1])
+        if checkpoint_dir is not None:
+            from repro.distributed.checkpoint import save_lloyd_state
+
+            save_lloyd_state(
+                checkpoint_dir, step=ep + 1, centroids=centroids_cell[0],
+                labels=labels_host, trajectory=trajectory, shifts=[],
+                changed=True, fingerprint=fp, devices_used=1,
+                stats={"Z": state[0], "g": state[1], "seen_cost": state[2]},
+            )
 
     inertia = _final_assign(
         store, coeffs, disc, centroids_cell, labels_host, prefetch, pol

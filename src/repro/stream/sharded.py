@@ -273,6 +273,77 @@ def _stat_map_fns(coeffs_d, cells, k, disc, pol, devices):
     return fns
 
 
+# ------------------------------------------------- pool scheduling policy
+#
+# The lockstep executor above is ONE scheduling policy: block→device
+# placement fixed at fit start, one producer per device, a cross-device
+# on-mesh reduction per iteration. The pool policy (repro.pool) replaces it
+# with leased, reassignable block tasks — any worker can execute any block,
+# dead workers' leases are requeued, stragglers' unread blocks stolen — and
+# replaces the on-mesh reduction with a host-side float32 merge in global
+# block-id order. That merge order is the determinism rule: the folded
+# (Z, g, cost) is bitwise independent of which worker ran which block, in
+# what order, with how many duplicate re-executions (duplicates are dropped
+# at the pool, and every execution of a block is the same pure function of
+# the same bits). A chaos run therefore reproduces the fault-free pool run
+# exactly; pool vs lockstep differs only by float summation grouping, the
+# same tolerance class as stream vs stream_shard.
+
+
+def _pool_label_emit(store, labels_host, changed=None, index=2):
+    def emit(i, out):
+        lo = store.row_offset(i)
+        new = np.asarray(out[index], dtype=np.int32)
+        if changed is not None and not changed[0] \
+                and not np.array_equal(new, labels_host[lo:lo + new.shape[0]]):
+            changed[0] = True
+        labels_host[lo:lo + new.shape[0]] = new
+
+    return emit
+
+
+def _pool_stat_pass(store, map_fns, labels_host, changed, devices,
+                    lease_timeout, label):
+    """One fault-tolerant (Z, g, cost) pass: pool-scheduled map, then the
+    deterministic host merge in global block-id order."""
+    from repro.pool import pool_map_reduce
+
+    outs = pool_map_reduce(
+        store, map_fns, devices=devices, lease_timeout=lease_timeout,
+        emit=_pool_label_emit(store, labels_host, changed), label=label,
+    )
+    Z = np.zeros(outs[0][0].shape, np.float32)
+    g = np.zeros(outs[0][1].shape, np.float32)
+    cost = np.zeros((), np.float32)
+    for out in outs:
+        Z += out[0]
+        g += out[1]
+        cost += out[3]
+    return Z, g, float(cost)
+
+
+def _final_assign_pool(store, coeffs_d, disc, c_locals, labels_host, pol,
+                       devices, lease_timeout):
+    from repro.pool import pool_map_reduce
+
+    fns = []
+    for d in range(len(devices)):
+        if coeffs_d[d] is not None:
+            fns.append(lambda x, p=coeffs_d[d], c=c_locals[d]:
+                       _embed_assign_cost(x, p, c, pol))
+        else:
+            fns.append(lambda y, c=c_locals[d]: _assign_cost_y(y, c, disc, pol))
+    outs = pool_map_reduce(
+        store, fns, devices=devices, lease_timeout=lease_timeout,
+        emit=_pool_label_emit(store, labels_host, index=0),
+        label="final_assign_pool",
+    )
+    cost = np.zeros((), np.float32)
+    for out in outs:
+        cost += out[1]
+    return float(cost)
+
+
 # ----------------------------------------------------------- Lloyd drivers
 
 
@@ -331,12 +402,29 @@ def ooc_lloyd_sharded(
     policy: ComputePolicy,
     prefetch: int,
     devices: Sequence,
+    scheduler: str = "lockstep",
+    checkpoint_dir=None,
+    lease_timeout: float = 60.0,
 ):
     """Exact out-of-core Lloyd across `devices`: same update rule (and fixed
     point) as the single-device `ooc_lloyd`, memory O(block) per device.
-    Called through `ooc_lloyd(devices=...)`, which resolves init/policy."""
+    Called through `ooc_lloyd(devices=...)`, which resolves init/policy.
+
+    scheduler: "lockstep" keeps the fixed block→device placement with the
+    on-mesh (Z, g) reduction; "pool" runs every pass through the
+    fault-tolerant `repro.pool` control plane (leases, requeue, stealing,
+    deterministic block-ordered merge), surviving dead and slow workers.
+
+    checkpoint_dir: when given, the state after every iteration (iteration
+    number, centroids, labels, trajectory) is saved crash-atomically; a
+    refit over the same problem (same shapes + same init, i.e. same
+    estimator key) resumes mid-fit instead of restarting from the init.
+    """
     from repro.stream.lloyd import StreamLloydResult
 
+    if scheduler not in ("lockstep", "pool"):
+        raise ValueError(f"unknown scheduler {scheduler!r}: "
+                         "expected 'lockstep' or 'pool'")
     devices = list(devices)
     D = len(devices)
     disc = coeffs.discrepancy if coeffs is not None else discrepancy
@@ -358,29 +446,82 @@ def ooc_lloyd_sharded(
     trajectory: list[float] = []
     shifts: list[float] = []
     it = 0
+    fp = None
+    if checkpoint_dir is not None:
+        from repro.distributed.checkpoint import lloyd_fingerprint
+        from repro.launch.elastic import resume_lloyd_state
+
+        fp = lloyd_fingerprint(kind="ooc", n=store.n, d=store.d, k=k, m=m,
+                               init=init)
+        state = resume_lloyd_state(checkpoint_dir, fingerprint=fp,
+                                   devices_used=D)
+        if state is not None:
+            it = state["step"]
+            labels_host[:] = state["labels"]
+            changed[0] = state["changed"]
+            trajectory = list(state["trajectory"])
+            shifts = list(state["shifts"])
+            c = _replicate(jnp.asarray(state["centroids"]), devices)
+
     while it < iters and changed[0]:
         changed[0] = False
-        with obs.span("lloyd.iter", cat="lloyd", iter=it, devices=D) as sp:
+        with obs.span("lloyd.iter", cat="lloyd", iter=it, devices=D,
+                      scheduler=scheduler) as sp:
             for d, cd in enumerate(_device_copies(c, devices)):
                 cells[d][0] = cd
-            accs = sharded_map_reduce(
-                shards, map_fns,
-                lambda acc, out: (acc[0] + out[0], acc[1] + out[1], acc[2] + out[3]),
-                list(zeros_d), devices=devices, prefetch=prefetch, emits=emits,
-            )
-            Z, g, cost = cross_device_sum(accs, devices)
-            new_c = centroid_update(Z, g, c)
-            shift = float(jnp.linalg.norm(new_c - c))
-            trajectory.append(float(cost))
+            if scheduler == "pool":
+                Zh, gh, cost = _pool_stat_pass(
+                    store, map_fns, labels_host, changed, devices,
+                    lease_timeout, "lloyd_pool",
+                )
+                Z, g = jnp.asarray(Zh), jnp.asarray(gh)
+                c_host = jnp.asarray(np.asarray(c))
+                new_c = _replicate(centroid_update(Z, g, c_host), devices)
+                shift = float(jnp.linalg.norm(
+                    jnp.asarray(np.asarray(new_c)) - c_host))
+                trajectory.append(float(cost))
+            else:
+                accs = sharded_map_reduce(
+                    shards, map_fns,
+                    lambda acc, out: (acc[0] + out[0], acc[1] + out[1],
+                                      acc[2] + out[3]),
+                    list(zeros_d), devices=devices, prefetch=prefetch,
+                    emits=emits,
+                )
+                Z, g, cost = cross_device_sum(accs, devices)
+                new_c = centroid_update(Z, g, c)
+                shift = float(jnp.linalg.norm(new_c - c))
+                trajectory.append(float(cost))
             shifts.append(shift)
             sp.set(inertia=trajectory[-1], shift=shift)
             c = new_c
         it += 1
+        if checkpoint_dir is not None:
+            from repro.distributed.checkpoint import save_lloyd_state
+
+            save_lloyd_state(
+                checkpoint_dir, step=it, centroids=np.asarray(c),
+                labels=labels_host, trajectory=trajectory, shifts=shifts,
+                changed=changed[0], fingerprint=fp, devices_used=D,
+            )
 
     c_locals = _device_copies(c, devices)
-    inertia = _final_assign_sharded(
-        shards, coeffs_d, disc, c_locals, labels_host, policy, prefetch, devices
-    )
+    if scheduler == "pool":
+        inertia = _final_assign_pool(
+            store, coeffs_d, disc, c_locals, labels_host, policy, devices,
+            lease_timeout,
+        )
+        # Join workers still draining a re-executed block (stragglers whose
+        # pass already ended): the fit's engine-counter accounting — and the
+        # FitReport delta built from it — must be final when we return.
+        from repro.pool.executor import drain_stale
+
+        drain_stale()
+    else:
+        inertia = _final_assign_sharded(
+            shards, coeffs_d, disc, c_locals, labels_host, policy, prefetch,
+            devices,
+        )
     trajectory.append(inertia)
     centroids = jnp.asarray(np.asarray(c))  # off the mesh: plain default-device array
     return StreamLloydResult(
@@ -401,12 +542,17 @@ def minibatch_lloyd_sharded(
     policy: ComputePolicy,
     prefetch: int,
     devices: Sequence,
+    checkpoint_dir=None,
 ):
     """Per-device mini-batch Lloyd (Chitta et al., sharded): per round, every
     device assigns ONE of its local blocks under the current centroids; the
     round's per-device stats are reduced once and folded into the decayed
     global (Z, g); centroids move once per round of D blocks. Devices whose
-    shard is exhausted contribute zero stats in the ragged final rounds."""
+    shard is exhausted contribute zero stats in the ragged final rounds.
+
+    checkpoint_dir: epoch-granular crash recovery — the decayed (Z, g)
+    sufficient statistics are part of the saved state, so a resumed fit
+    continues the same decay trajectory."""
     from repro.stream.lloyd import StreamLloydResult
 
     devices = list(devices)
@@ -428,7 +574,24 @@ def minibatch_lloyd_sharded(
     labels_host = np.full(store.n, -1, dtype=np.int32)
 
     trajectory: list[float] = []
-    for ep in range(epochs):
+    start_ep = 0
+    fp = None
+    if checkpoint_dir is not None:
+        from repro.distributed.checkpoint import lloyd_fingerprint
+        from repro.launch.elastic import resume_lloyd_state
+
+        fp = lloyd_fingerprint(kind="minibatch", n=store.n, d=store.d, k=k,
+                               m=m, init=init, decay=decay)
+        state = resume_lloyd_state(checkpoint_dir, fingerprint=fp,
+                                   devices_used=D)
+        if state is not None:
+            start_ep = state["step"]
+            labels_host[:] = state["labels"]
+            trajectory = list(state["trajectory"])
+            c = _replicate(jnp.asarray(state["centroids"]), devices)
+            Z = _replicate(jnp.asarray(state["stats"]["Z"]), devices)
+            g = _replicate(jnp.asarray(state["stats"]["g"]), devices)
+    for ep in range(start_ep, epochs):
         epoch_cost = 0.0
         with obs.span("lloyd.epoch", cat="lloyd", epoch=ep, devices=D) as sp:
             pfs = [BlockPrefetcher(shards[d], prefetch=prefetch, device=devices[d])
@@ -463,6 +626,15 @@ def minibatch_lloyd_sharded(
                     pf.close()
             trajectory.append(epoch_cost)
             sp.set(inertia=epoch_cost)
+        if checkpoint_dir is not None:
+            from repro.distributed.checkpoint import save_lloyd_state
+
+            save_lloyd_state(
+                checkpoint_dir, step=ep + 1, centroids=np.asarray(c),
+                labels=labels_host, trajectory=trajectory, shifts=[],
+                changed=True, fingerprint=fp, devices_used=D,
+                stats={"Z": np.asarray(Z), "g": np.asarray(g)},
+            )
 
     c_locals = _device_copies(c, devices)
     inertia = _final_assign_sharded(

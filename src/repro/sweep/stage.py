@@ -25,14 +25,12 @@ must replay exactly, per restart, from the same pool.
 from __future__ import annotations
 
 import json
-import os
-import shutil
-import tempfile
 from pathlib import Path
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.checkpoint import atomic_publish_dir, fsync_json
 from repro.stream.blockstore import BlockStore
 
 STAGE_DIR = "embed_stage"
@@ -64,10 +62,7 @@ def save_embed_stage(
     from repro.embed import embedding_for
 
     ckpt_dir = Path(ckpt_dir)
-    ckpt_dir.mkdir(parents=True, exist_ok=True)
-    final = ckpt_dir / STAGE_DIR
-    tmp = Path(tempfile.mkdtemp(prefix=".tmp_stage_", dir=ckpt_dir))
-    try:
+    with atomic_publish_dir(ckpt_dir, STAGE_DIR) as tmp:
         arrays, config = embedding_for(params).params_state(params)
         np.savez(tmp / "params.npz", **arrays)
         np.save(tmp / "pool.npy", np.asarray(pool, dtype=np.float32))
@@ -84,17 +79,8 @@ def save_embed_stage(
             "block_rows": int(y_store.block_rows),
             "input_shape": [int(v) for v in input_shape],
         }
-        with (tmp / "stage.json").open("w") as f:
-            json.dump(manifest, f)
-            f.flush()
-            os.fsync(f.fileno())
-        if final.exists():
-            shutil.rmtree(final)
-        os.replace(tmp, final)
-    except BaseException:
-        shutil.rmtree(tmp, ignore_errors=True)
-        raise
-    return final
+        fsync_json(tmp / "stage.json", manifest)
+    return ckpt_dir / STAGE_DIR
 
 
 def load_embed_stage(

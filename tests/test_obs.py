@@ -242,6 +242,26 @@ def test_every_backend_returns_populated_fit_report(backend):
         assert sum(r.per_device_blocks.values()) == r.blocks_read
 
 
+def test_pool_scheduler_fit_report_accounts_blocks():
+    """The pool control plane's workers bump the same engine counters as the
+    lockstep producers, so FitReport parity holds for scheduler="pool" too:
+    the per-device breakdown sums to blocks_read exactly (stale speculative
+    workers are drained before the fit returns), and the fault-free pool
+    accounting identity pool.tasks_completed == blocks x (iters + 1) is
+    visible in the metrics registry."""
+    from repro.data.synthetic import gaussian_blobs_blocks
+
+    store = gaussian_blobs_blocks(0, 1024, 8, 3, block_rows=256)[0]
+    before = obs.snapshot("pool.")
+    est = _fit("stream_shard", scheduler="pool")
+    seen = obs.delta(before, obs.snapshot("pool."))
+    r = est.fit_report_
+    assert r.blocks_read > 0 and r.bytes_h2d > 0
+    assert sum(r.per_device_blocks.values()) == r.blocks_read
+    assert r.inertia_trajectory[-1] == pytest.approx(est.inertia_, rel=1e-6)
+    assert seen["pool.tasks_completed"] == store.num_blocks * (est.n_iter_ + 1)
+
+
 def test_exact_backends_report_identical_trajectories():
     """local / stream / stream_shard run the SAME math from the same key, so
     their FitReports must agree on shape AND trajectory — the keystone label

@@ -1,0 +1,476 @@
+"""Tests for the repro.pool fault-tolerant control plane.
+
+The load-bearing claims:
+  * TaskPool encodes every scheduling rule deterministically: round-robin
+    affinity matching the lockstep placement, steal-from-the-fullest-deque,
+    lease expiry scavenging (heartbeats extend leases), failed-worker
+    requeue, speculative backups capped at two executions per task, and
+    first-wins duplicate drop;
+  * KEYSTONE (subprocess, forced 8 devices, public API): killing 1 (and 2)
+    of 8 producers mid-iteration — and stalling one into a straggler — the
+    pool-backed stream_shard fit completes with labels IDENTICAL to the
+    fault-free run from the same key, for nystrom and rff;
+  * scheduler="pool" reaches the same labels as lockstep and the
+    single-device stream backend in-process, at any device count;
+  * mid-fit Lloyd checkpoints: a fit killed at iteration t resumes from
+    checkpoint_dir and finishes with labels/n_iter/inertia identical to the
+    uninterrupted fit from the same key (stream, pool stream_shard, and
+    minibatch drivers);
+  * `launch.elastic` restores clustering artifacts mesh-agnostically and
+    counts device-count-changed Lloyd resumes as elastic;
+  * the engine's BlockPrefetcher joins its producer thread when the
+    consumer raises mid-pass (regression: the shutdown used to deadlock on
+    a full queue).
+"""
+import json
+import subprocess
+import sys
+import threading
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.api import KernelKMeans
+from repro.data.synthetic import gaussian_blobs_blocks
+from repro.launch.mesh import make_mesh
+from repro.pool import ChaosPlan, TaskPool, WorkerKilled, active, inject
+from repro.stream import BlockStore, ooc_lloyd
+from repro.stream.engine import map_reduce
+
+HERE = Path(__file__).resolve().parent
+DEVICES = jax.local_devices()
+D = len(DEVICES)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _drain(pool, worker):
+    """Acquire-and-complete until the pool hands this worker nothing more."""
+    seen = []
+    while (task := pool.acquire(worker)) is not None:
+        seen.append(task)
+        pool.complete(worker, task, f"w{worker}:t{task}")
+    return seen
+
+
+# ------------------------------------------------------------------ TaskPool
+
+
+def test_pool_affinity_matches_lockstep_round_robin():
+    pool = TaskPool(8, 2, clock=FakeClock())
+    # block i is seeded to worker i % D — the lockstep shard placement
+    order0, order1 = [], []
+    for _ in range(4):
+        t0, t1 = pool.acquire(0), pool.acquire(1)
+        order0.append(t0), order1.append(t1)
+        pool.complete(0, t0, t0), pool.complete(1, t1, t1)
+    assert order0 == [0, 2, 4, 6]
+    assert order1 == [1, 3, 5, 7]
+    assert pool.acquire(0) is None and pool.done
+    assert pool.results() == list(range(8))
+
+
+def test_pool_results_ordered_and_incomplete_raises():
+    pool = TaskPool(3, 1, clock=FakeClock())
+    with pytest.raises(RuntimeError, match="incomplete"):
+        pool.results()
+    for task in (0, 1, 2):
+        assert pool.acquire(0) == task
+        pool.complete(0, task, f"r{task}")
+    assert pool.results() == ["r0", "r1", "r2"]
+
+
+def test_pool_steals_from_the_fullest_deque_back():
+    pool = TaskPool(6, 3, clock=FakeClock())  # deques: [0,3] [1,4] [2,5]
+    for task in (2, 5):
+        assert pool.acquire(2) == task
+        pool.complete(2, task, task)
+    # worker 2 idle: steals the BACK of the fullest other deque — the block
+    # its owner is furthest from reaching
+    stolen = pool.acquire(2)
+    assert stolen == 3
+    pool.complete(2, stolen, stolen)
+    assert pool.acquire(2) == 4  # worker 1's deque is now the fullest
+
+
+def test_pool_lease_expiry_scavenged_after_heartbeat_silence():
+    clk = FakeClock()
+    pool = TaskPool(1, 3, lease_timeout=10.0, clock=clk)
+    before = obs.snapshot("pool.")
+    assert pool.acquire(0) == 0  # worker 0 leases the only task... and stalls
+    assert pool.acquire(1) == 0  # idle worker 1 speculates a backup first
+    clk.advance(11.0)  # both leases now stale (no heartbeats)
+    assert pool.acquire(2) == 0  # worker 2 scavenges the OLDEST expired lease
+    seen = obs.delta(before, obs.snapshot("pool."))
+    assert seen["pool.tasks_speculated"] == 1
+    assert seen["pool.lease_timeouts"] == 1
+    assert seen["pool.tasks_requeued"] == 1
+    # first completion wins; the late original is dropped as a duplicate
+    assert pool.complete(2, 0, "from-2") is True
+    assert pool.complete(0, 0, "from-0") is False
+    assert obs.delta(before, obs.snapshot("pool."))["pool.duplicates_dropped"] == 1
+    assert pool.results() == ["from-2"]
+
+
+def test_pool_heartbeat_keeps_lease_alive():
+    clk = FakeClock()
+    pool = TaskPool(1, 2, lease_timeout=10.0, clock=clk)
+    assert pool.acquire(0) == 0
+    clk.advance(8.0)
+    pool.heartbeat(0)  # still alive: the deadline extends past the beat
+    clk.advance(4.0)  # t=12 > original deadline, but beat+timeout=18
+    before = obs.snapshot("pool.")
+    assert pool.acquire(1) == 0  # idle worker 1 gets a BACKUP, not a scavenge
+    seen = obs.delta(before, obs.snapshot("pool."))
+    assert seen["pool.tasks_speculated"] == 1
+    assert seen.get("pool.lease_timeouts", 0) == 0
+
+
+def test_pool_failed_worker_requeues_for_survivor():
+    pool = TaskPool(4, 2, clock=FakeClock())
+    assert pool.acquire(0) == 0
+    pool.fail_worker(0, RuntimeError("device lost"))
+    assert pool.acquire(0) is None  # dead workers get nothing
+    survivor_saw = _drain(pool, 1)
+    # worker 1 drains its own deque, then steals worker 0's remainder AND
+    # the requeued in-flight lease — the pass completes with one survivor
+    assert sorted(survivor_saw) == [0, 1, 2, 3]
+    assert len(pool.results()) == 4
+    assert "device lost" in str(pool.first_error())
+
+
+def test_pool_all_dead_raises_first_error():
+    pool = TaskPool(2, 1, clock=FakeClock())
+    pool.fail_worker(0, RuntimeError("lone worker down"))
+    with pytest.raises(RuntimeError, match="lone worker down"):
+        pool.results()
+
+
+def test_pool_speculation_capped_at_two_executions():
+    pool = TaskPool(1, 3, lease_timeout=1e9, clock=FakeClock())
+    assert pool.acquire(0) == 0
+    assert pool.acquire(1) == 0  # one backup allowed...
+    got = []
+    t = threading.Thread(target=lambda: got.append(pool.acquire(2)))
+    t.start()  # ...a third execution is NOT: worker 2 must wait
+    t.join(timeout=0.3)
+    assert t.is_alive()
+    pool.complete(1, 0, "done")  # completion releases the waiter with None
+    t.join(timeout=5.0)
+    assert not t.is_alive() and got == [None]
+
+
+# --------------------------------------------------------------- chaos plans
+
+
+def test_chaos_kill_counts_reads_across_the_whole_fit():
+    plan = ChaosPlan().kill(1, after_blocks=2)
+    plan.before_read(1), plan.before_read(1)  # two reads survive
+    with pytest.raises(WorkerKilled):
+        plan.before_read(1)
+    with pytest.raises(WorkerKilled):  # dead stays dead
+        plan.before_read(1)
+    plan.before_read(0)  # other workers unaffected
+    plan.reset()
+    plan.before_read(1)  # a rebooted fleet starts counting afresh
+
+
+def test_chaos_inject_is_exclusive_and_scoped():
+    assert active() is None
+    plan = ChaosPlan()
+    with inject(plan):
+        assert active() is plan
+        with pytest.raises(RuntimeError, match="already installed"):
+            with inject(ChaosPlan()):
+                pass
+    assert active() is None
+
+
+# -------------------------------------------- prefetcher shutdown regression
+
+
+def test_prefetcher_joins_producer_when_consumer_raises():
+    """Regression: a map_fn error mid-pass used to leave the producer thread
+    blocked forever on a full queue (close() joined a thread stuck in
+    q.put). The pass must terminate AND the producer must exit — repeatedly,
+    with prefetch=1 to force the producer into the blocking put."""
+    store = BlockStore.from_array(np.zeros((1024, 4), np.float32), 64)
+
+    def boom(x):
+        raise RuntimeError("map boom")
+
+    for _ in range(20):
+        with pytest.raises(RuntimeError, match="map boom"):
+            map_reduce(store, boom, lambda a, b: b, None, prefetch=1)
+    leaked = [t.name for t in threading.enumerate()
+              if t.name.startswith("block-")]
+    assert leaked == []
+
+
+def test_prefetcher_joins_producer_on_store_error():
+    bad = BlockStore.from_generator(
+        lambda i: (_ for _ in ()).throw(RuntimeError("gen boom")),
+        n=512, d=4, block_rows=64,
+    )
+    with pytest.raises(RuntimeError, match="gen boom"):
+        map_reduce(bad, lambda x: x, lambda a, b: b, None, prefetch=1)
+    assert not [t for t in threading.enumerate() if t.name.startswith("block-")]
+
+
+# ------------------------------------------------- pool scheduler, in-process
+
+
+def _mesh():
+    return make_mesh((D, 1), ("data", "model"))
+
+
+def _blobs():
+    return gaussian_blobs_blocks(0, 1200, 8, 4, block_rows=128, separation=4.0)
+
+
+def _est(backend, **kw):
+    kw.setdefault("iters", 10)
+    return KernelKMeans(4, method="rff", m=32, n_init=1, block_rows=128,
+                        backend=backend, **kw)
+
+
+def test_pool_scheduler_matches_lockstep_and_stream():
+    """scheduler="pool" is a scheduling policy, not a different algorithm:
+    same labels as the lockstep executor and the single-device stream
+    backend from the same key, at the running process's device count."""
+    store, _ = _blobs()
+    key = jax.random.PRNGKey(7)
+    stream = _est("stream").fit(store, key=key)
+    lockstep = _est("stream_shard", mesh=_mesh()).fit(store, key=key)
+    pooled = _est("stream_shard", mesh=_mesh(), scheduler="pool").fit(
+        store, key=key)
+    assert np.array_equal(stream.labels_, lockstep.labels_)
+    assert np.array_equal(stream.labels_, pooled.labels_)
+    assert pooled.n_iter_ == stream.n_iter_
+    assert pooled.inertia_ == pytest.approx(stream.inertia_, rel=1e-4)
+
+
+def test_pool_tasks_completed_accounts_every_block_exactly():
+    """The fault-free accounting identity: one ACCEPTED completion per block
+    per pass — num_blocks x (iterations + the final assign pass)."""
+    store, _ = _blobs()
+    before = obs.snapshot("pool.")
+    fit = _est("stream_shard", mesh=_mesh(), scheduler="pool").fit(
+        store, key=jax.random.PRNGKey(7))
+    seen = obs.delta(before, obs.snapshot("pool."))
+    assert seen["pool.tasks_completed"] == store.num_blocks * (fit.n_iter_ + 1)
+    assert seen["pool.tasks_leased"] >= seen["pool.tasks_completed"]
+    assert seen.get("pool.worker_deaths", 0) == 0
+    assert seen["pool.heartbeat_gap_s"]["count"] > 0
+
+
+def test_pool_every_worker_killed_raises_to_the_driver():
+    """With NO surviving worker the pass cannot complete: the first chaos
+    error must surface through the unchanged public API."""
+    store, _ = _blobs()
+    plan = ChaosPlan()
+    for w in range(D):
+        plan.kill(w, after_blocks=0)
+    with inject(plan), pytest.raises(WorkerKilled):
+        _est("stream_shard", mesh=_mesh(), scheduler="pool").fit(
+            store, key=jax.random.PRNGKey(7))
+
+
+def test_pool_scheduler_requires_devices():
+    store, _ = _blobs()
+    ystore = BlockStore.from_array(np.zeros((256, 32), np.float32), 128)
+    init = jnp.zeros((4, 32), jnp.float32)
+    with pytest.raises(ValueError, match="needs devices="):
+        ooc_lloyd(ystore, 4, discrepancy="l2", init=init, iters=2,
+                  scheduler="pool")
+
+
+def test_pool_chaos_fit_labels_identical_in_process():
+    """The keystone equality at the in-process device count: a chaos-killed
+    pool fit returns the fault-free labels (with D=1 the kill is fatal, so
+    only assert the recovery claim when a survivor exists)."""
+    if D < 2:
+        pytest.skip("needs >1 device for a surviving worker")
+    store, _ = _blobs()
+    key = jax.random.PRNGKey(7)
+    est = _est("stream_shard", mesh=_mesh(), scheduler="pool")
+    fault_free = est.fit(store, key=key)
+    with inject(ChaosPlan().kill(0, after_blocks=1)):
+        chaos = est.fit(store, key=key)
+    assert np.array_equal(fault_free.labels_, chaos.labels_)
+    assert chaos.inertia_ == fault_free.inertia_
+
+
+def test_pool_checks_subprocess_forced_8_devices():
+    """Run the chaos keystone under a FORCED 8-device process so every tier-1
+    run exercises killed-producer recovery on a genuinely multi-worker pool.
+    The full nystrom,rff matrix runs in the CI 8-device entry."""
+    proc = subprocess.run(
+        [sys.executable, str(HERE / "pool_checks.py"), "rff"],
+        capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    report = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert report["devices"] == 8, report
+    assert report["rff_backend"] == "stream_shard"
+    assert report["rff_pool_equals_stream"], report
+    assert report["rff_tasks_completed_exact"], report
+    for scenario in ("killed_1", "killed_2", "straggler"):
+        assert report[f"rff_{scenario}_labels_equal"], report
+        assert report[f"rff_{scenario}_inertia_equal"], report
+    assert report["rff_killed_1_deaths"] >= 1
+    assert report["rff_killed_2_deaths"] >= 2
+    assert report["rff_killed_requeued"] >= 1
+    assert report["rff_straggler_stolen"] >= 1
+
+
+# ------------------------------------------------- mid-fit Lloyd checkpoints
+
+
+def _flaky(store, fail_after):
+    """A store whose get() raises once `fail_after` total reads have been
+    served — a mid-fit ingest crash, at the exact seam a real one hits."""
+    count, lock = [0], threading.Lock()
+
+    def get(i):
+        with lock:
+            count[0] += 1
+            if count[0] > fail_after:
+                raise RuntimeError("simulated ingest crash")
+        return store.get(i)
+
+    return BlockStore(get, n=store.n, d=store.d, block_rows=store.block_rows)
+
+
+def _assert_resume_identical(tmp_path, make_est, store, fail_after):
+    key = jax.random.PRNGKey(7)
+    ref = make_est().fit(store, key=key)
+    with pytest.raises(RuntimeError, match="simulated ingest crash"):
+        make_est().fit(_flaky(store, fail_after), key=key,
+                       checkpoint_dir=tmp_path)
+    from repro.distributed.checkpoint import LLOYD_STATE_DIR, latest_step
+
+    # the crash landed AFTER at least one completed iteration was published
+    assert latest_step(tmp_path / "restart_0" / LLOYD_STATE_DIR) >= 1
+    before = obs.snapshot("pool.")
+    resumed = make_est().fit(store, key=key, checkpoint_dir=tmp_path)
+    seen = obs.delta(before, obs.snapshot("pool."))
+    assert seen["pool.ckpt_resumes"] >= 1
+    assert np.array_equal(ref.labels_, resumed.labels_)
+    assert resumed.n_iter_ == ref.n_iter_
+    assert resumed.inertia_ == ref.inertia_
+    return ref, resumed
+
+
+def test_stream_fit_resumes_identical_after_midfit_crash(tmp_path):
+    store, _ = _blobs()
+    nb = store.num_blocks
+    # reservoir pass + iteration 1 + half of iteration 2
+    _assert_resume_identical(tmp_path, lambda: _est("stream"), store,
+                             fail_after=2 * nb + nb // 2)
+
+
+def test_pool_stream_shard_fit_resumes_identical_after_midfit_crash(tmp_path):
+    store, _ = _blobs()
+    nb = store.num_blocks
+    # Speculative backups re-read blocks, so a pool pass may consume up to
+    # 2x num_blocks reads: a 3nb+2 budget guarantees iteration 1 checkpoints
+    # before the crash lands (the fit needs >= 4nb reads in total).
+    _assert_resume_identical(
+        tmp_path,
+        lambda: _est("stream_shard", mesh=_mesh(), scheduler="pool"),
+        store, fail_after=3 * nb + 2)
+
+
+def test_minibatch_fit_resumes_identical_after_midfit_crash(tmp_path):
+    store, _ = _blobs()
+    nb = store.num_blocks
+    _assert_resume_identical(
+        tmp_path,
+        lambda: _est("minibatch", decay=0.9, epochs=3), store,
+        fail_after=2 * nb + nb // 2)
+
+
+def test_lloyd_checkpoint_ignores_mismatched_fingerprint(tmp_path):
+    """A checkpoint from a DIFFERENT fit (other k / init / data shape) must
+    not be adopted: the refit runs from scratch and still matches."""
+    store, _ = _blobs()
+    key = jax.random.PRNGKey(7)
+    other = KernelKMeans(3, method="rff", m=32, n_init=1, iters=4,
+                         block_rows=128, backend="stream")
+    other.fit(store, key=key, checkpoint_dir=tmp_path)  # k=3 state on disk
+    ref = _est("stream").fit(store, key=key)
+    refit = _est("stream").fit(store, key=key, checkpoint_dir=tmp_path)
+    assert np.array_equal(ref.labels_, refit.labels_)
+    assert refit.n_iter_ == ref.n_iter_
+
+
+# ----------------------------------------------------------- elastic restore
+
+
+def test_elastic_restores_cluster_model_and_sweep_result(tmp_path):
+    from repro.distributed.checkpoint import save_cluster_model
+    from repro.launch.elastic import restore_cluster_model, restore_sweep_result
+
+    store, _ = _blobs()
+    key = jax.random.PRNGKey(7)
+    est = _est("stream").fit(store, key=key)
+    save_cluster_model(tmp_path / "model", est.model_)
+    loaded = restore_cluster_model(tmp_path / "model")
+    assert np.array_equal(np.asarray(loaded.centroids),
+                          np.asarray(est.model_.centroids))
+    assert float(loaded.inertia) == float(est.model_.inertia)
+    assert loaded.meta.backend == "stream"
+
+    result = _est("stream").sweep(store, k_grid=[3, 4], restarts=1, key=key,
+                                  checkpoint_dir=tmp_path / "sweep")
+    sweep = restore_sweep_result(tmp_path / "sweep")
+    assert sweep.k_grid == result.k_grid
+    assert (sweep.best_k_index, sweep.best_restart) == (
+        result.best_k_index, result.best_restart)
+
+
+def test_elastic_lloyd_resume_counts_device_count_changes(tmp_path):
+    from repro.distributed.checkpoint import (
+        lloyd_fingerprint, save_lloyd_state,
+    )
+    from repro.launch.elastic import resume_lloyd_state
+
+    init = jnp.asarray(np.arange(12, dtype=np.float32).reshape(4, 3))
+    fp = lloyd_fingerprint(kind="ooc", n=100, d=5, k=4, m=3, init=init)
+    save_lloyd_state(
+        tmp_path, step=2, centroids=init, labels=np.zeros(100, np.int32),
+        trajectory=[9.0, 8.0], shifts=[0.5, 0.25], changed=True,
+        fingerprint=fp, devices_used=8,
+    )
+    before = obs.snapshot("pool.")
+    state = resume_lloyd_state(tmp_path, fingerprint=fp, devices_used=3)
+    seen = obs.delta(before, obs.snapshot("pool."))
+    assert state is not None and state["step"] == 2
+    assert state["devices_used"] == 8
+    assert seen["pool.ckpt_resumes"] == 1
+    assert seen["pool.elastic_resumes"] == 1  # 8 workers saved, 3 resuming
+
+    # same fleet size: a plain (non-elastic) resume
+    before = obs.snapshot("pool.")
+    assert resume_lloyd_state(tmp_path, fingerprint=fp, devices_used=8)
+    seen = obs.delta(before, obs.snapshot("pool."))
+    assert seen["pool.ckpt_resumes"] == 1
+    assert seen.get("pool.elastic_resumes", 0) == 0
+
+    # a different fingerprint must NOT be adopted
+    other = lloyd_fingerprint(kind="ooc", n=100, d=5, k=5, m=3, init=init)
+    assert resume_lloyd_state(tmp_path, fingerprint=other) is None
