@@ -23,7 +23,10 @@ covered the moment they are named BENCH_something.json.
 "X" (complete) events carry finite ts/dur and a pid/tid lane that a
 thread_name "M" metadata event names; `--min-lanes N` additionally requires
 N distinct lanes (e.g. 2 device producers). `--metrics` files must be flat
-strict-JSON objects of finite numbers / histogram-stat dicts.
+strict-JSON objects of finite numbers / histogram-stat dicts;
+`--require-metric NAME` (repeatable, trailing '.' = prefix match) asserts
+specific instruments were actually emitted — the serve smoke uses it to pin
+`serve.shed_total` and the per-model `serve.model.` namespace.
 """
 from __future__ import annotations
 
@@ -129,6 +132,47 @@ def check_embed(path: Path, d: dict):
                   "fused_speedup")
 
 
+def check_serve(path: Path, d: dict):
+    """The serving-tier SLO gate rides in the JSON: sustained open-loop
+    levels must hold the p99 bound with zero dropped/incorrect responses
+    across the mid-run hot swap, and the saturation run must DEMONSTRABLY
+    shed (typed rejections) rather than queue-collapse."""
+    cfg = d["config"]
+    slo = _need(path, cfg, "slo_p99_ms", (int, float))
+    levels = _need(path, d, "levels", dict)
+    if not levels:
+        _fail(path, "levels is empty (need >= 1 sustained QPS level)")
+    for qps, lv in levels.items():
+        _positive(path, lv, "target_qps", "rows_per_s", "p50_ms", "p99_ms",
+                  "admitted")
+        for key in ("dropped", "errors", "incorrect"):
+            if _need(path, lv, key, (int, float)) != 0:
+                _fail(path, f"levels.{qps}.{key} must be 0, "
+                            f"got {lv[key]}")
+        if lv["p99_ms"] > slo:
+            _fail(path, f"levels.{qps}.p99_ms {lv['p99_ms']:.1f} "
+                        f"exceeds SLO {slo}")
+        # the hot swap happened mid-level and BOTH model versions answered:
+        # zero-downtime swap measured, not assumed
+        _need(path, lv, "swap_s", (int, float))
+        if lv.get("responses_old_model", 0) < 1 or \
+                lv.get("responses_new_model", 0) < 1:
+            _fail(path, f"levels.{qps}: hot swap did not serve both model "
+                        "versions")
+    sat = _need(path, d, "saturation", dict)
+    _positive(path, sat, "target_qps", "p99_ms")
+    if _need(path, sat, "shed_rate", (int, float)) <= 0:
+        _fail(path, "saturation.shed_rate must be > 0 "
+                    "(admission control never shed)")
+    if sat.get("dropped", 0) != 0 or sat.get("errors", 0) != 0:
+        _fail(path, "saturation dropped/errored admitted requests "
+                    "(queue collapse, not shedding)")
+    if d.get("swap_performed") is not True:
+        _fail(path, "swap_performed must be true")
+    if d.get("zero_errors") is not True:
+        _fail(path, "zero_errors must be true")
+
+
 def check_sweep(path: Path, d: dict):
     _positive(path, d, "sweep_s", "repeated_fit_s", "speedup")
     table = _need(path, d, "sweep_inertia_table", dict)
@@ -201,10 +245,13 @@ def check_trace(path: Path, *, min_lanes: int = 1):
     return {named[l] for l in lanes}
 
 
-def check_metrics(path: Path):
+def check_metrics(path: Path, require: list[str] | None = None):
     """Validate a metric-snapshot file (what stream_bench --trace writes next
     to the trace): a flat strict-JSON object mapping metric names to finite
-    numbers or histogram-stat dicts."""
+    numbers or histogram-stat dicts. Each `require` entry must match an
+    instrument exactly, or (when it ends in '.') as a name prefix — e.g.
+    `--require-metric serve.shed_total --require-metric serve.model.` asserts
+    the admission counter AND at least one per-model instrument were emitted."""
     d = _strict_load(path)
     if not isinstance(d, dict):
         _fail(path, "top level must be a JSON object")
@@ -214,7 +261,14 @@ def check_metrics(path: Path):
         if not isinstance(v, (int, float, dict)):
             _fail(path, f"metric {name!r} has type {type(v).__name__}")
     _finite_numbers(path, d)
-    print(f"[check-bench] {path} OK (metrics: {len(d)} instruments)")
+    for want in require or []:
+        if want.endswith("."):
+            if not any(name.startswith(want) for name in d):
+                _fail(path, f"no metric with prefix {want!r} in snapshot")
+        elif want not in d:
+            _fail(path, f"required metric {want!r} missing from snapshot")
+    print(f"[check-bench] {path} OK (metrics: {len(d)} instruments"
+          + (f", {len(require)} required present" if require else "") + ")")
 
 
 FAMILIES = {
@@ -224,6 +278,7 @@ FAMILIES = {
     "BENCH_pool.json": check_pool,
     "BENCH_embed.json": check_embed,
     "BENCH_sweep.json": check_sweep,
+    "BENCH_serve.json": check_serve,
 }
 
 
@@ -253,10 +308,19 @@ def main(argv=None):
                     help="metric-snapshot JSON to validate (repeatable)")
     ap.add_argument("--min-lanes", type=int, default=1,
                     help="minimum distinct lanes each --trace must contain")
+    ap.add_argument("--require-metric", action="append", default=[],
+                    help="instrument each --metrics snapshot must contain; "
+                         "a trailing '.' matches as a name prefix "
+                         "(repeatable)")
     args = ap.parse_args(argv)
     paths = [Path(a) for a in args.files]
     if not paths and not args.trace and not args.metrics:
-        paths = sorted(REPO.glob("BENCH_*.json"))
+        # *.metrics.json companions are metric snapshots, not trajectory
+        # files — they carry no "config" and are validated via --metrics
+        paths = sorted(p for p in REPO.glob("BENCH_*.json")
+                       if not p.name.endswith(".metrics.json"))
+        args.metrics = sorted(
+            str(p) for p in REPO.glob("BENCH_*.metrics.json"))
         if not paths:
             raise SystemExit("[check-bench] no BENCH_*.json files found")
     for p in paths:
@@ -272,7 +336,7 @@ def main(argv=None):
         p = Path(m)
         if not p.exists():
             _fail(p, "file does not exist")
-        check_metrics(p)
+        check_metrics(p, require=args.require_metric)
     total = len(paths) + len(args.trace) + len(args.metrics)
     print(f"[check-bench] {total} file(s) valid")
 

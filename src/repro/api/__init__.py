@@ -39,13 +39,19 @@ from repro.policy import ComputePolicy
 
 
 def __getattr__(name):
-    # SweepResult lives in repro.sweep (which imports repro.api for the
-    # ClusterModel artifact); lazy re-export avoids the import cycle while
-    # keeping `from repro.api import SweepResult` working.
+    # SweepResult lives in repro.sweep, the serving surface in repro.serving
+    # (both import repro.api for the ClusterModel artifact); lazy re-export
+    # avoids the import cycles while keeping `from repro.api import
+    # SweepResult / ModelRegistry / ServingTier / Shed` working — fit, sweep
+    # and serve are one public surface.
     if name == "SweepResult":
         from repro.sweep.result import SweepResult
 
         return SweepResult
+    if name in ("ModelRegistry", "ServingTier", "Shed"):
+        import repro.serving as _serving
+
+        return getattr(_serving, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
@@ -61,6 +67,9 @@ __all__ = [
     "FitMeta",
     "KERNELS",
     "KernelKMeans",
+    "ModelRegistry",
+    "ServingTier",
+    "Shed",
     "SweepResult",
     "available_backends",
     "ensure_embedding_cache",

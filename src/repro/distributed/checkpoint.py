@@ -376,6 +376,25 @@ def load_sweep_result(ckpt_dir: str | Path, *, step: int | None = None):
     )
 
 
+def load_any_model(ckpt_dir: str | Path, *, step: int | None = None):
+    """ClusterModel from EITHER artifact kind under `ckpt_dir`: a
+    cluster-model checkpoint is loaded directly; a sweep-result checkpoint
+    yields its selected winner. This is what the serving registry's hot-swap
+    path points at — `swap(name, ckpt_dir)` serves whichever artifact the
+    last fit or sweep published, without the caller knowing which."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    manifest = json.loads(
+        (ckpt_dir / f"step_{step:08d}" / "manifest.json").read_text()
+    )
+    if "sweep" in manifest.get("meta", {}):
+        return load_sweep_result(ckpt_dir, step=step).best
+    return load_cluster_model(ckpt_dir, step=step)
+
+
 # --------------------------------------------------------------------------
 # Mid-fit Lloyd checkpoints (control-plane recovery; DESIGN.md section 14).
 #

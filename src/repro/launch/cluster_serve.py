@@ -1,19 +1,24 @@
-"""Online assignment service: the clustering analogue of launch/serve.py.
+"""Online assignment service CLI — a thin launcher over `repro.serving`.
 
     PYTHONPATH=src python -m repro.launch.cluster_serve --requests 10000 \
-        --micro-batch 256
+        --micro-batch 256 --rate 2000
 
 Loads a fitted `ClusterModel` — training one through the unified
 `repro.api.KernelKMeans` estimator on blocked synthetic data first if no
---ckpt is given, then round-tripping it through
-`distributed/checkpoint.save_cluster_model` so the served model always comes
-off disk (the train->serve loop) — and serves `predict` over a replayed
-request stream with micro-batching: up to B requests (or a deadline) are
-collected and assigned in ONE fused embed+assign dispatch. Reports p50/p90/p99
-per-request latency and throughput (a periodic stats line while the replay
-runs, a final summary, and an optional --stats-json dump of the full metric
-snapshot), then verifies every served label against `core.kkmeans.predict`
-on the replayed log.
+--ckpt is given, then round-tripping it through the checkpoint layer so the
+served model always comes off disk (the train->serve loop) — registers it in
+a `ModelRegistry`, and serves `predict` through the async `ServingTier`:
+concurrent intake, admission control, per-model micro-batching, one fused
+embed+assign dispatch per batch.
+
+Two traffic modes: `--rate 0` (default) replays the request log closed-loop
+with backpressure (`submit_wait`); `--rate Q` drives an open-loop Poisson
+arrival process at Q req/s through the load generator, optionally hot-
+swapping to `--swap-ckpt` after `--swap-after` requests — the production
+model-push rehearsal. Either way the CLI reports p50/p90/p99 end-to-end
+latency and throughput, then verifies every served label against
+`core.kkmeans.predict` on the replayed log (responses tagged with a post-
+swap version are checked against the swapped model).
 """
 from __future__ import annotations
 
@@ -29,10 +34,11 @@ import numpy as np
 from repro import obs
 from repro.api import ComputePolicy, KernelKMeans
 from repro.core.kkmeans import predict
-from repro.distributed.checkpoint import load_cluster_model
+from repro.distributed.checkpoint import load_any_model
 from repro.embed import DEFAULT_EMBEDDING, available_embeddings, get_embedding
-from repro.kernels import ops
-from repro.stream.microbatch import MicroBatcher
+from repro.serving import ModelRegistry, ServingTier, run_open_loop
+from repro.serving.registry import make_process_fn  # noqa: F401  (re-export;
+# harnesses that built a raw process closure from this module keep working)
 
 
 def _policy_of(args) -> ComputePolicy:
@@ -84,31 +90,25 @@ def _fit_and_save(args, ckpt_dir: str) -> None:
     est.save(ckpt_dir)
 
 
-def make_process_fn(model, *, max_batch: int, policy: ComputePolicy):
-    """One fused embed+assign dispatch per micro-batch. Batches are padded to
-    max_batch so the service compiles exactly one program (stable latency)."""
-    centroids = jnp.asarray(model.centroids)
-
-    def process(X: np.ndarray) -> np.ndarray:
-        b = X.shape[0]
-        if b < max_batch:
-            X = np.pad(X, ((0, max_batch - b), (0, 0)))
-        labels = ops.predict_block(  # labels only: no (Z, g) build
-            jnp.asarray(X), model.params, centroids, policy=policy
-        )
-        return np.asarray(labels)[:b]
-
-    return process
-
-
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=10000)
     ap.add_argument("--micro-batch", type=int, default=256)
     ap.add_argument("--max-delay-ms", type=float, default=2.0)
     ap.add_argument("--rate", type=float, default=0.0,
-                    help="open-loop arrival rate (req/s); 0 = closed-loop replay")
+                    help="open-loop Poisson arrival rate (req/s); "
+                         "0 = closed-loop replay with backpressure")
+    ap.add_argument("--max-inflight", type=int, default=4096,
+                    help="admission bound: in-flight requests past this shed "
+                         "with a typed rejection instead of queueing")
     ap.add_argument("--ckpt", default="", help="load model from here instead of fitting")
+    ap.add_argument("--swap-ckpt", default="",
+                    help="open-loop mode: hot-swap the served model to this "
+                         "checkpoint (ClusterModel or SweepResult winner) "
+                         "after --swap-after requests")
+    ap.add_argument("--swap-after", type=int, default=0,
+                    help="request index triggering --swap-ckpt "
+                         "(default: half of --requests)")
     ap.add_argument("--n-fit", type=int, default=20000)
     ap.add_argument("--block-rows", type=int, default=4096)
     ap.add_argument("--d", type=int, default=16)
@@ -154,7 +154,7 @@ def main(argv=None):
         ckpt_dir = args.ckpt or tmp
         if not args.ckpt:
             _fit_and_save(args, ckpt_dir)
-        model = load_cluster_model(ckpt_dir)
+        model = load_any_model(ckpt_dir)
     policy = _policy_of(args)
 
     # Request log: held-out rows from the fit distribution.
@@ -166,66 +166,90 @@ def main(argv=None):
     )
     X_req = req_store.get(0)
 
-    process = make_process_fn(model, max_batch=args.micro_batch, policy=policy)
-    process(X_req[: args.micro_batch])  # warm the compile outside the timed loop
-
     obs.reset_metrics("serve.")
-    batcher = MicroBatcher(
-        process, max_batch=args.micro_batch, max_delay_s=args.max_delay_ms / 1e3
+    registry = ModelRegistry(max_batch=args.micro_batch, policy=policy)
+    registry.register("default", model)  # warm: compiles off the serve path
+    swap_model = None
+    swap_after = None
+    if args.swap_ckpt:
+        swap_model = load_any_model(args.swap_ckpt)
+        swap_after = args.swap_after or args.requests // 2
+    tier = ServingTier(
+        registry, max_delay_s=args.max_delay_ms / 1e3,
+        max_inflight=args.max_inflight,
     )
-    lat_hist = obs.histogram("serve.latency_ms")  # fed by the batcher
-    interarrival = 1.0 / args.rate if args.rate > 0 else 0.0
-    t0 = time.perf_counter()
-    next_arrival = t0
-    for i in range(args.requests):
-        if interarrival:
-            next_arrival += interarrival
-            while True:  # honor pending deadlines while waiting for the arrival
-                now = time.perf_counter()
-                deadline = batcher.next_deadline
-                target = next_arrival if deadline is None else min(next_arrival, deadline)
-                if target > now:
-                    time.sleep(target - now)
-                batcher.poll()
-                if time.perf_counter() >= next_arrival:
-                    break
-        batcher.submit(i, X_req[i])
-        if args.stats_every and (i + 1) % args.stats_every == 0:
-            done = len(batcher.completed)
-            elapsed = time.perf_counter() - t0
-            print(f"[cluster-serve] {i + 1}/{args.requests} submitted, "
-                  f"{done} served at {done / max(elapsed, 1e-9):.0f} req/s | "
-                  f"rolling latency p50 {lat_hist.percentile(50):.2f}ms "
-                  f"p90 {lat_hist.percentile(90):.2f}ms "
-                  f"p99 {lat_hist.percentile(99):.2f}ms | "
-                  f"queue depth {obs.gauge('serve.queue_depth').value:.0f}")
-    batcher.drain()
+    e2e = obs.histogram("serve.e2e_latency_ms")
+
+    stats_state = {"n": 0, "t0": 0.0}
+
+    def progress(_resp):
+        stats_state["n"] += 1
+        n = stats_state["n"]
+        if args.stats_every and n % args.stats_every == 0:
+            elapsed = time.perf_counter() - stats_state["t0"]
+            print(f"[cluster-serve] {n}/{args.requests} served at "
+                  f"{n / max(elapsed, 1e-9):.0f} req/s | "
+                  f"rolling e2e p50 {e2e.percentile(50):.2f}ms "
+                  f"p90 {e2e.percentile(90):.2f}ms "
+                  f"p99 {e2e.percentile(99):.2f}ms | "
+                  f"inflight {obs.gauge('serve.inflight').value:.0f}")
+
+    tier.on_response = progress
+    tier.start()
+    stats_state["t0"] = time.perf_counter()
+    t0 = stats_state["t0"]
+    if args.rate > 0:
+        report = run_open_loop(
+            tier, X_req, qps=args.rate, n_requests=args.requests,
+            seed=args.seed, swap_after=swap_after, swap_source=swap_model,
+        )
+        responses = sorted(report.responses, key=lambda r: r.request_id)
+        shed = report.shed
+        if report.swap_s is not None:
+            print(f"[cluster-serve] hot swap after request {swap_after}: "
+                  f"{report.swap_s * 1e3:.1f}ms warm+flip, versions served "
+                  f"{report.by_version}")
+    else:
+        futs = [tier.submit_wait(i, X_req[i]) for i in range(args.requests)]
+        responses = [f.result() for f in futs]
+        shed = 0
+    tier.stop()
     wall = time.perf_counter() - t0
 
-    lat_ms = np.asarray([lat for _, _, lat in batcher.completed]) * 1e3
-    served = np.asarray([lab for _, lab, _ in batcher.completed], dtype=np.int32)
-    order = [rid for rid, _, _ in batcher.completed]
-    assert order == list(range(args.requests)), "micro-batcher reordered requests"
+    served_ids = sorted(r.request_id for r in responses)
+    n_served = len(responses)
+    assert served_ids == list(range(args.requests))[: n_served] or \
+        len(set(served_ids)) == n_served, "duplicate or lost responses"
+    lat_ms = np.asarray([r.latency_s for r in responses]) * 1e3
 
-    # Replay the request log through the reference path.
-    ref = np.asarray(predict(jnp.asarray(X_req), model.params, model.centroids,
-                             policy=policy))
-    mismatches = int(np.sum(served != ref))
+    # Replay the request log through the reference path — per model version,
+    # so a mid-run swap is verified against the model that actually answered.
+    refs = {1: np.asarray(predict(jnp.asarray(X_req), model.params,
+                                  model.centroids, policy=policy))}
+    if swap_model is not None:
+        refs[2] = np.asarray(predict(jnp.asarray(X_req), swap_model.params,
+                                     swap_model.centroids, policy=policy))
+    mismatches = sum(
+        1 for r in responses
+        if not r.ok or r.label != int(refs[r.version][r.request_id % args.requests])
+    )
     p50, p90, p99 = (np.percentile(lat_ms, p) for p in (50, 90, 99))
-    print(f"[cluster-serve] {args.requests} requests, micro-batch {args.micro_batch} "
-          f"(mean actual {np.mean(batcher.batch_sizes):.1f}), "
-          f"{args.requests / wall:.0f} req/s")
-    print(f"[cluster-serve] latency p50 {p50:.2f}ms p90 {p90:.2f}ms p99 {p99:.2f}ms")
+    print(f"[cluster-serve] {n_served}/{args.requests} served "
+          f"(shed {shed}), micro-batch {args.micro_batch}, "
+          f"{n_served / wall:.0f} req/s")
+    print(f"[cluster-serve] e2e latency p50 {p50:.2f}ms p90 {p90:.2f}ms "
+          f"p99 {p99:.2f}ms")
     print(f"[cluster-serve] replay check vs core.kkmeans.predict: "
-          f"{args.requests - mismatches}/{args.requests} exact"
+          f"{n_served - mismatches}/{n_served} exact"
           + (" [OK]" if mismatches == 0 else " [MISMATCH]"))
     stats = {
         "requests": args.requests, "micro_batch": args.micro_batch,
-        "wall_s": float(wall), "req_per_s": args.requests / wall,
+        "served": n_served, "shed": shed,
+        "wall_s": float(wall), "req_per_s": n_served / wall,
         "p50_ms": float(p50), "p90_ms": float(p90), "p99_ms": float(p99),
         "mismatches": mismatches,
-        # full rolling-metric snapshot: latency/batch-size histogram stats,
-        # queue-depth gauge (value + high-water mark)
+        # full rolling-metric snapshot: latency/batch-size histograms,
+        # admission + per-model counters, queue-depth gauge (+ hwm)
         "metrics": obs.snapshot("serve."),
     }
     if args.stats_json:

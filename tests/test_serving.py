@@ -1,0 +1,405 @@
+"""Tests for repro.serving: the async high-QPS assignment tier.
+
+The load-bearing properties:
+  * registry lifecycle — register / resolve / swap / evict, versioned
+    entries, typed errors naming the registered set;
+  * swap consistency — under concurrent load with a forced mid-run hot swap,
+    every response is answered by exactly ONE of {old, new} model (no torn
+    batches), nothing is dropped, and versions are non-decreasing in
+    delivery order;
+  * admission control — past the in-flight bound requests shed with the
+    typed `Shed` instead of queueing (and every admitted request still gets
+    its response);
+  * MicroBatcher concurrency — 8 submitter threads cannot drop or
+    double-dispatch a request (the flush-race regression), and callback
+    delivery keeps the long-running service at O(max_batch) state.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.serving import (
+    ModelRegistry,
+    ServingTier,
+    Shed,
+    run_open_loop,
+)
+from repro.stream.microbatch import MicroBatcher
+
+# ------------------------------------------------------------- registry
+
+
+def _ident(X):
+    return X[:, 0].astype(np.int32)
+
+
+def _ident_plus(offset):
+    return lambda X: X[:, 0].astype(np.int32) + offset
+
+
+def test_registry_lifecycle():
+    reg = ModelRegistry(max_batch=8)
+    e1 = reg.register("a", _ident, d=1)
+    assert e1.version == 1 and reg.resolve("a") is e1
+    assert "a" in reg and len(reg) == 1
+
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("a", _ident, d=1)
+
+    e2 = reg.swap("a", _ident_plus(10), d=1)
+    assert e2.version == 2
+    assert reg.resolve("a") is e2
+    assert e1.process is not e2.process
+
+    reg.register("b", _ident, d=1)
+    assert reg.names() == ["a", "b"]
+
+    reg.evict("b")
+    with pytest.raises(KeyError, match="registered: \\['a'\\]"):
+        reg.resolve("b")
+    with pytest.raises(KeyError, match="no serving model"):
+        reg.swap("missing", _ident, d=1)
+    with pytest.raises(KeyError):
+        reg.evict("missing")
+
+
+def test_swap_counts_in_metrics():
+    obs.reset_metrics("serve.")
+    reg = ModelRegistry(max_batch=4)
+    reg.register("m", _ident, d=1)
+    reg.swap("m", _ident_plus(1), d=1)
+    reg.swap("m", _ident_plus(2), d=1)
+    snap = obs.snapshot("serve.")
+    assert snap["serve.swaps"] == 2
+    assert snap["serve.model.m.swaps"] == 2
+    assert reg.resolve("m").version == 3
+
+
+# ------------------------------------------------------------------ tier
+
+
+def test_tier_serves_and_preserves_request_identity():
+    reg = ModelRegistry(max_batch=16)
+    reg.register("m", _ident, d=1)
+    with ServingTier(reg, max_delay_s=0.001, max_inflight=256) as tier:
+        futs = [tier.submit(i, np.full(1, i, np.float32), "m")
+                for i in range(100)]
+        out = [f.result(timeout=10) for f in futs]
+    assert [r.label for r in out] == list(range(100))
+    assert all(r.ok and r.version == 1 and r.model == "m" for r in out)
+    assert all(r.latency_s >= 0 for r in out)
+
+
+def test_tier_unknown_model_rejected_at_submit():
+    reg = ModelRegistry(max_batch=4)
+    reg.register("m", _ident, d=1)
+    with ServingTier(reg) as tier:
+        with pytest.raises(KeyError, match="registered: \\['m'\\]"):
+            tier.submit(0, np.zeros(1, np.float32), "nope")
+    with pytest.raises(RuntimeError, match="not running"):
+        tier.submit(0, np.zeros(1, np.float32), "m")
+
+
+def test_mid_swap_label_consistency_under_load():
+    """THE swap acceptance property: a forced hot swap under concurrent load
+    drops nothing, answers every request with exactly one of {old, new}
+    model, and never serves a torn batch (versions non-decreasing in
+    delivery order)."""
+    obs.reset_metrics("serve.")
+    reg = ModelRegistry(max_batch=32)
+    reg.register("m", _ident, d=1)
+
+    delivered = []
+    dlock = threading.Lock()
+
+    def on_response(resp):
+        with dlock:
+            delivered.append(resp)
+
+    n_threads, per_thread = 4, 300
+    tier = ServingTier(reg, max_delay_s=0.0005, max_inflight=10_000,
+                       on_response=on_response).start()
+
+    half = threading.Event()  # trips once half the pre-swap load is served
+
+    def on_response_counting(resp):
+        with dlock:
+            delivered.append(resp)
+            if len(delivered) >= (n_threads * per_thread) // 2:
+                half.set()
+
+    tier.on_response = on_response_counting
+
+    def submitter(t):
+        for i in range(per_thread):
+            tier.submit((t, i), np.full(1, t * per_thread + i, np.float32), "m")
+            time.sleep(0.0002)
+
+    threads = [threading.Thread(target=submitter, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    assert half.wait(timeout=30), "load never reached the half-way mark"
+    reg.swap("m", _ident_plus(1_000_000), d=1)  # forced mid-run swap
+    # requests submitted strictly after the flip MUST be served by v2
+    post = [tier.submit(("post", i), np.full(1, i, np.float32), "m")
+            for i in range(50)]
+    for th in threads:
+        th.join()
+    post_out = [f.result(timeout=30) for f in post]
+    tier.stop()
+
+    total = n_threads * per_thread + len(post)
+    assert len(delivered) == total, "dropped or duplicated responses"
+    assert len({r.request_id for r in delivered}) == total
+
+    for r in delivered:
+        t_i = r.request_id
+        if t_i[0] == "post":
+            continue
+        base = t_i[0] * per_thread + t_i[1]
+        if r.version == 1:
+            assert r.label == base, r
+        else:
+            assert r.version == 2 and r.label == base + 1_000_000, r
+    assert all(r.version == 2 and r.label == i + 1_000_000
+               for i, r in enumerate(post_out))
+
+    versions = [r.version for r in delivered]
+    assert versions == sorted(versions), "torn/interleaved model versions"
+    assert {1, 2} <= set(versions), "swap did not land mid-run"
+    assert obs.snapshot("serve.")["serve.swaps"] == 1
+
+
+def test_admission_sheds_at_saturation_without_collapse():
+    """Past the in-flight bound, submits shed with the typed rejection —
+    and every ADMITTED request still completes with bounded latency."""
+    obs.reset_metrics("serve.")
+    reg = ModelRegistry(max_batch=8)
+
+    def slow(X):
+        time.sleep(0.005)  # saturate: service rate << offered rate
+        return X[:, 0].astype(np.int32)
+
+    reg.register("m", slow, d=1)
+    tier = ServingTier(reg, max_delay_s=0.001, max_inflight=24).start()
+    futs, shed = [], 0
+    for i in range(400):  # flood far past the bound, no pacing
+        try:
+            futs.append(tier.submit(i, np.full(1, i, np.float32), "m"))
+        except Shed as e:
+            shed += 1
+            assert e.limit == 24 and e.inflight >= 24
+    out = [f.result(timeout=60) for f in futs]
+    tier.stop()
+
+    assert shed > 0, "saturation never shed"
+    assert len(out) == 400 - shed, "an admitted request was dropped"
+    assert all(r.ok for r in out)
+    assert tier.admission.inflight == 0
+    snap = obs.snapshot("serve.")
+    assert snap["serve.shed_total"] == shed
+    assert snap["serve.admitted"] == 400 - shed
+    assert snap["serve.model.m.served"] == 400 - shed
+
+
+def test_tier_survives_failing_batch():
+    """A dispatch that raises fails its OWN batch (typed error responses)
+    and the dispatcher keeps serving later requests."""
+    obs.reset_metrics("serve.")
+    reg = ModelRegistry(max_batch=4)
+    state = {"boom": False}
+
+    def flaky(X):
+        if state["boom"]:
+            raise RuntimeError("kaboom")
+        return X[:, 0].astype(np.int32)
+
+    reg.register("m", flaky, d=1)  # warm runs pre-failure
+    state["boom"] = True
+    with ServingTier(reg, max_delay_s=0.0005) as tier:
+        bad = [tier.submit(i, np.full(1, i, np.float32), "m") for i in range(4)]
+        bad_out = [f.result(timeout=10) for f in bad]
+        state["boom"] = False
+        good = [tier.submit(10 + i, np.full(1, 10 + i, np.float32), "m")
+                for i in range(4)]
+        good_out = [f.result(timeout=10) for f in good]
+    assert all(not r.ok and "kaboom" in r.error and r.label == -1
+               for r in bad_out)
+    assert [r.label for r in good_out] == [10, 11, 12, 13]
+    assert all(r.ok for r in good_out)
+    assert obs.snapshot("serve.")["serve.errors"] == 4
+
+
+def test_multi_model_routing():
+    """Several live models: requests route by name, each batch serves one."""
+    reg = ModelRegistry(max_batch=8)
+    reg.register("even", _ident, d=1)
+    reg.register("odd", _ident_plus(100), d=1)
+    with ServingTier(reg, max_delay_s=0.001) as tier:
+        futs = [tier.submit(i, np.full(1, i, np.float32),
+                            "even" if i % 2 == 0 else "odd")
+                for i in range(60)]
+        out = [f.result(timeout=10) for f in futs]
+    for i, r in enumerate(out):
+        assert r.label == (i if i % 2 == 0 else i + 100), (i, r)
+        assert r.model == ("even" if i % 2 == 0 else "odd")
+
+
+# --------------------------------------------------------------- loadgen
+
+
+def test_open_loop_loadgen_with_swap():
+    reg = ModelRegistry(max_batch=16)
+    reg.register("default", _ident, d=1)
+    tier = ServingTier(reg, max_delay_s=0.001, max_inflight=2048).start()
+    X = np.arange(500, dtype=np.float32)[:, None]
+    rep = run_open_loop(
+        tier, X, qps=4000, n_requests=400, seed=3,
+        swap_after=200, swap_source=_ident_plus(7000), swap_d=1,
+    )
+    tier.stop()
+    assert rep.offered == 400
+    assert rep.admitted + rep.shed == rep.offered
+    assert len(rep.responses) == rep.admitted
+    assert rep.errors == 0
+    assert rep.swap_s is not None and rep.swap_s >= 0
+    assert set(rep.by_version) <= {1, 2} and 2 in rep.by_version
+    for r in rep.responses:
+        want = r.request_id % 500 + (0 if r.version == 1 else 7000)
+        assert r.label == want, (r, want)
+    assert rep.latency_ms(99) >= rep.latency_ms(50) > 0
+    assert rep.rows_per_s > 0
+
+
+# ---------------------------------------------- MicroBatcher (satellites)
+
+
+def test_microbatcher_concurrent_submitters_regression():
+    """8 threads hammer submit while flushes run: exactly-once delivery and
+    per-thread submission order survive (the queue-swap race regression)."""
+    delivered = []
+    dlock = threading.Lock()
+
+    def on_result(rid, label, _lat):
+        with dlock:
+            delivered.append((rid, label))
+
+    mb = MicroBatcher(lambda X: X[:, 0].astype(np.int32), max_batch=16,
+                      max_delay_s=0.001, on_result=on_result)
+    n_threads, per_thread = 8, 250
+
+    def submitter(t):
+        for i in range(per_thread):
+            mb.submit((t, i), np.full(2, t * per_thread + i, np.float32))
+
+    threads = [threading.Thread(target=submitter, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    mb.drain()
+
+    total = n_threads * per_thread
+    assert len(delivered) == total, "a racing flush dropped/duplicated work"
+    assert len({rid for rid, _ in delivered}) == total
+    # labels stay glued to their own request through any interleaving
+    for (t, i), label in delivered:
+        assert label == t * per_thread + i
+    # per-thread delivery order == per-thread submission order
+    for t in range(n_threads):
+        seq = [rid[1] for rid, _ in delivered if rid[0] == t]
+        assert seq == sorted(seq), f"thread {t} reordered"
+
+
+def test_microbatcher_callback_mode_accumulates_nothing():
+    got = []
+    mb = MicroBatcher(lambda X: np.zeros(len(X), np.int32), max_batch=4,
+                      on_result=lambda rid, lab, lat: got.append(rid))
+    for i in range(100):
+        mb.submit(i, np.zeros(2, np.float32))
+    mb.drain()
+    assert got == list(range(100))
+    assert len(mb.completed) == 0, "callback mode must not grow a log"
+    assert len(mb.batch_sizes) <= 8192
+
+
+def test_microbatcher_bounded_replay_log():
+    mb = MicroBatcher(lambda X: np.zeros(len(X), np.int32), max_batch=4,
+                      on_result=lambda *a: None, replay_log=16)
+    for i in range(100):
+        mb.submit(i, np.zeros(2, np.float32))
+    mb.drain()
+    assert len(mb.completed) == 16  # the LAST 16, bounded
+    assert [rid for rid, _, _ in mb.completed] == list(range(84, 100))
+    drained = mb.drain_completed()
+    assert [rid for rid, _, _ in drained] == list(range(84, 100))
+    assert len(mb.completed) == 0
+
+
+def test_microbatcher_drain_completed():
+    mb = MicroBatcher(lambda X: np.zeros(len(X), np.int32), max_batch=4)
+    for i in range(10):
+        mb.submit(i, np.zeros(2, np.float32))
+    mb.drain()
+    out = mb.drain_completed()
+    assert [rid for rid, _, _ in out] == list(range(10))
+    assert len(mb.completed) == 0 and mb.drain_completed() == []
+
+
+# ------------------------------------------- checkpoint-backed registry
+
+
+@pytest.mark.parametrize("artifact", ["model", "sweep"])
+def test_registry_serves_checkpointed_artifacts(tmp_path, artifact):
+    """register/swap from a checkpoint directory: a ClusterModel artifact
+    loads directly, a SweepResult artifact serves its selected winner, and
+    the tier's labels match core.kkmeans.predict exactly."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.api import KernelKMeans
+    from repro.core.kkmeans import predict
+    from repro.distributed.checkpoint import (
+        load_any_model,
+        save_sweep_result,
+    )
+    from repro.data.synthetic import gaussian_blobs
+    from repro.sweep.result import SweepResult
+
+    X, _ = gaussian_blobs(jax.random.PRNGKey(0), n=400, d=4, k=3,
+                          separation=4.0)
+    est = KernelKMeans(3, kernel="rbf", kernel_params={"gamma": 0.25},
+                       l=24, m=16, iters=5)
+    est.fit(X, key=jax.random.PRNGKey(1))
+    model = est.model_
+    ckpt = tmp_path / "ck"
+    if artifact == "model":
+        est.save(ckpt)
+    else:
+        sweep = SweepResult(
+            models=[[model]],
+            inertia=np.asarray([[float(model.inertia)]], np.float32),
+            labels=None, k_grid=(3,), restarts=1, backend="local",
+            best_k_index=0, best_restart=0,
+        )
+        save_sweep_result(ckpt, sweep)
+    loaded = load_any_model(ckpt)
+    assert loaded.centroids.shape == model.centroids.shape
+
+    reg = ModelRegistry(max_batch=32)
+    reg.register("default", str(ckpt))
+    X_req = np.asarray(X[:64])
+    with ServingTier(reg, max_delay_s=0.001) as tier:
+        futs = [tier.submit(i, X_req[i]) for i in range(64)]
+        out = [f.result(timeout=30) for f in futs]
+    ref = np.asarray(predict(jnp.asarray(X_req), model.params,
+                             model.centroids))
+    assert [r.label for r in out] == [int(v) for v in ref]
+    assert all(r.ok and r.version == 1 for r in out)
