@@ -89,6 +89,8 @@ def run_open_loop(
     admitted = 0
 
     def on_response(resp: ServeResponse) -> None:
+        if prev_cb is not None:
+            prev_cb(resp)  # keep any user-installed callback live mid-run
         with lock:
             responses.append(resp)
             if finished[0] and len(responses) >= admitted:
@@ -96,7 +98,7 @@ def run_open_loop(
 
     finished = [False]
     prev_cb = tier.on_response
-    tier.on_response = on_response  # composition point; restored at exit
+    tier.on_response = on_response  # chained above; restored at exit
 
     swap_s: float | None = None
     swap_thread: threading.Thread | None = None

@@ -143,9 +143,12 @@ class ModelRegistry:
         return entry
 
     def evict(self, name: str) -> ServingModel:
-        """Remove a model. Requests already batched against its entry finish
-        normally (they hold the entry); NEW requests for the name are
-        rejected at submit with the registered-names KeyError."""
+        """Remove a model. A flush that already resolved the entry finishes
+        normally (it holds the entry); requests still queued for the name
+        when their flush runs get typed error responses (the tier resolves
+        per batch and fails the batch on KeyError — never the dispatcher);
+        NEW requests are rejected at submit with the registered-names
+        KeyError."""
         with self._lock:
             entry = self._entries.pop(name, None)
             known = sorted(self._entries)

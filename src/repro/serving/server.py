@@ -90,6 +90,13 @@ class ServingTier:
     ):
         self.registry = registry
         self.max_batch = int(max_batch or registry.max_batch)
+        if self.max_batch > registry.max_batch:
+            raise ValueError(
+                f"tier max_batch {self.max_batch} exceeds the registry's "
+                f"max_batch {registry.max_batch}: registry closures pad every "
+                "flush to the registry's max_batch, so bigger flushes would "
+                "recompile per batch shape on the hot path"
+            )
         self.max_delay_s = float(max_delay_s)
         self.clock = clock
         self.on_response = on_response
@@ -185,8 +192,13 @@ class ServingTier:
 
     def _process_for(self, name: str):
         def process(X: np.ndarray) -> np.ndarray:
-            entry = self.registry.resolve(name)  # ONE snapshot per batch
+            entry = None
             try:
+                # ONE snapshot per batch. Inside the try: the name may have
+                # been evicted between submit's fast-fail and this flush, and
+                # that KeyError must fail THIS batch, not kill the dispatcher
+                # (which would strand every in-flight future, for all models).
+                entry = self.registry.resolve(name)
                 labels = entry.process(X)
                 self._last_flush[name] = (entry, None)
                 return labels
@@ -204,14 +216,19 @@ class ServingTier:
         lat = self.clock() - req.t_submit
         resp = ServeResponse(
             request_id=req.request_id, label=int(label), model=req.model,
-            version=entry.version, latency_s=lat, error=err,
+            version=entry.version if entry is not None else -1,
+            latency_s=lat, error=err,
         )
         self.admission.release()
         self._e2e.observe(lat * 1e3)
         obs.counter(f"serve.model.{req.model}.served").inc()
         fut.set_result(resp)
         if self.on_response is not None:
-            self.on_response(resp)
+            try:
+                self.on_response(resp)
+            except Exception:  # noqa: BLE001 — a user callback runs on the
+                # dispatcher thread; its bugs must not stop the service
+                obs.counter("serve.callback_errors").inc()
 
     def _deadline_in(self) -> float | None:
         """Seconds until the earliest batcher deadline (None: nothing

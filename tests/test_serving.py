@@ -236,6 +236,52 @@ def test_tier_survives_failing_batch():
     assert obs.snapshot("serve.")["serve.errors"] == 4
 
 
+def test_evict_with_pending_requests_fails_batch_not_dispatcher():
+    """Evicting a model while requests for it sit queued (submit fast-fail
+    passed, flush not yet run) must deliver typed error responses for THAT
+    batch — not kill the dispatcher and strand every in-flight future."""
+    obs.reset_metrics("serve.")
+    reg = ModelRegistry(max_batch=64)
+    reg.register("doomed", _ident, d=1)
+    reg.register("other", _ident_plus(500), d=1)
+    # max_batch 64 with a long max_delay: submits sit in the batcher until
+    # the deadline flush, leaving a window to evict underneath them
+    tier = ServingTier(reg, max_delay_s=0.1, max_inflight=256).start()
+    try:
+        doomed = [tier.submit(i, np.full(1, i, np.float32), "doomed")
+                  for i in range(3)]
+        other = [tier.submit(10 + i, np.full(1, i, np.float32), "other")
+                 for i in range(2)]
+        time.sleep(0.02)  # let the dispatcher batch them, pre-deadline
+        reg.evict("doomed")
+
+        doomed_out = [f.result(timeout=10) for f in doomed]  # must not hang
+        assert all(not r.ok and "KeyError" in r.error and r.label == -1
+                   and r.version == -1 for r in doomed_out)
+        # the dispatcher survived: the other model's batch still serves
+        other_out = [f.result(timeout=10) for f in other]
+        assert [r.label for r in other_out] == [500, 501]
+        assert all(r.ok for r in other_out)
+        # and the tier keeps serving — including a re-registered name
+        reg.register("doomed", _ident_plus(9), d=1)
+        again = tier.submit(99, np.full(1, 1, np.float32), "doomed")
+        assert again.result(timeout=10).label == 10
+    finally:
+        tier.stop()
+    assert tier.admission.inflight == 0
+    assert obs.snapshot("serve.")["serve.errors"] == 3
+
+
+def test_tier_max_batch_cannot_exceed_registry():
+    """Registry closures pad to the REGISTRY's max_batch; a tier flushing
+    bigger batches would recompile per shape, so it is rejected up front."""
+    reg = ModelRegistry(max_batch=8)
+    with pytest.raises(ValueError, match="exceeds the registry's max_batch"):
+        ServingTier(reg, max_batch=16)
+    assert ServingTier(reg, max_batch=8).max_batch == 8
+    assert ServingTier(reg).max_batch == 8
+
+
 def test_multi_model_routing():
     """Several live models: requests route by name, each batch serves one."""
     reg = ModelRegistry(max_batch=8)
@@ -275,6 +321,22 @@ def test_open_loop_loadgen_with_swap():
         assert r.label == want, (r, want)
     assert rep.latency_ms(99) >= rep.latency_ms(50) > 0
     assert rep.rows_per_s > 0
+
+
+def test_open_loop_loadgen_chains_existing_callback():
+    """run_open_loop composes with (not clobbers) a user-installed
+    on_response, and restores it when the run finishes."""
+    reg = ModelRegistry(max_batch=16)
+    reg.register("default", _ident, d=1)
+    seen = []
+    tier = ServingTier(reg, max_delay_s=0.001, max_inflight=2048,
+                       on_response=lambda r: seen.append(r.request_id)).start()
+    prev = tier.on_response
+    X = np.arange(50, dtype=np.float32)[:, None]
+    rep = run_open_loop(tier, X, qps=5000, n_requests=50, seed=1)
+    tier.stop()
+    assert sorted(seen) == sorted(r.request_id for r in rep.responses)
+    assert tier.on_response is prev
 
 
 # ---------------------------------------------- MicroBatcher (satellites)
