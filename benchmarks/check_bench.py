@@ -80,7 +80,16 @@ def _positive(path: Path, obj: dict, *keys: str):
 def check_stream(path: Path, d: dict):
     _positive(path, d, "embed_sync_rows_per_s", "embed_async_rows_per_s",
               "overlap_speedup", "ooc_lloyd_rows_per_s_per_iter",
-              "minibatch_rows_per_s")
+              "minibatch_rows_per_s", "fused_step_rows_per_s",
+              "unfused_step_rows_per_s", "fused_step_speedup")
+    frac = _need(path, d, "fused_step_model_fraction", (int, float))
+    if not 0.0 < frac <= 1.0:
+        _fail(path, f"fused_step_model_fraction out of (0, 1]: {frac}")
+    # the acceptance gate rides in the JSON: on a full-size run the one-
+    # dispatch plan step must beat the embed -> assign -> cost chain
+    if not d["config"].get("smoke") and d["fused_step_speedup"] < 1.15:
+        _fail(path, f"fused_step_speedup {d['fused_step_speedup']:.2f}x "
+                    "< 1.15x")
 
 
 def check_api(path: Path, d: dict):
@@ -100,6 +109,19 @@ def check_stream_shard(path: Path, d: dict):
     agree = _need(path, d, "min_label_agreement_vs_1dev", (int, float))
     if not 0.0 <= agree <= 1.0:
         _fail(path, f"min_label_agreement_vs_1dev out of [0, 1]: {agree}")
+    # multi-device files must record the s-step variant (sstep > 1 is a
+    # no-op on one device: local stats ARE global stats there)
+    if max(int(c) for c in per) > 1:
+        ss = _need(path, d, "sstep", dict)
+        _positive(path, ss, "sstep", "fit_s", "rows_per_s",
+                  "speedup_vs_sstep1")
+        ss_agree = _need(path, ss, "label_agreement_vs_sstep1", (int, float))
+        if not 0.0 <= ss_agree <= 1.0:
+            _fail(path, f"sstep.label_agreement_vs_sstep1 out of [0, 1]: "
+                        f"{ss_agree}")
+        if not d["config"].get("smoke") and ss_agree < 0.95:
+            _fail(path, f"sstep label agreement {ss_agree:.4f} < 0.95: "
+                        "deferred syncs changed the clustering")
 
 
 def check_pool(path: Path, d: dict):

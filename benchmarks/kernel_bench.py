@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.core.apnc import pairwise_discrepancy, sufficient_stats
 from repro.core.kernels_fn import Kernel
-from repro.core import nystrom
+from repro.embed.apnc import fit_nystrom
 
 
 def _time(fn, *args, reps=5):
@@ -40,7 +40,7 @@ def _time(fn, *args, reps=5):
 def bench_embed(n=8192, d=256, l=512, m=256):
     X = jax.random.normal(jax.random.PRNGKey(0), (n, d))
     kern = Kernel("rbf", gamma=0.05)
-    coeffs = nystrom.fit(jax.random.PRNGKey(1), X, kern, l=l, m=m)
+    coeffs = fit_nystrom(jax.random.PRNGKey(1), X, kern, l=l, m=m)
 
     @jax.jit
     def embed(X):
@@ -84,6 +84,38 @@ def bench_lloyd_iteration(n=65536, m=256, k=64):
             "derived": f"{n / (us * 1e-6) / 1e6:.2f}Mrows/s/iter"}
 
 
+def bench_fused_step(n=65536, d=64, l=256, m=128, k=16):
+    """One plan-fused Lloyd block step (embed + assign + (Z, g) + cost in ONE
+    dispatch, Y never materialized) against the pre-plan chain (embed dispatch
+    materializing Y, then assign_stats, then block_cost — which recomputes the
+    full distance matrix). The ratio is the fused_step_speedup family that
+    check_bench gates at >= 1.15x on full-size BENCH_stream.json runs."""
+    from repro.core.lloyd import assign_stats, block_cost
+    from repro.kernels import ops
+    from repro.policy import ComputePolicy
+
+    X = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    kern = Kernel("rbf", gamma=1.0 / d)
+    coeffs = fit_nystrom(jax.random.PRNGKey(1), X[:4 * l], kern, l=l, m=m)
+    pol = ComputePolicy(pallas=False)
+    C = ops.embed_block_map(X[:k], coeffs, policy=pol)
+    plan = ops.lloyd_step_plan(params=coeffs, policy=pol)
+
+    def unfused(X, C):
+        y = ops.embed_block_map(X, coeffs, policy=pol)
+        Z, g, labels = assign_stats(y, C, k, coeffs.discrepancy, policy=pol)
+        return Z, g, labels, block_cost(y, C, coeffs.discrepancy)
+
+    us_fused = _time(lambda X, C: plan.step(X, C), X, C)
+    us_unfused = _time(unfused, X, C)
+    speedup = us_unfused / us_fused
+    return {"name": "lloyd_fused_step", "us_per_call": us_fused,
+            "us_per_call_unfused": us_unfused, "fused_speedup": speedup,
+            "derived": f"{n / (us_fused * 1e-6) / 1e6:.2f}Mrows/s fused, "
+                       f"{speedup:.2f}x vs embed+assign+cost chain "
+                       f"n={n} d={d} l={l} m={m} k={k}"}
+
+
 def bench_flash_attention(B=1, S=1024, H=4, Dh=64):
     """XLA-path wall clock of the attention shape the Pallas kernel targets
     (the kernel itself is interpret-validated; see EXPERIMENTS §Kernels)."""
@@ -105,10 +137,11 @@ def run_all(*, smoke: bool = False):
             bench_assign(n=4096, m=64, k=16, disc="l2"),
             bench_assign(n=2048, m=64, k=16, disc="l1"),
             bench_lloyd_iteration(n=4096, m=64, k=16),
+            bench_fused_step(n=8192, d=32, l=64, m=32, k=8),
             bench_flash_attention(B=1, S=256, H=2, Dh=32),
         ]
     return [bench_embed(), bench_assign(disc="l2"), bench_assign(disc="l1", n=16384),
-            bench_lloyd_iteration(), bench_flash_attention()]
+            bench_lloyd_iteration(), bench_fused_step(), bench_flash_attention()]
 
 
 def main(argv=None):

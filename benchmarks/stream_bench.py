@@ -90,7 +90,7 @@ from repro.stream.reservoir import reservoir_sample
 
 def bench_stream_embed(store: BlockStore, coeffs, *, prefetch: int) -> float:
     """rows/s of one full streaming-embed pass (discarding Y: pure map)."""
-    map_fn = jax.jit(lambda x: ops.apnc_embed_block_map(x, coeffs))
+    map_fn = jax.jit(lambda x: ops.embed_block_map(x, coeffs))
     # warm the compile on both block shapes outside the timed pass
     jax.block_until_ready(map_fn(jnp.asarray(store.get(0))))
     if store.rows_of(store.num_blocks - 1) != store.rows_of(0):
@@ -101,6 +101,108 @@ def bench_stream_embed(store: BlockStore, coeffs, *, prefetch: int) -> float:
     )
     jax.block_until_ready(out)
     return store.n / (time.perf_counter() - t0)
+
+
+def bench_fused_step(store, coeffs, k: int, policy) -> dict:
+    """Fused-vs-unfused Lloyd block step on ONE device-resident block.
+
+    fused   = `ops.lloyd_step_plan(...).step`: embed + assign + (Z, g) + cost
+              in a single dispatch, Y never leaves the step;
+    unfused = the pre-plan chain: embed_block_map materializing Y, then
+              assign_stats, then block_cost (a second full distance matrix).
+
+    Measured on a 4096-row step: the chain's fixed overhead (two extra
+    dispatches + the Y round-trip) is per-block, so the fusion win is
+    largest in the small-block regime (sharded tail blocks, serving
+    micro-batches) and asymptotes toward the duplicate-distance flops ratio
+    as blocks grow. check_bench gates fused_step_speedup >= 1.15x on
+    full-size (non-smoke) BENCH_stream.json runs; the roofline join reports
+    what fraction of the analytically modeled step time the fused
+    measurement achieves."""
+    from repro.core.lloyd import assign_stats, block_cost
+    from repro.obs import roofline_join
+    from repro.roofline.analysis import lloyd_step_record
+
+    x = jnp.asarray(store.get(0))[:4096]
+    n, d = x.shape
+    l, m = coeffs.landmarks.shape[0], coeffs.m
+    C = ops.embed_block_map(x[:k], coeffs, policy=policy)
+    plan = ops.lloyd_step_plan(params=coeffs, policy=policy)
+
+    def unfused(x, C):
+        y = ops.embed_block_map(x, coeffs, policy=policy)
+        Z, g, labels = assign_stats(y, C, k, coeffs.discrepancy, policy=policy)
+        return Z, g, labels, block_cost(y, C, coeffs.discrepancy)
+
+    def timed(fn, reps=7):
+        jax.block_until_ready(fn(x, C))  # compile + warm
+        best = float("inf")
+        for _ in range(reps):  # best-of: robust to the container's CPU quota
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x, C))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_fused = timed(lambda x, C: plan.step(x, C))
+    t_unfused = timed(unfused)
+    joined = roofline_join(t_fused, lloyd_step_record(n=n, d=d, l=l, m=m, k=k))
+    out = {
+        "fused_step_rows_per_s": n / t_fused,
+        "unfused_step_rows_per_s": n / t_unfused,
+        "fused_step_speedup": t_unfused / t_fused,
+        "fused_step_model_fraction": joined["model_fraction"],
+    }
+    print(f"[stream-bench] fused Lloyd step {out['fused_step_rows_per_s']/1e6:.2f}M "
+          f"rows/s vs unfused {out['unfused_step_rows_per_s']/1e6:.2f}M "
+          f"({out['fused_step_speedup']:.2f}x, model_fraction "
+          f"{out['fused_step_model_fraction']:.3f}; gate: >=1.15x non-smoke)")
+    return out
+
+
+def bench_sstep(args, store, kern, policy, devs, base_entry):
+    """The communication-avoiding s-step variant on the full mesh: same fit
+    with ComputePolicy(sstep=3) — device-local (Z, g) updates between global
+    reduces, every 3rd iteration (and always the last) synced. Records the
+    wall-clock ratio and the label agreement vs the exact s=1 fit (deferred
+    syncs can move through different intermediate centroids, so agreement is
+    gated, not identity)."""
+    from jax.sharding import Mesh
+
+    D = len(devs)
+    mesh = Mesh(np.array(devs).reshape(D, 1), ("data", "model"))
+    key = jax.random.PRNGKey(3)
+    pol_s = ComputePolicy(prefetch=policy.prefetch, sstep=3)
+    est = KernelKMeans(
+        args.k, kernel=kern, backend="stream_shard", l=args.l, m=args.m,
+        iters=args.iters, n_init=1, policy=pol_s, mesh=mesh,
+    )
+    est.fit(store, key=key)  # warm the per-device compiles
+    dt = float("inf")
+    for _ in range(2):  # best-of-2: the container's CPU quota is noisy
+        t0 = time.perf_counter()
+        est.fit(store, key=key)
+        dt = min(dt, time.perf_counter() - t0)
+    agree = float(np.mean(est.labels_ == base_entry["labels"]))
+    out = {
+        "sstep": 3,
+        "devices": D,
+        "fit_s": dt,
+        "rows_per_s": args.n * (est.n_iter_ + 1) / dt,
+        "speedup_vs_sstep1": base_entry["fit_s"] / dt,
+        "label_agreement_vs_sstep1": agree,
+        "inertia": est.inertia_,
+        "inertia_sstep1": base_entry["inertia"],
+        "note": "on this single-core-quota CPU container all forced devices "
+                "share one core, so the deferred cross-device reduce cannot "
+                "buy wall-clock (the ratio is compute-bound noise); the "
+                "recorded value validates the s-step path end-to-end and the "
+                "agreement gate — the reduce saving materializes when the "
+                "sum crosses real interconnect",
+    }
+    print(f"[stream-bench] stream_shard D={D} sstep=3: {est.n_iter_} iters in "
+          f"{dt:.1f}s ({out['speedup_vs_sstep1']:.2f}x vs sstep=1, label "
+          f"agreement {agree:.4f})")
+    return out
 
 
 def bench_sharded(args, store, kern, policy, config):
@@ -144,6 +246,7 @@ def bench_sharded(args, store, kern, policy, config):
             "fit_s": dt, "rows_per_s": rows, "iters": est.n_iter_,
             "inertia": est.inertia_, "label_agreement_vs_1dev": agree,
         }
+        last_fit = {"labels": est.labels_, "fit_s": dt, "inertia": est.inertia_}
         print(f"[stream-bench] stream_shard D={c}: {est.n_iter_} iters in "
               f"{dt:.1f}s ({rows/1e6:.2f}M rows/s, speedup vs D=1 "
               f"{per_count[str(c)]['rows_per_s']/per_count[str(counts[0])]['rows_per_s']:.2f}x)")
@@ -157,6 +260,9 @@ def bench_sharded(args, store, kern, policy, config):
                 "single-core-quota container that, not XLA compute, is the "
                 "scalable part",
     }
+    if counts[-1] > 1:  # s-step needs >1 device: one device is always synced
+        result["sstep"] = bench_sstep(
+            args, store, kern, policy, devs[:counts[-1]], last_fit)
     Path(args.shard_out).write_text(json.dumps(result, indent=2))
     print(f"[stream-bench] wrote {args.shard_out}")
     return result
@@ -389,7 +495,8 @@ def main(argv=None):
              | {"block_rows": args.block_rows,
                 "blocks": store.num_blocks,
                 "scale_vs_resident": args.n // args.block_rows,
-                "ingest_delay_ms_simulated": args.ingest_delay_ms}
+                "ingest_delay_ms_simulated": args.ingest_delay_ms,
+                "smoke": bool(args.smoke)}
 
     if args.sharded or args.sharded_only:
         sharded_result = bench_sharded(args, store, kern, policy, config)
@@ -421,6 +528,9 @@ def main(argv=None):
     asyn = bench_stream_embed(store, coeffs, prefetch=args.prefetch)
     print(f"[stream-bench] embed async  {asyn/1e6:.2f}M rows/s "
           f"(overlap speedup {asyn/sync:.2f}x)")
+    # time against the zero-latency store: the fused-step claim is about the
+    # per-block device step, not the modeled ingest in front of it
+    fused_step = bench_fused_step(disk_store, coeffs, args.k, policy)
 
     overhead_pct = None
     if args.smoke:
@@ -455,14 +565,16 @@ def main(argv=None):
     # Dispatch overhead: the hand-rolled driver sequence the facade's stream
     # backend performs — same key, bitwise-identical work, no estimator layer.
     def hand_rolled():
+        from repro.api.estimator import phase1_keys
         from repro.core.lloyd import kmeanspp_init
         from repro.stream.lloyd import ooc_lloyd
 
-        # mirrors the facade's phase 1: independent reservoir / fit / seed keys
-        k_sample, k_fit, k_seed = jax.random.split(key, 3)
+        # the facade's phase 1: independent reservoir / fit / seed keys, taken
+        # from the ONE shared split so the mirror can never drift from it
+        k_sample, k_fit, k_seed = phase1_keys(key)
         s = jnp.asarray(reservoir_sample(store, 4096, seed=int(k_sample[-1])))
         cf = fit_coefficients(k_fit, s, kern, APNCConfig(l=args.l, m=args.m))
-        pool = ops.apnc_embed_block_map(s[:1024], cf, policy=policy)
+        pool = ops.embed_block_map(s[:1024], cf, policy=policy)
         init = kmeanspp_init(jax.random.fold_in(k_seed, 0), pool, args.k,
                              cf.discrepancy)
         return ooc_lloyd(store, args.k, coeffs=cf, iters=args.iters, init=init,
@@ -503,7 +615,7 @@ def main(argv=None):
         "ooc_lloyd_inertia": est.inertia_,
         "minibatch_rows_per_s": mb_rows,
         "minibatch_inertia": mb.inertia_,
-    }
+    } | fused_step
     if overhead_pct is not None:
         result["tracing_disabled_overhead_pct"] = overhead_pct
     Path(args.out).write_text(json.dumps(result, indent=2))

@@ -46,6 +46,19 @@ Array = jax.Array
 AUTO_STREAM_ROWS = 2_000_000
 
 
+def phase1_keys(key: Array) -> tuple[Array, Array, Array]:
+    """The facade's canonical phase-1 PRNG split: (k_sample, k_fit, k_seed).
+
+    Independent streams for WHICH rows the reservoir keeps, the embedding
+    fit's draws, and the k-means++ seeding — one key must not feed two draws
+    (reservoir selection would correlate with the fit). Anything that mirrors
+    the facade's seeding (benchmarks/stream_bench.py's hand-rolled driver)
+    must take its keys from HERE, so a future seeding change cannot silently
+    desynchronize label-identity baselines."""
+    k_sample, k_fit, k_seed = jax.random.split(key, 3)
+    return k_sample, k_fit, k_seed
+
+
 class KernelKMeans:
     """Kernel k-means via explicit embeddings (the paper's embed-and-conquer),
     scikit-learn-shaped, with pluggable execution backends and a pluggable
@@ -211,10 +224,7 @@ class KernelKMeans:
                     else np.asarray(array if array is not None else X,
                                     dtype=np.float32))
             store = BlockStore.from_array(X_np, self.block_rows)
-        # Independent streams for WHICH rows the reservoir keeps, the
-        # embedding fit's draws, and the k-means++ seeding — one key must not
-        # feed two draws (reservoir selection would correlate with the fit).
-        k_sample, k_fit, k_seed = jax.random.split(key, 3)
+        k_sample, k_fit, k_seed = phase1_keys(key)
         self._phases = {}
         with self._phase("reservoir"):
             sample = jnp.asarray(

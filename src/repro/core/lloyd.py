@@ -115,13 +115,20 @@ def lloyd(
             raise ValueError("provide key= for k-means++ init or init= centroids")
         init = kmeanspp_init(key, Y, k, discrepancy)
 
+    from repro.kernels import ops  # lazy: the plan lives in the kernel layer
+
+    # Y-mode plan: rows are already embedded, so the step is assign + stats +
+    # cost routed per policy — the same plan object every streaming backend
+    # builds its iteration from (DESIGN.md §16).
+    plan = ops.lloyd_step_plan(discrepancy=discrepancy, policy=policy)
+
     def body(carry):
         i, centroids, labels, _, costs, shifts = carry
-        Z, g, new_labels = assign_stats(Y, centroids, k, discrepancy, policy=policy)
         # Iteration i's inertia: cost of THIS assignment under the centroids
         # that made it — an extra reduction over the same distance matrix (the
         # streaming drivers record the identical quantity per block).
-        costs = costs.at[i].set(block_cost(Y, centroids, discrepancy))
+        Z, g, new_labels, cost = plan.step(Y, centroids)
+        costs = costs.at[i].set(cost)
         new_centroids = centroid_update(Z, g, centroids)
         shifts = shifts.at[i].set(
             jnp.linalg.norm(new_centroids - centroids)
@@ -140,9 +147,8 @@ def lloyd(
     )
     it, centroids, _, _, costs, shifts = jax.lax.while_loop(cond, body, state)
     # Labels AND inertia under the FINAL centroids (the loop's labels lag one
-    # update), routed through the SAME policy as the in-loop assignments —
+    # update), routed through the SAME plan as the in-loop assignments —
     # mirrors the streaming variants' final pass, so a budget-capped (or
     # Pallas-routed) run still matches ooc_lloyd label-for-label.
-    _, _, labels = assign_stats(Y, centroids, k, discrepancy, policy=policy)
-    inertia = block_cost(Y, centroids, discrepancy)
+    labels, inertia = plan.assign(Y, centroids)
     return LloydResult(labels, centroids, inertia, it, costs, shifts)

@@ -33,7 +33,15 @@ def fit(
     m: int,
     q: int = 1,
 ) -> APNCCoefficients:
-    """Fit APNC-Nys coefficients (shim over repro.embed.apnc.fit_nystrom)."""
+    """Fit APNC-Nys coefficients (deprecated shim over
+    repro.embed.apnc.fit_nystrom; bit-exact — it delegates untouched)."""
+    import warnings
+
+    warnings.warn(
+        "core.nystrom.fit is deprecated; use repro.embed.apnc.fit_nystrom "
+        "(or KernelKMeans(method='nystrom')) instead",
+        DeprecationWarning, stacklevel=2,
+    )
     from repro.embed.apnc import fit_nystrom
 
     return fit_nystrom(key, X, kernel, l=l, m=m, q=q)

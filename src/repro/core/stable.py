@@ -27,7 +27,15 @@ def fit(
     t: int | None = None,
     q: int = 1,
 ) -> APNCCoefficients:
-    """Fit APNC-SD coefficients (shim over repro.embed.apnc.fit_sd)."""
+    """Fit APNC-SD coefficients (deprecated shim over repro.embed.apnc.fit_sd;
+    bit-exact — it delegates untouched)."""
+    import warnings
+
+    warnings.warn(
+        "core.stable.fit is deprecated; use repro.embed.apnc.fit_sd "
+        "(or KernelKMeans(method='sd')) instead",
+        DeprecationWarning, stacklevel=2,
+    )
     from repro.embed.apnc import fit_sd
 
     return fit_sd(key, X, kernel, l=l, m=m, t=t, q=q)

@@ -6,7 +6,8 @@ BlockSpecs compile to Mosaic. `interpret=None` auto-detects.
 """
 from __future__ import annotations
 
-from functools import partial
+import warnings
+from functools import partial, wraps
 
 import jax
 import jax.numpy as jnp
@@ -15,6 +16,7 @@ from repro.core.apnc import APNCCoefficients
 from repro.core.kernels_fn import Kernel
 from repro.kernels import apnc_assign as _assign
 from repro.kernels import apnc_embed as _embed
+from repro.kernels import lloyd_step as _lloyd_step
 from repro.kernels import rff_embed as _rff
 from repro.policy import ComputePolicy, resolve_policy
 
@@ -236,10 +238,253 @@ def predict_block(
     return _embed_predict_block(x, params, centroids, pol)
 
 
-# Legacy names from when APNC was the only family member; same functions.
-apnc_embed_block_map = embed_block_map
-apnc_embed_assign_block = embed_assign_block
-apnc_predict_block = predict_block
+# ---------------------------------------------------------------------------
+# Fused Lloyd step: padded wrappers for kernels/lloyd_step.py
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("kernel", "discrepancy", "bn", "interpret"))
+def _fused_apnc_step_padded(x, landmarks, R, C, kernel, discrepancy, bn, interpret):
+    n = x.shape[0]
+    m = R.shape[0]
+    k = C.shape[0]
+    Xp = _pad_to(_pad_to(x, _LANE, 1), bn, 0)
+    Lp = _pad_to(_pad_to(landmarks, _LANE, 1), _LANE, 0)
+    # Zero R columns for padded landmarks (contribute nothing) and zero R rows
+    # for padded embedding dims — so C's matching padded columns can be zero.
+    Rp = _pad_to(_pad_to(R, _LANE, 1), _LANE, 0)
+    Cp = _pad_to(_pad_to(C, _LANE, 1), 8, 0)
+    if Cp.shape[0] != k:  # sentinel rows: huge coords never win the argmin
+        Cp = Cp.at[k:].set(_BIG)
+    Z, g, labels, cost = _lloyd_step.fused_apnc_step(
+        Xp, Lp, Rp, Cp, kernel, discrepancy, n_actual=n, bn=bn, interpret=interpret
+    )
+    return Z[:k, :m], g[:k, 0], labels[:n, 0], cost[0, 0]
+
+
+@partial(jax.jit, static_argnames=("scale", "discrepancy", "bn", "interpret"))
+def _fused_rff_step_padded(x, W, C, scale, discrepancy, bn, interpret):
+    n = x.shape[0]
+    mh = W.shape[1]
+    k = C.shape[0]
+    Xp = _pad_to(_pad_to(x, _LANE, 1), bn, 0)
+    Wp = _pad_to(_pad_to(W, _LANE, 0), _LANE, 1)
+    mhp = Wp.shape[1]
+    # C arrives in the real [cos, sin] layout (k, 2*mh); re-lay it out to the
+    # kernel's padded [cos | 0 | sin | 0] so lanes line up with Y in-kernel.
+    Cp = jnp.concatenate(
+        [_pad_to(C[:, :mh], _LANE, 1), _pad_to(C[:, mh:], _LANE, 1)], axis=1
+    )
+    Cp = _pad_to(Cp, 8, 0)
+    if Cp.shape[0] != k:
+        Cp = Cp.at[k:].set(_BIG)
+    Z, g, labels, cost = _lloyd_step.fused_rff_step(
+        Xp, Wp, Cp, discrepancy, n_actual=n,
+        scale=scale, m_half=mh, bn=bn, interpret=interpret,
+    )
+    Z = jnp.concatenate([Z[:k, :mh], Z[:k, mhp : mhp + mh]], axis=1)
+    return Z, g[:k, 0], labels[:n, 0], cost[0, 0]
+
+
+def fused_member(params) -> str | None:
+    """Which fused lloyd_step kernel can serve these params, if any.
+
+    "apnc" (q == 1 Nystrom/SD: landmarks + R fit whole in VMEM), "rff", or
+    None — q > 1 APNC and non-fusable members (TensorSketch's FFT) fall back
+    to the un-fused embed + assign chain.
+    """
+    if params is None:
+        return None
+    if isinstance(params, APNCCoefficients):
+        return "apnc" if params.q == 1 else None
+    try:
+        from repro.embed.rff import RFFParams
+    except ImportError:  # registry member not importable: no fused path
+        return None
+    if isinstance(params, RFFParams):
+        return "rff"
+    return None
+
+
+def fused_lloyd_step(
+    x: Array, params, centroids: Array, *,
+    bn: int = _lloyd_step.DEFAULT_BN, interpret: bool | None = None,
+) -> tuple[Array, Array, Array, Array]:
+    """ONE Pallas dispatch for a whole Lloyd block step: embed the raw block,
+    assign, and reduce to (Z, g, labels, cost) without Y touching HBM.
+    Only valid when `fused_member(params)` is not None."""
+    interpret = _auto_interpret(interpret)
+    bn_eff = min(bn, max(8, ((x.shape[0] + 7) // 8) * 8))
+    member = fused_member(params)
+    if member == "apnc":
+        return _fused_apnc_step_padded(
+            x, params.landmarks[0], params.R[0], centroids,
+            params.kernel, params.discrepancy, bn_eff, interpret,
+        )
+    if member == "rff":
+        return _fused_rff_step_padded(
+            x, params.W, centroids, params.scale,
+            params.discrepancy, bn_eff, interpret,
+        )
+    raise ValueError(f"no fused lloyd step for params of type {type(params)!r}")
+
+
+# ---------------------------------------------------------------------------
+# LloydStepPlan: the one policy-resolved per-block Lloyd step
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("discrepancy", "policy"))
+def _assign_stats_cost_y(y: Array, centroids: Array, discrepancy, policy):
+    from repro.core.lloyd import assign_stats, block_cost
+
+    Z, g, labels = assign_stats(
+        y, centroids, centroids.shape[0], discrepancy, policy=policy
+    )
+    return Z, g, labels, block_cost(y, centroids, discrepancy)
+
+
+@partial(jax.jit, static_argnames=("discrepancy", "policy"))
+def _assign_cost_y(y: Array, centroids: Array, discrepancy, policy):
+    Z, g, labels, cost = _assign_stats_cost_y(y, centroids, discrepancy, policy)
+    return labels, cost
+
+
+@partial(jax.jit, static_argnames=("policy",))
+def _embed_assign_cost_x(x: Array, params, centroids: Array, policy):
+    Z, g, labels, cost = _embed_assign_block_cost(x, params, centroids, policy)
+    return labels, cost
+
+
+class LloydStepPlan:
+    """One policy-resolved, jitted Lloyd block step, shared by EVERY backend.
+
+    `lloyd_step_plan(...)` resolves the (params, policy) pair ONCE into a plan;
+    every consumer (core.lloyd, stream, stream_shard lockstep + pool, sweep)
+    then builds its iteration from the same two calls instead of hand-wiring
+    the embed -> assign -> stats chain per driver:
+
+        step(block, centroids)   -> (Z, g, labels, cost)   # stats convention
+        assign(block, centroids) -> (labels, cost)          # final-pass form
+
+    `block` is a RAW (rows, d) block when the plan carries embedding params
+    (X-mode), or an already-embedded (rows, m) block when built with
+    `params=None, discrepancy=...` (Y-mode: the local backend and the sweep
+    engine's staged cache). Routing, most specific first:
+
+      * Pallas policy + fusable member (APNC q=1, RFF): the fused
+        kernels/lloyd_step.py kernel — embed + assign + reduce in one
+        dispatch, Y never leaves VMEM.
+      * Pallas policy, non-fusable (q>1 APNC, TensorSketch) or Y-mode: the
+        existing per-stage kernels (`apnc_embed`/`rff_embed` + `apnc_assign`).
+      * otherwise: the jnp reference chain — bit-identical to the
+        pre-plan drivers (it IS the same jitted functions).
+
+    Both methods are pure and traceable (safe inside lax.while_loop / vmap);
+    `block_map(cell)` / `assign_map(cell)` wrap them for the stream engine —
+    host-level closures over a 1-element centroids cell, instrumented with the
+    `lloyd.fused_step` span and `engine.fused_dispatches` counter when fused.
+    """
+
+    def __init__(self, *, params, discrepancy: str, policy: ComputePolicy, member):
+        self.params = params
+        self.discrepancy = discrepancy
+        self.policy = policy
+        self.fused_member = member
+
+    @property
+    def fused(self) -> bool:
+        return self.fused_member is not None
+
+    def step(self, block: Array, centroids: Array):
+        """(Z, g, labels, cost) for one block under `centroids`."""
+        if self.params is None:
+            return _assign_stats_cost_y(block, centroids, self.discrepancy, self.policy)
+        if self.fused:
+            return fused_lloyd_step(block, self.params, centroids)
+        return _embed_assign_block_cost(block, self.params, centroids, self.policy)
+
+    def assign(self, block: Array, centroids: Array):
+        """(labels, cost) for one block — the final / scoring pass."""
+        if self.params is None:
+            return _assign_cost_y(block, centroids, self.discrepancy, self.policy)
+        if self.fused:
+            _, _, labels, cost = fused_lloyd_step(block, self.params, centroids)
+            return labels, cost
+        return _embed_assign_cost_x(block, self.params, centroids, self.policy)
+
+    def _instrumented(self, fn):
+        if not self.fused:
+            return fn
+        from repro import obs
+
+        fused_dispatches = obs.counter("engine.fused_dispatches")
+
+        def wrapped(block):
+            with obs.span("lloyd.fused_step", cat="lloyd", member=self.fused_member):
+                out = fn(block)
+            fused_dispatches.inc()
+            return out
+
+        return wrapped
+
+    def block_map(self, centroids_cell: list):
+        """Per-block stats map for the stream engine: closes over a 1-element
+        centroids cell so drivers swap centroids between iterations without
+        retracing. Output tuple follows the stats convention (labels at index
+        2, cost at 3)."""
+        return self._instrumented(lambda block: self.step(block, centroids_cell[0]))
+
+    def assign_map(self, centroids_cell: list):
+        """Per-block final-pass map: (labels, cost), labels at index 0."""
+        return self._instrumented(lambda block: self.assign(block, centroids_cell[0]))
+
+
+def lloyd_step_plan(
+    params=None,
+    discrepancy: str | None = None,
+    *,
+    policy: ComputePolicy | None = None,
+) -> LloydStepPlan:
+    """Build the plan. Pass embedding `params` for X-mode (raw blocks), or
+    `params=None` with an explicit `discrepancy` for Y-mode (embedded blocks).
+    """
+    pol = resolve_policy(policy, owner="ops.lloyd_step_plan: ")
+    if params is None:
+        if discrepancy is None:
+            raise ValueError("Y-mode plan (params=None) needs discrepancy=")
+        member = None
+    else:
+        discrepancy = params.discrepancy
+        member = fused_member(params) if pol.resolve_pallas() else None
+    return LloydStepPlan(
+        params=params, discrepancy=discrepancy, policy=pol, member=member
+    )
+
+
+def _deprecated_alias(name: str, replacement: str, fn):
+    @wraps(fn)
+    def wrapper(*args, **kwargs):
+        warnings.warn(
+            f"ops.{name} is deprecated; use ops.{replacement} instead",
+            DeprecationWarning, stacklevel=2,
+        )
+        return fn(*args, **kwargs)
+
+    return wrapper
+
+
+# Legacy names from when APNC was the only family member; thin warning shims
+# over the same functions (bit-exact — they delegate without touching args).
+apnc_embed_block_map = _deprecated_alias(
+    "apnc_embed_block_map", "embed_block_map", embed_block_map
+)
+apnc_embed_assign_block = _deprecated_alias(
+    "apnc_embed_assign_block", "embed_assign_block", embed_assign_block
+)
+apnc_predict_block = _deprecated_alias(
+    "apnc_predict_block", "predict_block", predict_block
+)
 
 
 def flash_attention(

@@ -32,17 +32,25 @@ class ComputePolicy:
                outputs are always materialized as f32. The Pallas kernels
                accumulate in f32 regardless.
     prefetch:  block prefetch depth of the stream engine (0 = synchronous).
+    sstep:     communication-avoiding s-step factor for the `stream_shard`
+               lockstep scheduler: each device runs `sstep` Lloyd iterations
+               on device-LOCAL (Z, g) sufficient stats between cross-device
+               reductions (DESIGN.md §16). 1 = exact classic Lloyd (the
+               default; every other backend ignores the knob).
     """
 
     pallas: bool | None = None
     precision: Precision = "f32"
     prefetch: int = 2
+    sstep: int = 1
 
     def __post_init__(self):
         if self.precision not in ("f32", "bf16"):
             raise ValueError(f"unknown precision {self.precision!r}")
         if self.prefetch < 0:
             raise ValueError(f"prefetch must be >= 0, got {self.prefetch}")
+        if not isinstance(self.sstep, int) or self.sstep < 1:
+            raise ValueError(f"sstep must be an int >= 1, got {self.sstep!r}")
 
     def resolve_pallas(self) -> bool:
         """Concrete kernel routing: explicit wins, else Pallas on TPU only."""

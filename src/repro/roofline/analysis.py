@@ -48,6 +48,29 @@ def roofline_terms(*, flops: float, bytes_hbm: float, collective_bytes: float,
     return terms
 
 
+def lloyd_step_record(*, n: int, d: int, l: int, m: int, k: int,
+                      fused: bool = True) -> dict:
+    """Analytic dry-run-convention record for ONE Lloyd block step of the
+    APNC family: embed (gram + coefficient contraction) + assign + (Z, g)
+    reduce over an (n, d) block against (k, m) centroids.
+
+    flops: 2ndl (gram) + 2nlm (contraction) + 2nmk (distances) + 2nmk
+    (one-hot Z matmul). hbm_bytes: the operands and outputs that MUST cross
+    HBM — X, landmarks/R, centroids, (Z, g, labels). The un-fused chain
+    additionally round-trips the embedded Y (n, m) f32 once (write after
+    embed, read for assign): `fused=False` adds those 2*n*m*4 bytes, which is
+    exactly the traffic kernels/lloyd_step.py exists to eliminate. Feed the
+    result to `repro.obs.roofline_join` with a measured per-block wall time
+    to get the step's model_fraction."""
+    flops = 2.0 * n * d * l + 2.0 * n * l * m + 4.0 * n * m * k
+    bytes_hbm = 4.0 * (n * d + l * d + m * l + k * m  # block + operands in
+                       + k * m + k + n)               # Z + g + labels out
+    if not fused:
+        bytes_hbm += 2.0 * 4.0 * n * m  # Y round-trip: write + read
+    return {"flops": flops, "hbm_bytes": bytes_hbm, "bytes": bytes_hbm,
+            "collective_bytes": 0.0}
+
+
 # ---------------------------------------------------------------------------
 # analytic useful flops (MODEL_FLOPS)
 # ---------------------------------------------------------------------------

@@ -59,27 +59,15 @@ class StreamLloydResult(NamedTuple):
 
 
 def _block_map(coeffs, discrepancy, centroids_cell, pol: ComputePolicy):
-    """jit'd (Z, g, labels, cost) map for one block; embeds first when coeffs
-    given. Labels stay at index 2 (emit callbacks read out[2]); the trailing
-    cost is the block's inertia under the SAME centroids, an extra reduction
-    over the shared distance matrix — the per-iteration trajectory costs no
-    extra pass. `centroids_cell` is a 1-element list so minibatch can swap
+    """(Z, g, labels, cost) map for one block, built from the ONE
+    `ops.lloyd_step_plan` every backend shares: X-mode when coeffs given
+    (embed fused into the step — one Pallas dispatch for fusable members under
+    a Pallas policy), Y-mode otherwise. Labels stay at index 2 (emit callbacks
+    read out[2]); the trailing cost is the block's inertia under the SAME
+    centroids. `centroids_cell` is a 1-element list so minibatch can swap
     centroids between blocks without retracing."""
-    if coeffs is not None:
-        def fn(x):
-            return ops.embed_assign_block_cost(
-                x, coeffs, centroids_cell[0], policy=pol
-            )
-        return fn
-
-    from repro.core.lloyd import assign_stats, block_cost
-
-    @jax.jit
-    def assign(y, c):
-        Z, g, labels = assign_stats(y, c, c.shape[0], discrepancy, policy=pol)
-        return Z, g, labels, block_cost(y, c, discrepancy)
-
-    return lambda y: assign(y, centroids_cell[0])
+    plan = ops.lloyd_step_plan(params=coeffs, discrepancy=discrepancy, policy=pol)
+    return plan.block_map(centroids_cell)
 
 
 def stream_embed(
@@ -264,40 +252,19 @@ def ooc_lloyd(
 
 
 def _final_assign(store, coeffs, disc, centroids_cell, labels_host, prefetch, pol):
-    from repro.core.lloyd import block_cost
-
-    def min_dist(y, c):
-        return block_cost(y, c, disc)
+    """Final labels + inertia under the final centroids, ONE plan `assign`
+    dispatch per block. The embed-once-reuse-Y trick this pass used to
+    hand-roll now lives inside the plan, shared with stream/sharded's final
+    pass (labels at index 0, cost at 1 — the final-pass convention)."""
+    plan = ops.lloyd_step_plan(params=coeffs, discrepancy=disc, policy=pol)
 
     def emit(i, out):
         lo = store.row_offset(i)
-        labels_host[lo:lo + out[2].shape[0]] = np.asarray(out[2], dtype=np.int32)
-
-    if coeffs is not None:
-        from repro.core.lloyd import assign_stats
-
-        @jax.jit
-        def assign_with_inertia(x, c):  # embed ONCE, reuse y for stats + inertia
-            y = ops.embed_block_map(x, coeffs, policy=pol)
-            Z, g, labels = assign_stats(y, c, c.shape[0], disc, policy=pol)
-            return Z, g, labels, min_dist(y, c)
-
-        def map_with_inertia(x):
-            return assign_with_inertia(x, centroids_cell[0])
-    else:
-        from repro.core.lloyd import assign_stats
-
-        @jax.jit
-        def assign_with_inertia_y(y, c):  # one dispatch: XLA CSEs the shared D
-            Z, g, labels = assign_stats(y, c, c.shape[0], disc, policy=pol)
-            return Z, g, labels, min_dist(y, c)
-
-        def map_with_inertia(y):
-            return assign_with_inertia_y(y, centroids_cell[0])
+        labels_host[lo:lo + out[0].shape[0]] = np.asarray(out[0], dtype=np.int32)
 
     inertia = map_reduce(
-        store, map_with_inertia, lambda acc, out: acc + out[3], jnp.asarray(0.0),
-        prefetch=prefetch, emit=emit,
+        store, plan.assign_map(centroids_cell), lambda acc, out: acc + out[1],
+        jnp.asarray(0.0), prefetch=prefetch, emit=emit,
     )
     return float(inertia)
 

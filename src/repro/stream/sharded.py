@@ -28,7 +28,7 @@ approximate by design, like the single-device mini-batch itself.
 from __future__ import annotations
 
 import threading
-from functools import lru_cache, partial
+from functools import lru_cache
 from typing import Any, Callable, Sequence
 
 import jax
@@ -37,7 +37,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import obs
-from repro.core.lloyd import assign_stats, block_cost, centroid_update
+from repro.core.lloyd import centroid_update
 from repro.kernels import ops
 from repro.policy import ComputePolicy
 from repro.stream.blockstore import BlockStore
@@ -216,61 +216,34 @@ def cross_device_sum(accs: Sequence, devices) -> Any:
         return jax.tree_util.tree_map(stack_sum, *accs)
 
 
-# ------------------------------------------------------------ jit'd map fns
+# ------------------------------------------------------------ plan map fns
+#
+# Every per-block map below is built from the ONE `ops.lloyd_step_plan`
+# (stats AND final-pass forms) — the same plan core.lloyd, stream.lloyd and
+# the sweep engine run, so under a Pallas-enabled policy every backend
+# assigns through the same kernel and boundary rows cannot flip between the
+# stream / stream_shard / pool label-identity invariants.
 
 
-@partial(jax.jit, static_argnames=("k", "discrepancy", "policy"))
-def _assign_stats_y(y, c, k, discrepancy, policy):
-    return assign_stats(y, c, k, discrepancy, policy=policy)
-
-
-# (Z, g, labels) plus the block's inertia contribution in the same dispatch:
-# an extra reduction over the shared distance matrix. Labels stay at index 2
-# — the emit callbacks and the label-identity invariants see the exact same
-# assignment as the cost-free map.
-@partial(jax.jit, static_argnames=("k", "discrepancy", "policy"))
-def _assign_stats_cost_y(y, c, k, discrepancy, policy):
-    Z, g, labels = assign_stats(y, c, k, discrepancy, policy=policy)
-    return Z, g, labels, block_cost(y, c, discrepancy)
-
-
-# Final-pass labels go through the SAME policy-routed assign_stats as the
-# in-iteration maps (and as lloyd._final_assign): under a Pallas-enabled
-# policy both backends must assign through the same kernel, or boundary rows
-# could flip and break the stream_shard == stream label identity.
-@partial(jax.jit, static_argnames=("policy",))
-def _embed_assign_cost(x, params, c, policy):
-    from repro import embed
-
-    y = embed.transform(params, x, policy)
-    _, _, labels = assign_stats(
-        y, c, c.shape[0], params.discrepancy, policy=policy
-    )
-    return labels, block_cost(y, c, params.discrepancy)
-
-
-@partial(jax.jit, static_argnames=("discrepancy", "policy"))
-def _assign_cost_y(y, c, discrepancy, policy):
-    _, _, labels = assign_stats(y, c, c.shape[0], discrepancy, policy=policy)
-    return labels, block_cost(y, c, discrepancy)
+def _device_plans(coeffs_d, disc, pol, devices):
+    """One plan per device, closed over that device's committed params."""
+    return [
+        ops.lloyd_step_plan(params=coeffs_d[d], discrepancy=disc, policy=pol)
+        for d in range(len(devices))
+    ]
 
 
 def _stat_map_fns(coeffs_d, cells, k, disc, pol, devices):
     """Per-device (Z, g, labels, cost) maps reading the device's centroid
     cell — swapped between iterations/rounds without retracing."""
-    fns = []
-    for d in range(len(devices)):
-        if coeffs_d[d] is not None:
-            fns.append(
-                lambda x, p=coeffs_d[d], cell=cells[d]:
-                    ops.embed_assign_block_cost(x, p, cell[0], policy=pol)
-            )
-        else:
-            fns.append(
-                lambda y, cell=cells[d]:
-                    _assign_stats_cost_y(y, cell[0], k, disc, pol)
-            )
-    return fns
+    plans = _device_plans(coeffs_d, disc, pol, devices)
+    return [plan.block_map(cell) for plan, cell in zip(plans, cells)]
+
+
+def _assign_map_fns(coeffs_d, disc, c_locals, pol, devices):
+    """Per-device final-pass (labels, cost) maps under fixed centroids."""
+    plans = _device_plans(coeffs_d, disc, pol, devices)
+    return [plan.assign_map([c]) for plan, c in zip(plans, c_locals)]
 
 
 # ------------------------------------------------- pool scheduling policy
@@ -326,13 +299,7 @@ def _final_assign_pool(store, coeffs_d, disc, c_locals, labels_host, pol,
                        devices, lease_timeout):
     from repro.pool import pool_map_reduce
 
-    fns = []
-    for d in range(len(devices)):
-        if coeffs_d[d] is not None:
-            fns.append(lambda x, p=coeffs_d[d], c=c_locals[d]:
-                       _embed_assign_cost(x, p, c, pol))
-        else:
-            fns.append(lambda y, c=c_locals[d]: _assign_cost_y(y, c, disc, pol))
+    fns = _assign_map_fns(coeffs_d, disc, c_locals, pol, devices)
     outs = pool_map_reduce(
         store, fns, devices=devices, lease_timeout=lease_timeout,
         emit=_pool_label_emit(store, labels_host, index=0),
@@ -367,13 +334,7 @@ def _final_assign_sharded(
 ):
     """Final pass under the final centroids: labels + inertia, one partial
     cost per device summed on the host (the last tiny shuffle)."""
-    fns = []
-    for d in range(len(devices)):
-        if coeffs_d[d] is not None:
-            fns.append(lambda x, p=coeffs_d[d], c=c_locals[d]:
-                       _embed_assign_cost(x, p, c, pol))
-        else:
-            fns.append(lambda y, c=c_locals[d]: _assign_cost_y(y, c, disc, pol))
+    fns = _assign_map_fns(coeffs_d, disc, c_locals, pol, devices)
 
     def emit_of(shard):
         def emit(i, out):
@@ -419,6 +380,15 @@ def ooc_lloyd_sharded(
     number, centroids, labels, trajectory) is saved crash-atomically; a
     refit over the same problem (same shapes + same init, i.e. same
     estimator key) resumes mid-fit instead of restarting from the init.
+
+    policy.sstep > 1 enables the communication-avoiding s-step variant on the
+    lockstep scheduler: each device updates its OWN centroids from its local
+    (Z, g) for s-1 iterations, and only every s-th iteration (and the last
+    one) pays the cross-device shuffle — the per-device assignments drift
+    slightly between syncs, but the final pass always runs under globally
+    synchronized centroids (DESIGN.md §16). The pool scheduler merges on the
+    host every pass by construction and ignores the knob, as does D == 1
+    (local IS global). Checkpoints are only written at sync boundaries.
     """
     from repro.stream.lloyd import StreamLloydResult
 
@@ -432,7 +402,9 @@ def ooc_lloyd_sharded(
     coeffs_d = [jax.device_put(coeffs, dev) if coeffs is not None else None
                 for dev in devices]
     m = int(init.shape[1])
+    sstep = policy.sstep if scheduler == "lockstep" and D > 1 else 1
     c = _replicate(jnp.asarray(init), devices)
+    c_locals = _device_copies(c, devices)
     cells: list[list] = [[None] for _ in range(D)]
     map_fns = _stat_map_fns(coeffs_d, cells, k, disc, policy, devices)
 
@@ -462,13 +434,15 @@ def ooc_lloyd_sharded(
             trajectory = list(state["trajectory"])
             shifts = list(state["shifts"])
             c = _replicate(jnp.asarray(state["centroids"]), devices)
+            c_locals = _device_copies(c, devices)
 
+    synced = True
     while it < iters and changed[0]:
         changed[0] = False
         with obs.span("lloyd.iter", cat="lloyd", iter=it, devices=D,
                       scheduler=scheduler) as sp:
-            for d, cd in enumerate(_device_copies(c, devices)):
-                cells[d][0] = cd
+            for d in range(D):
+                cells[d][0] = c_locals[d]
             if scheduler == "pool":
                 Zh, gh, cost = _pool_stat_pass(
                     store, map_fns, labels_host, changed, devices,
@@ -480,6 +454,8 @@ def ooc_lloyd_sharded(
                 shift = float(jnp.linalg.norm(
                     jnp.asarray(np.asarray(new_c)) - c_host))
                 trajectory.append(float(cost))
+                c = new_c
+                c_locals = _device_copies(c, devices)
             else:
                 accs = sharded_map_reduce(
                     shards, map_fns,
@@ -488,15 +464,39 @@ def ooc_lloyd_sharded(
                     list(zeros_d), devices=devices, prefetch=prefetch,
                     emits=emits,
                 )
-                Z, g, cost = cross_device_sum(accs, devices)
-                new_c = centroid_update(Z, g, c)
-                shift = float(jnp.linalg.norm(new_c - c))
-                trajectory.append(float(cost))
+                # s-step sync rule: always at s-boundaries, and always on the
+                # LAST iteration (cap reached or labels fixed) so the loop
+                # never exits on drifted per-device centroids.
+                synced = (sstep == 1 or (it + 1) % sstep == 0
+                          or it + 1 >= iters or not changed[0])
+                if synced:
+                    Z, g, cost = cross_device_sum(accs, devices)
+                    # Empty clusters fall back to the last SYNCED centroids
+                    # (`c`): with sstep == 1 that is exactly the classic rule.
+                    new_c = centroid_update(Z, g, c)
+                    shift = float(jnp.linalg.norm(new_c - c))
+                    trajectory.append(float(cost))
+                    c = new_c
+                    c_locals = _device_copies(c, devices)
+                else:
+                    # Deferred shuffle: each device folds ONLY its local
+                    # stats into its own centroids — zero cross-device bytes
+                    # this iteration. The global trajectory cost is still the
+                    # host sum of the per-device scalar costs.
+                    new_locals = [
+                        centroid_update(accs[d][0], accs[d][1], c_locals[d])
+                        for d in range(D)
+                    ]
+                    cost = sum(float(accs[d][2]) for d in range(D))
+                    # Shift is reported from device 0's local update (there
+                    # is no single global centroid set between syncs).
+                    shift = float(jnp.linalg.norm(new_locals[0] - c_locals[0]))
+                    trajectory.append(cost)
+                    c_locals = new_locals
             shifts.append(shift)
-            sp.set(inertia=trajectory[-1], shift=shift)
-            c = new_c
+            sp.set(inertia=trajectory[-1], shift=shift, synced=synced)
         it += 1
-        if checkpoint_dir is not None:
+        if checkpoint_dir is not None and synced:
             from repro.distributed.checkpoint import save_lloyd_state
 
             save_lloyd_state(

@@ -38,7 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.lloyd import assign_stats, block_cost, centroid_update
+from repro.core.lloyd import centroid_update
+from repro.kernels import ops
 from repro.policy import ComputePolicy
 from repro.stream.blockstore import BlockStore
 from repro.stream.engine import map_reduce
@@ -76,23 +77,26 @@ def _per_candidate(policy: ComputePolicy, one):
 @partial(jax.jit, static_argnames=("k", "discrepancy", "policy"))
 def _multi_stats(y, C, k, discrepancy, policy):
     """One Y block, all R restarts of one k: C (R, k, m) ->
-    Z (R, k, m), g (R, k), labels (R, rows)."""
+    Z (R, k, m), g (R, k), labels (R, rows). Each restart runs the IDENTICAL
+    Y-mode `ops.lloyd_step_plan` step the single-candidate drivers dispatch
+    (the discarded cost is dead-code-eliminated under jit)."""
+    plan = ops.lloyd_step_plan(discrepancy=discrepancy, policy=policy)
 
     def one(c):
-        return assign_stats(y, c, k, discrepancy, policy=policy)
+        Z, g, labels, _ = plan.step(y, c)
+        return Z, g, labels
 
     return _per_candidate(policy, one)(C)
 
 
 @partial(jax.jit, static_argnames=("discrepancy", "policy"))
 def _multi_assign_cost(y, C, discrepancy, policy):
-    """Final-pass map: labels (R, rows) + per-restart block cost (R,)."""
+    """Final-pass map: labels (R, rows) + per-restart block cost (R,) — the
+    plan's final-pass form, lifted over restarts."""
+    plan = ops.lloyd_step_plan(discrepancy=discrepancy, policy=policy)
 
     def one(c):
-        _, _, labels = assign_stats(
-            y, c, c.shape[0], discrepancy, policy=policy
-        )
-        return labels, block_cost(y, c, discrepancy)
+        return plan.assign(y, c)
 
     return _per_candidate(policy, one)(C)
 
