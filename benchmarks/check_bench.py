@@ -214,6 +214,23 @@ def check_sweep(path: Path, d: dict):
     if not cfg.get("smoke") and cfg.get("n", 0) >= 100_000 \
             and d["speedup"] < 3.0:
         _fail(path, f"full-size sweep speedup {d['speedup']:.2f}x < 3x")
+    # quantized-cache keystone (DESIGN.md §17): these are CORRECTNESS/format
+    # properties of the codec, not wall-clock, so they hold at smoke size too
+    comp = _need(path, d, "compression", dict)
+    if comp["cache_dtype"] not in ("bf16", "int8"):
+        _fail(path, f"compression.cache_dtype {comp['cache_dtype']!r} is not "
+                    "a compressed codec")
+    _positive(path, comp, "sweep_s", "bytes_staged_f32",
+              "bytes_staged_compressed", "bytes_ratio")
+    agree = _need(path, comp, "min_label_agreement_vs_f32", (int, float))
+    if not 0.0 <= agree <= 1.0:
+        _fail(path, f"compression.min_label_agreement_vs_f32 out of [0, 1]: "
+                    f"{agree}")
+    if agree < 0.999:
+        _fail(path, f"compressed-cache label agreement {agree:.5f} < 0.999")
+    if comp["bytes_ratio"] < 2.0:
+        _fail(path, f"compressed cache staged only {comp['bytes_ratio']:.2f}x "
+                    "fewer bytes than f32 (< 2x candidates per byte)")
 
 
 # ------------------------------------------------------- obs trace / metrics

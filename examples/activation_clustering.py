@@ -1,14 +1,19 @@
 """APNC clustering of LM hidden states — the paper's technique as a first-class
-analysis tool inside the training framework (DESIGN.md section 4).
+analysis tool inside the training framework (DESIGN.md section 5).
 
     PYTHONPATH=src python examples/activation_clustering.py
+    PYTHONPATH=src python examples/activation_clustering.py --smoke  # CI-sized
 
 1. trains a reduced qwen3 on the synthetic corpus for a few steps,
 2. extracts final-layer hidden states for a batch of tokens,
-3. clusters them with APNC-SD (kernelized, distance in representation space),
+3. clusters them through the public `KernelKMeans` facade (APNC-SD: kernelized,
+   distance in representation space; the default rbf kernel self-tunes its
+   bandwidth on the landmark sample),
 4. reports cluster <-> token-id-bucket alignment (structure discovered without
-   labels) and centroid-distance statistics.
+   labels) and cluster sizes, and reuses the fitted estimator to assign a
+   SECOND batch of activations — the online half of the lifecycle.
 """
+import argparse
 import sys
 from pathlib import Path
 
@@ -18,9 +23,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import KernelKMeans
 from repro.configs import get_arch, reduced
-from repro.core import nmi, self_tuned_rbf
-from repro.core.kkmeans import APNCConfig, fit_predict
+from repro.core import nmi
 from repro.data import tokens as tok_lib
 from repro.models import model
 from repro.models.common import TEST_POLICY
@@ -41,6 +46,16 @@ def hidden_states(params, cfg, batch):
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--l", type=int, default=256)
+    ap.add_argument("--m", type=int, default=256)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: fewer train steps, smaller embedding")
+    args = ap.parse_args()
+    if args.smoke:
+        args.steps, args.l, args.m = 8, 64, 64
+
     cfg = reduced(get_arch("qwen3-4b"))
     params = model.init(jax.random.PRNGKey(0), cfg, TEST_POLICY)
 
@@ -48,33 +63,42 @@ def main():
     opt_cfg = AdamWConfig(lr=5e-3)
     opt_state = adamw.init(params, opt_cfg)
     ts = jax.jit(step_lib.make_train_step(cfg, TEST_POLICY, opt_cfg, lambda s: 1.0))
-    for step in range(30):
+    for step in range(args.steps):
         batch = {k: jnp.asarray(v) for k, v in
                  tok_lib.synthetic_batch(cfg, step, 8, 64).items()}
         params, opt_state, m = ts(params, opt_state, batch)
-    print(f"[activations] trained 30 steps, loss {float(m['loss']):.3f}")
+    print(f"[activations] trained {args.steps} steps, "
+          f"loss {float(m['loss']):.3f}")
 
     # collect hidden states for fresh tokens
     batch = {k: jnp.asarray(v) for k, v in
              tok_lib.synthetic_batch(cfg, 999, 16, 64).items()}
     H = hidden_states(params, cfg, batch)  # (16, 64, d)
-    flat = H.reshape(-1, H.shape[-1])
+    flat = np.asarray(H.reshape(-1, H.shape[-1]))
     tok = np.asarray(batch["tokens"]).reshape(-1)
 
-    # kernelized clustering of the representation space
-    kern = self_tuned_rbf(flat)
+    # kernelized clustering of the representation space, via the facade:
+    # kernel="rbf" with no gamma self-tunes sigma on the landmark sample
     k = 8
-    res, coeffs = fit_predict(jax.random.PRNGKey(1), flat, kern, k,
-                              APNCConfig(method="sd", l=256, m=256))
-    labels = np.asarray(res.labels)
+    est = KernelKMeans(k, method="sd", l=args.l, m=args.m, backend="local")
+    labels = est.fit_predict(flat, key=jax.random.PRNGKey(1))
 
     # do clusters align with coarse token identity? (high-frequency zipf buckets)
     buckets = np.digitize(tok, [4, 16, 64, 256, 1024])
-    print(f"[activations] {flat.shape[0]} states -> {k} APNC-SD clusters")
+    print(f"[activations] {flat.shape[0]} states -> {k} APNC-SD clusters "
+          f"(backend={est.backend_}, {est.n_iter_} Lloyd iters)")
     print(f"[activations] NMI(cluster, token-frequency-bucket) = "
           f"{nmi(labels, buckets):.3f} (>0 => representation structure found)")
     sizes = np.bincount(labels, minlength=k)
     print(f"[activations] cluster sizes: {sizes.tolist()}")
+
+    # the fitted estimator is an online assigner: new activations, no refit
+    batch2 = {k2: jnp.asarray(v) for k2, v in
+              tok_lib.synthetic_batch(cfg, 1000, 4, 64).items()}
+    H2 = hidden_states(params, cfg, batch2)
+    labels2 = est.predict(np.asarray(H2.reshape(-1, H2.shape[-1])))
+    print(f"[activations] assigned a fresh batch of {labels2.shape[0]} states "
+          f"online: {np.bincount(labels2, minlength=k).tolist()}")
 
 
 if __name__ == "__main__":

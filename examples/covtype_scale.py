@@ -1,13 +1,17 @@
 """End-to-end driver of the paper's kind: a LARGE distributed clustering job.
 
     PYTHONPATH=src python examples/covtype_scale.py [--n 200000] [--devices 8]
+    PYTHONPATH=src python examples/covtype_scale.py --smoke   # CI-sized
 
-CovType-scale synthetic data (d=54, k=7 — Table 1 dimensions) is clustered with
-the full MapReduce->shard_map pipeline on forced host devices: landmark sampling,
-coefficient fit, map-only Algorithm-1 embedding, and Algorithm-2 Lloyd iterations
-where each step all-reduces only the (Z, g) sufficient statistics. Reports NMI,
-phase timings and the per-iteration collective payload (the paper's Table 3
-measurement, scaled to this container).
+CovType-scale synthetic data (d=54, k=7 — Table 1 dimensions) is clustered
+through the public facade the way the grown system intends: the data lives
+out of core in a BlockStore, `KernelKMeans(backend="stream_shard")` shards
+the block stream across forced host devices (one producer + one fused
+embed+assign plan per device, (Z, g)-only reduces — DESIGN.md §11), and
+model selection runs as an embed-once `sweep` over a compressed staged-Y
+cache (`ComputePolicy(cache_dtype="int8")` — DESIGN.md §12, §17). Reports
+NMI of the selected model, phase timings from the FitReport, and the staged
+cache's compression counters.
 """
 import argparse
 import os
@@ -20,7 +24,16 @@ ap.add_argument("--devices", type=int, default=8)
 ap.add_argument("--l", type=int, default=500)
 ap.add_argument("--m", type=int, default=256)
 ap.add_argument("--method", default="nystrom", choices=["nystrom", "sd"])
+ap.add_argument("--block-rows", type=int, default=16384)
+ap.add_argument("--restarts", type=int, default=2)
+ap.add_argument("--cache-dtype", default="int8",
+                choices=["f32", "bf16", "int8"])
+ap.add_argument("--smoke", action="store_true",
+                help="CI-sized run: small n / l / m, 2 devices")
 args = ap.parse_args()
+if args.smoke:
+    args.n, args.devices = 16384, 2
+    args.l, args.m, args.block_rows = 64, 32, 4096
 
 os.environ.setdefault(
     "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
@@ -31,54 +44,62 @@ import time
 import jax
 import numpy as np
 
-from repro.core import nmi, self_tuned_rbf
-from repro.core.distributed import distributed_embed, distributed_lloyd, shard_rows
-from repro.core.kkmeans import APNCConfig, fit_coefficients
-from repro.core.lloyd import kmeanspp_init
-from repro.data.synthetic import gaussian_blobs
+from repro.api import ComputePolicy, KernelKMeans
+from repro.core import nmi
+from repro.data.synthetic import gaussian_blobs_blocks
 from repro.launch.mesh import make_mesh
 
 
 def main():
     k, d = 7, 54  # CovType dimensions (Table 1)
     mesh = make_mesh((args.devices, 1), ("data", "model"))
-    print(f"[covtype-scale] n={args.n} d={d} k={k} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    print(f"[covtype-scale] n={args.n} d={d} k={k} "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
     t0 = time.time()
-    X, y = gaussian_blobs(jax.random.PRNGKey(0), args.n, d, k, separation=1.8, warp=True)
-    X = jax.device_put(X, shard_rows(mesh))
-    jax.block_until_ready(X)
-    print(f"[covtype-scale] data generated+sharded in {time.time()-t0:.1f}s")
+    store, y_store = gaussian_blobs_blocks(
+        0, args.n, d, k, block_rows=args.block_rows, separation=1.8, warp=True)
+    y = np.concatenate(
+        [np.asarray(y_store.get(b)) for b in range(y_store.num_blocks)])
+    print(f"[covtype-scale] blocked store ready in {time.time()-t0:.1f}s "
+          f"({store.num_blocks} blocks of {args.block_rows})")
 
-    kern = self_tuned_rbf(X)
-    cfg = APNCConfig(method=args.method, l=args.l, m=args.m, iters=20)
-
+    # Embed-once model selection around the true k, over a compressed cache:
+    # ONE sharded embedding pass stages quantized Y blocks; every Lloyd pass
+    # over the cache feeds every (k, restart) candidate.
+    est = KernelKMeans(
+        k, method=args.method, backend="stream_shard", mesh=mesh,
+        l=args.l, m=args.m, iters=20, block_rows=args.block_rows,
+        policy=ComputePolicy(cache_dtype=args.cache_dtype),
+    )
     t1 = time.time()
-    coeffs = fit_coefficients(jax.random.PRNGKey(1), X, kern, cfg)
-    jax.block_until_ready(coeffs.R)
-    t_fit = time.time() - t1
+    result = est.sweep(store, k_grid=[k - 1, k, k + 1],
+                       restarts=args.restarts, key=jax.random.PRNGKey(0))
+    t_sweep = time.time() - t1
 
-    t2 = time.time()
-    Y = distributed_embed(mesh, X, coeffs)
-    jax.block_until_ready(Y)
-    t_embed = time.time() - t2
+    from repro import obs
 
-    t3 = time.time()
-    sample = Y[:: max(1, args.n // 4096)]
-    c0 = kmeanspp_init(jax.random.PRNGKey(2), sample, k, coeffs.discrepancy)
-    labels, centroids = distributed_lloyd(
-        mesh, Y, c0, k=k, discrepancy=coeffs.discrepancy, iters=cfg.iters)
-    jax.block_until_ready(labels)
-    t_cluster = time.time() - t3
-
-    score = nmi(np.asarray(labels), np.asarray(y))
-    zg_bytes = 4 * (k * Y.shape[-1] + k)
-    print(f"[covtype-scale] coefficients fit   : {t_fit:6.1f}s  (l={args.l} eigh)")
-    print(f"[covtype-scale] embedding (Alg 1)  : {t_embed:6.1f}s  map-only, 0 collectives")
-    print(f"[covtype-scale] clustering (Alg 2) : {t_cluster:6.1f}s  "
-          f"{cfg.iters} iters x psum({zg_bytes} B of (Z,g)) per device")
+    score = nmi(np.asarray(result.best_labels), y)
+    cache = obs.snapshot("cache.")
+    report = result.report
+    print(f"[covtype-scale] sweep {len(result.k_grid)}k x {result.restarts}r "
+          f"candidates in {t_sweep:6.1f}s (backend={est.backend_})")
+    for name, secs in sorted(report.phases.items()):
+        print(f"[covtype-scale]   phase {name:<12}: {secs:6.1f}s")
+    print(f"[covtype-scale] staged Y cache     : "
+          f"{cache.get('cache.bytes_staged', 0)/1e6:.1f} MB "
+          f"({args.cache_dtype}, ratio "
+          f"{cache.get('cache.compression_ratio', 1.0):.2f}x vs f32)")
+    print(f"[covtype-scale] selected k         : {result.best_k} "
+          f"(restart {result.best_restart}, inertia {result.best_inertia:.0f})")
     print(f"[covtype-scale] NMI vs ground truth: {score:.3f}")
-    print(f"[covtype-scale] rows/s (embed)     : {args.n / t_embed:,.0f}")
+
+    # The estimator adopted the winner: the normal lifecycle continues.
+    sample = store.get(0)
+    labels_new = est.predict(sample)
+    assert labels_new.shape[0] == sample.shape[0]
+    print(f"[covtype-scale] predict on a fresh block: "
+          f"{np.bincount(labels_new, minlength=result.best_k).tolist()}")
 
 
 if __name__ == "__main__":

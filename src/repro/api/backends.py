@@ -75,9 +75,21 @@ def _restart_ckpt(ctx: FitContext, r: int):
 
 
 def ensure_embedding_cache(ctx: FitContext, *, devices=None) -> FitContext:
-    """Fill the context's embed-once cache if it is empty: ONE embedding pass
-    (sharded across `devices` when given) staging Y, after which every
-    backend run over this context is re-embedding-free. Idempotent."""
+    """Fill the context's embed-once cache if it is empty, idempotently.
+
+    ONE embedding pass (sharded across ``devices`` when given) stages Y —
+    under the policy's ``cache_dtype`` codec for blocked input — after which
+    every backend run over this context is re-embedding-free.
+
+    Args:
+        ctx: The prepared ``FitContext``; mutated in place (``y_array`` for
+            resident input, ``y_store`` for blocked input).
+        devices: Data devices for a sharded staging pass; ``None`` or a
+            single device stages through the plain stream engine.
+
+    Returns:
+        The same ``ctx``, cache filled.
+    """
     from repro import obs
 
     if (ctx.array is not None and ctx.y_array is not None) or \
@@ -148,7 +160,15 @@ def _from_stream(res) -> BackendFit:
 @register_backend("local")
 def fit_local(ctx: FitContext) -> BackendFit:
     """Single-program path: embed everything, lax.while Lloyd per restart.
-    A filled embed-cache (`y_array` / `y_store`) skips the embedding pass."""
+
+    A filled embed-cache (``y_array`` / ``y_store``) skips the embedding pass.
+
+    Args:
+        ctx: The prepared ``FitContext``.
+
+    Returns:
+        The best restart's ``BackendFit``.
+    """
     from repro import embed
 
     if ctx.y_array is not None:
@@ -162,7 +182,7 @@ def fit_local(ctx: FitContext) -> BackendFit:
         n = int(X.shape[0])
         Y = embed.transform(ctx.params, X, ctx.policy)
 
-    def run_one(init, r):
+    def _run_one(init, r):
         res = lloyd(
             Y, ctx.k, discrepancy=ctx.params.discrepancy, iters=ctx.iters,
             init=init, policy=ctx.policy,
@@ -182,7 +202,7 @@ def fit_local(ctx: FitContext) -> BackendFit:
             shifts=[float(v) for v in shifts],
         )
 
-    return _run_restarts(ctx, run_one)
+    return _run_restarts(ctx, _run_one)
 
 
 def _stream_source(ctx: FitContext) -> dict:
@@ -199,9 +219,18 @@ def _stream_source(ctx: FitContext) -> dict:
 
 @register_backend("stream")
 def fit_stream(ctx: FitContext) -> BackendFit:
-    """Exact out-of-core Lloyd: identical update rule (and fixed point) to
-    `local`, memory O(block). A filled embed-cache routes the iterations over
-    the staged Y blocks instead of re-embedding X every pass."""
+    """Exact out-of-core Lloyd: identical fixed point to ``local``, O(block).
+
+    A filled embed-cache routes the iterations over the staged Y blocks
+    (dequantized in-kernel under a compressed ``cache_dtype``) instead of
+    re-embedding X every pass.
+
+    Args:
+        ctx: The prepared ``FitContext``.
+
+    Returns:
+        The best restart's ``BackendFit``.
+    """
     return _run_restarts(ctx, lambda init, r: _from_stream(ooc_lloyd(
         k=ctx.k, iters=ctx.iters, init=init, policy=ctx.policy,
         checkpoint_dir=_restart_ckpt(ctx, r),
@@ -219,7 +248,14 @@ def fit_stream_shard(ctx: FitContext) -> BackendFit:
     labels from the same init — at memory O(block) PER DEVICE.
 
     ctx.scheduler routes the passes: "lockstep" (default) or "pool" — the
-    fault-tolerant repro.pool control plane (leases, requeue, stealing)."""
+    fault-tolerant repro.pool control plane (leases, requeue, stealing).
+
+    Args:
+        ctx: The prepared ``FitContext`` (``mesh`` selects the devices).
+
+    Returns:
+        The best restart's ``BackendFit``.
+    """
     from repro.stream.sharded import shard_devices
 
     devices = shard_devices(ctx.mesh)
@@ -233,8 +269,17 @@ def fit_stream_shard(ctx: FitContext) -> BackendFit:
 
 @register_backend("minibatch")
 def fit_minibatch(ctx: FitContext) -> BackendFit:
-    """Single-pass streaming Lloyd with decayed (Z, g): clustering cost
-    decoupled from n, for larger-than-disk / continuous-ingest streams."""
+    """Single-pass streaming Lloyd with decayed (Z, g) sufficient stats.
+
+    Clustering cost decoupled from n, for larger-than-disk or
+    continuous-ingest streams.
+
+    Args:
+        ctx: The prepared ``FitContext`` (``decay`` and ``epochs`` apply).
+
+    Returns:
+        The best restart's ``BackendFit``.
+    """
     return _run_restarts(ctx, lambda init, r: _from_stream(minibatch_lloyd(
         k=ctx.k, decay=ctx.decay, epochs=ctx.epochs, init=init,
         policy=ctx.policy, checkpoint_dir=_restart_ckpt(ctx, r),
@@ -245,7 +290,15 @@ def fit_minibatch(ctx: FitContext) -> BackendFit:
 @register_backend("shard_map")
 def fit_shard_map(ctx: FitContext) -> BackendFit:
     """Algorithm 1 + 2 as SPMD mesh programs — the paper's MapReduce jobs.
-    Uses ctx.mesh, or a 1-device mesh so the path stays reachable everywhere."""
+
+    Uses ctx.mesh, or a 1-device mesh so the path stays reachable everywhere.
+
+    Args:
+        ctx: The prepared ``FitContext`` (n must divide the mesh's data extent).
+
+    Returns:
+        The best restart's ``BackendFit``.
+    """
     from repro.core.distributed import data_axes_of, distributed_embed, distributed_lloyd
     from repro.launch.mesh import make_mesh
 
@@ -260,17 +313,17 @@ def fit_shard_map(ctx: FitContext) -> BackendFit:
     Y = distributed_embed(mesh, X, ctx.params, policy=ctx.policy)
     disc = ctx.params.discrepancy
 
-    def inertia_of(c):
+    def _inertia_of(c):
         from repro.core.lloyd import block_cost
 
         return block_cost(Y, c, disc)
 
-    def run_one(init, r):
+    def _run_one(init, r):
         labels, centroids, costs = distributed_lloyd(
             mesh, Y, init, k=ctx.k, discrepancy=disc, iters=ctx.iters,
             policy=ctx.policy, return_costs=True,
         )
-        inertia = float(inertia_of(centroids))
+        inertia = float(_inertia_of(centroids))
         return BackendFit(
             labels=np.asarray(labels, np.int32),
             centroids=centroids,
@@ -280,4 +333,4 @@ def fit_shard_map(ctx: FitContext) -> BackendFit:
             trajectory=[float(v) for v in np.asarray(costs)] + [inertia],
         )
 
-    return _run_restarts(ctx, run_one)
+    return _run_restarts(ctx, _run_one)

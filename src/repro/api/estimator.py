@@ -54,7 +54,14 @@ def phase1_keys(key: Array) -> tuple[Array, Array, Array]:
     (reservoir selection would correlate with the fit). Anything that mirrors
     the facade's seeding (benchmarks/stream_bench.py's hand-rolled driver)
     must take its keys from HERE, so a future seeding change cannot silently
-    desynchronize label-identity baselines."""
+    desynchronize label-identity baselines.
+
+    Args:
+        key: The fit's root PRNG key.
+
+    Returns:
+        The (k_sample, k_fit, k_seed) subkey triple.
+    """
     k_sample, k_fit, k_seed = jax.random.split(key, 3)
     return k_sample, k_fit, k_seed
 
@@ -103,6 +110,14 @@ class KernelKMeans:
     actually ran), and `fit_report_` (a `repro.obs.FitReport`: phase
     wall-times, the per-iteration inertia trajectory, pass counts, bytes
     streamed — also attached to `model_.report`).
+
+    Example:
+        >>> import numpy as np
+        >>> from repro.api import KernelKMeans
+        >>> X = np.random.default_rng(0).normal(size=(512, 8)).astype("float32")
+        >>> est = KernelKMeans(4, l=32, m=16, backend="local").fit(X)
+        >>> sorted(set(est.predict(X[:10]))) <= [0, 1, 2, 3]
+        True
     """
 
     def __init__(
@@ -286,7 +301,18 @@ class KernelKMeans:
         killed fit re-invoked with the same key and checkpoint_dir resumes
         mid-Lloyd (phase 1 re-runs — it's cheap and key-deterministic — but no
         completed Lloyd iteration is repeated; pair with `sweep`'s staged
-        embedding or a Y-block store to also skip re-embedding)."""
+        embedding or a Y-block store to also skip re-embedding).
+
+        Args:
+            X: (n, d) array-like, or a ``BlockStore`` for out-of-core input.
+            y: Ignored (sklearn signature compatibility).
+            key: PRNG key; ``None`` seeds from ``random_state``.
+            checkpoint_dir: Root directory for mid-fit Lloyd checkpoints
+                (streaming backends; ``None`` = no checkpointing).
+
+        Returns:
+            self, fitted (``model_`` / ``labels_`` / ``inertia_`` set).
+        """
         key = key if key is not None else jax.random.PRNGKey(self.random_state)
         name = self._choose_backend(X)
         backend = get_backend(name)  # fail fast, before the embedding fit
@@ -301,6 +327,15 @@ class KernelKMeans:
         return self
 
     def fit_predict(self, X, *, key: Array | None = None) -> np.ndarray:
+        """``fit(X, key=key).labels_`` in one call (sklearn convention).
+
+        Args:
+            X: (n, d) array-like or ``BlockStore``.
+            key: PRNG key; ``None`` seeds from ``random_state``.
+
+        Returns:
+            (n,) int32 training labels of the best restart.
+        """
         return self.fit(X, key=key).labels_
 
     def sweep(
@@ -331,10 +366,21 @@ class KernelKMeans:
         stream backends in tests/test_sweep.py).
 
         `checkpoint_dir=` persists the embed-once stage (params + pool + Y
-        blocks) before clustering and the SweepResult after: an interrupted
-        sweep re-invoked with the same key and checkpoint_dir resumes PAST
-        the embedding pass (no second embed — tests assert via the engine's
-        pass counter).
+        blocks, in the policy's `cache_dtype` wire form) before clustering and
+        the SweepResult after: an interrupted sweep re-invoked with the same
+        key and checkpoint_dir resumes PAST the embedding pass (no second
+        embed — tests assert via the engine's pass counter).
+
+        Args:
+            X: (n, d) array-like or ``BlockStore``.
+            k_grid: Candidate cluster counts, one sweep column per k.
+            restarts: k-means++ restarts per k; ``None`` uses ``n_init``.
+            key: PRNG key; ``None`` seeds from ``random_state``.
+            checkpoint_dir: Stage/result persistence root (``None`` = off).
+
+        Returns:
+            A ``repro.sweep.SweepResult``; the estimator adopts its best
+            candidate.
         """
         from repro.sweep import sweep_estimator
 
@@ -349,7 +395,15 @@ class KernelKMeans:
         centroids from that block; on a fitted or loaded estimator it
         continues from the existing ClusterModel (fresh decayed stats, the
         restored centroids as the assignment anchor). Either way, later calls
-        just embed + assign + update — O(block) forever."""
+        just embed + assign + update — O(block) forever.
+
+        Args:
+            X: One (b, d) block of the stream.
+            key: Cold-start PRNG key; ``None`` seeds from ``random_state``.
+
+        Returns:
+            self, updated in place.
+        """
         Xb = jnp.asarray(np.asarray(X, np.float32))
         if self.model_ is None:
             # landmark-free members (rff, tensorsketch) only read the input
@@ -484,8 +538,16 @@ class KernelKMeans:
 
     def predict(self, X) -> np.ndarray:
         """Nearest-centroid assignment of unseen points (array or BlockStore).
+
         Blocked inputs stream through the double-buffered engine at the
-        policy's prefetch depth."""
+        policy's prefetch depth.
+
+        Args:
+            X: (n, d) array-like or an unsharded ``BlockStore``.
+
+        Returns:
+            (n,) int32 cluster labels.
+        """
         model = self._require_model()
         if isinstance(X, BlockStore):
             from repro.stream.engine import map_reduce
@@ -493,7 +555,7 @@ class KernelKMeans:
             self._reject_sharded(X, "predict")
             labels = np.full(X.n, -1, dtype=np.int32)
 
-            def emit(i, out):
+            def _emit(i, out):
                 lo = X.row_offset(i)
                 labels[lo:lo + out.shape[0]] = np.asarray(out, np.int32)
 
@@ -503,15 +565,23 @@ class KernelKMeans:
                     blk, model.params, model.centroids, policy=self.policy
                 ),
                 lambda acc, _: acc, None,
-                prefetch=self.policy.prefetch, emit=emit,
+                prefetch=self.policy.prefetch, emit=_emit,
             )
             return labels
         return np.asarray(model.predict(X, policy=self.policy), np.int32)
 
     def transform(self, X):
-        """The fitted embedding Y = f(X). Arrays map to an (n, m) array; a
-        BlockStore maps to a host-staged BlockStore of embedded blocks (still
-        O(block) on device)."""
+        """The fitted embedding Y = f(X).
+
+        Arrays map to an (n, m) array; a BlockStore maps to a host-staged
+        BlockStore of embedded blocks (still O(block) on device).
+
+        Args:
+            X: (n, d) array-like or ``BlockStore``.
+
+        Returns:
+            The embedded rows, in the input's container shape.
+        """
         model = self._require_model()
         if isinstance(X, BlockStore):
             from repro.stream.lloyd import stream_embed
@@ -522,8 +592,16 @@ class KernelKMeans:
         return embed.transform(model.params, jnp.asarray(X, jnp.float32), self.policy)
 
     def score(self, X) -> float:
-        """Negative clustering inertia of X under the fitted centroids
-        (higher is better, sklearn convention)."""
+        """Negative clustering inertia of X under the fitted centroids.
+
+        Higher is better (sklearn convention).
+
+        Args:
+            X: (n, d) array-like or an unsharded ``BlockStore``.
+
+        Returns:
+            ``-sum_i e(y_i, c_label(i))`` as a float.
+        """
         model = self._require_model()
         disc = model.discrepancy
         if isinstance(X, BlockStore):
@@ -548,7 +626,15 @@ class KernelKMeans:
     # ---------------------------------------------------------- persistence
 
     def save(self, ckpt_dir: str | Path, *, step: int = 0) -> Path:
-        """Persist the ClusterModel artifact (crash-atomic, elastic restore)."""
+        """Persist the ClusterModel artifact (crash-atomic, elastic restore).
+
+        Args:
+            ckpt_dir: Checkpoint root directory.
+            step: Step label for the checkpoint layer's keep_last rotation.
+
+        Returns:
+            The written step directory.
+        """
         from repro.distributed.checkpoint import save_cluster_model
 
         return save_cluster_model(ckpt_dir, self._require_model(), step=step)
@@ -556,8 +642,19 @@ class KernelKMeans:
     @classmethod
     def load(cls, ckpt_dir: str | Path, *, step: int | None = None,
              policy: ComputePolicy | None = None) -> "KernelKMeans":
-        """Rebuild a serving-ready estimator from a persisted ClusterModel —
-        regardless of which backend fit it."""
+        """Rebuild a serving-ready estimator from a persisted ClusterModel.
+
+        Works regardless of which backend fit the artifact.
+
+        Args:
+            ckpt_dir: Checkpoint root directory (as passed to ``save``).
+            step: Specific step to load; ``None`` = latest valid.
+            policy: ``ComputePolicy`` for subsequent inference (``None`` =
+                defaults).
+
+        Returns:
+            A fitted estimator (``model_`` set, ready to predict/serve).
+        """
         from repro.distributed.checkpoint import load_cluster_model
 
         model = load_cluster_model(ckpt_dir, step=step)

@@ -56,7 +56,16 @@ class FitMeta:
 @dataclasses.dataclass
 class ClusterModel:
     """A fitted embed-and-conquer clustering: embedding params + centroids +
-    inertia + fit metadata. The single artifact of `KernelKMeans.fit`."""
+    inertia + fit metadata. The single artifact of `KernelKMeans.fit`.
+
+    Example:
+        >>> import numpy as np
+        >>> from repro.api import KernelKMeans
+        >>> X = np.random.default_rng(0).normal(size=(256, 8)).astype("float32")
+        >>> model = KernelKMeans(3, l=32, m=16, backend="local").fit(X).model_
+        >>> model.k, model.m, int(model.predict(X[:5]).shape[0])
+        (3, 16, 5)
+    """
 
     params: EmbeddingParams  # fitted params of the registered embedding member
     centroids: Array  # (k, m) in embedding space
@@ -84,19 +93,32 @@ class ClusterModel:
 
     @property
     def k(self) -> int:
+        """Number of clusters (centroid rows)."""
         return int(self.centroids.shape[0])
 
     @property
-    def m(self) -> int:  # embedding dimensionality
+    def m(self) -> int:
+        """Embedding dimensionality (centroid columns)."""
         return int(self.centroids.shape[1])
 
     @property
     def discrepancy(self) -> Discrepancy:
+        """The embedding member's discrepancy e ("l2" | "l1")."""
         return self.params.discrepancy
 
     def predict(self, X, *, policy=None) -> Array:
-        """Assign unseen points: embed then nearest centroid under e — the
-        online path of Property 4.4, independent of which backend fit us."""
+        """Assign unseen points: embed then nearest centroid under e.
+
+        The online path of Property 4.4, independent of which backend fit us.
+
+        Args:
+            X: (n, d) points in INPUT space.
+            policy: ``ComputePolicy`` for the embed + assign math (``None`` =
+                defaults).
+
+        Returns:
+            (n,) int32 cluster labels.
+        """
         from repro.core.kkmeans import predict as _predict
 
         return _predict(X, self.params, self.centroids, policy=policy)

@@ -36,20 +36,40 @@ BACKENDS: dict[str, Callable] = {}
 
 
 def register_backend(name: str):
-    """Decorator: `@register_backend("local")` adds a clustering engine."""
+    """Decorator: ``@register_backend("local")`` adds a clustering engine.
 
-    def deco(fn):
+    Args:
+        name: Registry key the estimator's ``backend=`` argument resolves.
+
+    Returns:
+        The decorator; the decorated ``FitContext -> BackendFit`` callable is
+        registered under ``name`` and returned unchanged.
+    """
+
+    def _deco(fn):
         BACKENDS[name] = fn
         return fn
 
-    return deco
+    return _deco
 
 
 def available_backends() -> list[str]:
+    """The registered backend names, sorted."""
     return sorted(BACKENDS)
 
 
 def get_backend(name: str):
+    """The registered backend callable for ``name``.
+
+    Args:
+        name: A key previously registered via ``register_backend``.
+
+    Returns:
+        The backend's ``FitContext -> BackendFit`` callable.
+
+    Raises:
+        ValueError: If ``name`` is not registered (message lists what is).
+    """
     try:
         return BACKENDS[name]
     except KeyError:
@@ -70,20 +90,42 @@ KERNELS: dict[str, Callable[..., Kernel]] = {
 
 
 def register_kernel(name: str, factory: Callable[..., Kernel] | None = None):
-    """Register a kernel factory; usable as decorator or plain call."""
+    """Register a kernel factory; usable as decorator or plain call.
+
+    Args:
+        name: Registry key the estimator's ``kernel=`` argument resolves.
+        factory: ``(**params) -> Kernel`` factory. When omitted, the return
+            value is a decorator expecting the factory.
+
+    Returns:
+        The factory (plain-call form) or the registering decorator.
+    """
     if factory is not None:
         KERNELS[name] = factory
         return factory
 
-    def deco(fn):
+    def _deco(fn):
         KERNELS[name] = fn
         return fn
 
-    return deco
+    return _deco
 
 
 def resolve_kernel(kernel: str | Kernel, params: dict | None = None) -> Kernel:
-    """A Kernel instance passes through; a string resolves via the registry."""
+    """A Kernel instance passes through; a string resolves via the registry.
+
+    Args:
+        kernel: A ``Kernel`` instance or a registered kernel name.
+        params: Keyword params for the named factory (``gamma``, ``degree``,
+            ...); rejected when ``kernel`` is already a ``Kernel``.
+
+    Returns:
+        The resolved ``Kernel``.
+
+    Raises:
+        ValueError: Unknown kernel name, or ``params`` passed alongside an
+            instance.
+    """
     if isinstance(kernel, Kernel):
         if params:
             raise ValueError("kernel_params= only applies to string kernel names")
@@ -106,12 +148,21 @@ def resolve_kernel(kernel: str | Kernel, params: dict | None = None) -> Kernel:
 
 
 def register_method(name: str):
-    """DEPRECATED decorator: register a bare APNC coefficient fit
-    `(key, X, kernel, *, l, m, t, q) -> APNCCoefficients`. Wraps it into a
-    full `Embedding` (APNC transform, properties from the fitted params).
-    New code should `register_embedding` a member directly."""
+    """DEPRECATED decorator: register a bare APNC coefficient fit.
 
-    def deco(fn):
+    The decorated ``(key, X, kernel, *, l, m, t, q) -> APNCCoefficients``
+    function is wrapped into a full ``Embedding`` (APNC transform, properties
+    from the fitted params). New code should ``register_embedding`` a member
+    directly.
+
+    Args:
+        name: Registry key for the wrapped embedding member.
+
+    Returns:
+        The registering decorator (warns ``DeprecationWarning`` on use).
+    """
+
+    def _deco(fn):
         warnings.warn(
             "register_method is deprecated; use repro.embed.register_embedding",
             DeprecationWarning, stacklevel=2,
@@ -126,10 +177,17 @@ def register_method(name: str):
         register_embedding(_LegacyMethod)
         return fn
 
-    return deco
+    return _deco
 
 
 def get_method(name: str) -> Callable:
-    """DEPRECATED: the registered embedding's bound `fit`. Use
-    `repro.embed.get_embedding(name)` for the full member."""
+    """DEPRECATED: the registered embedding's bound ``fit``.
+
+    Args:
+        name: A registered embedding member name.
+
+    Returns:
+        The member's bound ``fit`` callable; use
+        ``repro.embed.get_embedding(name)`` for the full member.
+    """
     return get_embedding(name).fit

@@ -410,10 +410,15 @@ LLOYD_STATE_DIR = "lloyd_state"
 
 
 def lloyd_fingerprint(*, kind: str, n: int, d: int, k: int, m: int,
-                      init, decay: float | None = None) -> dict:
+                      init, decay: float | None = None,
+                      cache_dtype: str = "f32") -> dict:
     """Identity of a Lloyd run for resume-matching: problem shape plus a hash
     of the exact init centroids. Same estimator key => same init => match;
-    anything else re-runs from scratch rather than adopting foreign state."""
+    anything else re-runs from scratch rather than adopting foreign state.
+    `cache_dtype` is the staged-Y codec: a fit over an int8 cache must not
+    adopt state from an f32 run (the assignments drift at codec error scale),
+    so any non-f32 codec enters the fingerprint. f32 is omitted to keep
+    pre-codec checkpoints resumable."""
     raw = np.ascontiguousarray(np.asarray(init, np.float32)).tobytes()
     fp = {
         "kind": kind, "n": int(n), "d": int(d), "k": int(k), "m": int(m),
@@ -421,6 +426,8 @@ def lloyd_fingerprint(*, kind: str, n: int, d: int, k: int, m: int,
     }
     if decay is not None:
         fp["decay"] = float(decay)
+    if cache_dtype != "f32":
+        fp["cache_dtype"] = str(cache_dtype)
     return fp
 
 

@@ -11,6 +11,7 @@ this kernel eliminates that traffic entirely and halves the dispatch count.
     grid = (n/bn,)                       # everything else resident whole
     [apnc, q=1]  S = X L^T ; K = nonlin(S) ; Y = K R^T          (MXU+VPU)
     [rff]        S = X W   ; Y = s [cos(S), sin(S)]             (MXU+VPU)
+    [dequant]    Y = Yq * scale          # quantized staged cache (Y-mode)
     shared epilogue (same math as apnc_assign + core.lloyd.block_cost):
         D = e(Y, C)                      # l2 squared (same argmin) or l1
         labels = argmin D                -> (bn, 1) i32 tile
@@ -165,6 +166,79 @@ def fused_apnc_step(
         ),
         interpret=interpret,
     )(X, landmarks, R, C)
+
+
+def _dequant_step_kernel(
+    yq_ref, s_ref, c_ref, z_ref, g_ref, lab_ref, cost_ref,
+    *, discrepancy: str, n_actual: int, bn: int,
+):
+    i = pl.program_id(0)
+    # Dequantize IN VMEM: the quantized tile (int8 / bf16) is what crossed
+    # HBM; the f32 block exists only here. The (1, m) scale row carries each
+    # feature's own dequant factor (int8's per-column symmetric scaling) and
+    # broadcasts over the row axis. Zero payload rows/cols dequantize
+    # to exactly 0, so the caller's zero padding matches zero-padded C.
+    y = yq_ref[...].astype(jnp.float32) * s_ref[...]
+    c = c_ref[...].astype(jnp.float32)
+    _assign_reduce(
+        i, y, c, z_ref, g_ref, lab_ref, cost_ref,
+        discrepancy=discrepancy, n_actual=n_actual, bn=bn,
+    )
+
+
+def fused_dequant_step(
+    Yq: Array,
+    scale: Array,
+    C: Array,
+    discrepancy: str,
+    n_actual: int,
+    *,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+) -> tuple[Array, Array, Array, Array]:
+    """The Y-mode Lloyd step over a QUANTIZED staged block (DESIGN.md §17):
+    Yq (n, m) int8/bf16, scale (1, m) f32 per-column dequant row,
+    C (k, m) -> Z (k, m) f32, g (k, 1) f32, labels (n, 1) i32,
+    cost (1, 1) f32.
+
+    Same epilogue as the fused X-mode kernels (`_assign_reduce`), with the
+    embed stage replaced by the dequantization `Yq * scale` — so the decoded
+    f32 Y never materializes outside VMEM. Caller (ops.py) zero-pads Yq/C and
+    gives padded centroid rows +BIG sentinels.
+    """
+    n, m = Yq.shape
+    k, _ = C.shape
+    assert n % bn == 0, (n, bn)
+    grid = (n // bn,)
+
+    return pl.pallas_call(
+        functools.partial(
+            _dequant_step_kernel,
+            discrepancy=discrepancy, n_actual=n_actual, bn=bn,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+            pl.BlockSpec((k, m), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, m), lambda i: (0, 0)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+            pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, m), jnp.float32),
+            jax.ShapeDtypeStruct((k, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(Yq, scale, C)
 
 
 def _rff_step_kernel(

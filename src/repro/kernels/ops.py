@@ -19,6 +19,7 @@ from repro.kernels import apnc_embed as _embed
 from repro.kernels import lloyd_step as _lloyd_step
 from repro.kernels import rff_embed as _rff
 from repro.policy import ComputePolicy, resolve_policy
+from repro.stream.blockstore import EncodedBlock
 
 Array = jax.Array
 
@@ -350,6 +351,55 @@ def _assign_cost_y(y: Array, centroids: Array, discrepancy, policy):
     return labels, cost
 
 
+@partial(jax.jit, static_argnames=("discrepancy", "bn", "interpret"))
+def _dequant_step_padded(Yq, scale, C, discrepancy, bn, interpret):
+    n, m = Yq.shape
+    k = C.shape[0]
+    # Zero payload padding dequantizes to exactly 0, matching zero-padded C.
+    Yp = _pad_to(_pad_to(Yq, _LANE, 1), bn, 0)
+    Cp = _pad_to(_pad_to(C, _LANE, 1), 8, 0)
+    if Cp.shape[0] != k:  # sentinel rows: huge coords never win the argmin
+        Cp = Cp.at[k:].set(_BIG)
+    # Normalize scale to the (1, m) per-column row the kernel broadcasts
+    # (int8 ships one; bf16's scalar 1.0 broadcasts up); zero-pad the lane
+    # axis like Yq — zero payload columns dequantize to 0 either way.
+    scale = jnp.asarray(scale, jnp.float32)
+    if scale.ndim == 0:
+        scale = jnp.full((1, m), scale, jnp.float32)
+    Sp = _pad_to(jnp.reshape(scale, (1, m)), _LANE, 1)
+    Z, g, labels, cost = _lloyd_step.fused_dequant_step(
+        Yp, Sp, Cp, discrepancy,
+        n_actual=n, bn=bn, interpret=interpret,
+    )
+    return Z[:k, :m], g[:k, 0], labels[:n, 0], cost[0, 0]
+
+
+@partial(jax.jit, static_argnames=("discrepancy", "policy"))
+def _dequant_assign_stats_cost(payload, scale, centroids, discrepancy, policy):
+    """Y-mode step over a quantized staged block (EncodedBlock wire form).
+    Pallas policy: the fused dequant kernel — Yq * scale happens in VMEM and
+    the f32 block never touches HBM. jnp policy: dequantize then the shared
+    reference chain (bit-identical routing to the f32 Y-mode path)."""
+    if policy.resolve_pallas():
+        bn_eff = min(
+            _lloyd_step.DEFAULT_BN, max(8, ((payload.shape[0] + 7) // 8) * 8)
+        )
+        return _dequant_step_padded(
+            payload, scale, centroids, discrepancy, bn_eff,
+            _auto_interpret(None),
+        )
+    y = payload.astype(jnp.float32) * scale
+    return _assign_stats_cost_y(y, centroids, discrepancy, policy)
+
+
+@partial(jax.jit, static_argnames=("discrepancy", "policy"))
+def _dequant_assign_cost(payload, scale, centroids, discrepancy, policy):
+    Z, g, labels, cost = _dequant_assign_stats_cost(
+        payload, scale, centroids, discrepancy, policy
+    )
+    return labels, cost
+
+
 @partial(jax.jit, static_argnames=("policy",))
 def _embed_assign_cost_x(x: Array, params, centroids: Array, policy):
     Z, g, labels, cost = _embed_assign_block_cost(x, params, centroids, policy)
@@ -397,16 +447,30 @@ class LloydStepPlan:
         return self.fused_member is not None
 
     def step(self, block: Array, centroids: Array):
-        """(Z, g, labels, cost) for one block under `centroids`."""
+        """(Z, g, labels, cost) for one block under `centroids`. Y-mode also
+        accepts a quantized `EncodedBlock` (the compressed staged cache's wire
+        form): the payload + scale dequantize on device — in VMEM inside the
+        fused dequant kernel under a Pallas policy (DESIGN.md §17)."""
         if self.params is None:
+            if isinstance(block, EncodedBlock):
+                return _dequant_assign_stats_cost(
+                    block.payload, block.scale, centroids,
+                    self.discrepancy, self.policy,
+                )
             return _assign_stats_cost_y(block, centroids, self.discrepancy, self.policy)
         if self.fused:
             return fused_lloyd_step(block, self.params, centroids)
         return _embed_assign_block_cost(block, self.params, centroids, self.policy)
 
     def assign(self, block: Array, centroids: Array):
-        """(labels, cost) for one block — the final / scoring pass."""
+        """(labels, cost) for one block — the final / scoring pass. Y-mode
+        accepts `EncodedBlock` like `step`."""
         if self.params is None:
+            if isinstance(block, EncodedBlock):
+                return _dequant_assign_cost(
+                    block.payload, block.scale, centroids,
+                    self.discrepancy, self.policy,
+                )
             return _assign_cost_y(block, centroids, self.discrepancy, self.policy)
         if self.fused:
             _, _, labels, cost = fused_lloyd_step(block, self.params, centroids)

@@ -36,7 +36,7 @@ from repro import obs
 from repro.pool import chaos
 from repro.pool.tasks import TaskPool
 from repro.stream.blockstore import BlockStore
-from repro.stream.engine import _count_pass
+from repro.stream.engine import _count_pass, block_nbytes, fetch_block
 
 
 # Workers whose pass already ended (their last read was re-executed elsewhere
@@ -74,10 +74,10 @@ def _worker(pool: TaskPool, store: BlockStore, map_fn, worker: int, device,
             with obs.span("pool.lease", cat="pool", block=task, worker=worker):
                 if plan is not None:
                     plan.before_read(worker)
-                blk = store.get(task)
+                blk = fetch_block(store, task)
                 blocks.inc()
                 dev_blocks.inc()
-                nbytes.inc(getattr(blk, "nbytes", 0))
+                nbytes.inc(block_nbytes(blk))
                 dev = jax.device_put(blk, device)
                 out = map_fn(dev)
                 dispatches.inc()

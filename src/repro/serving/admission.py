@@ -18,7 +18,16 @@ from repro import obs
 
 class Shed(RuntimeError):
     """Typed rejection: the tier is at its in-flight bound. Carries the
-    depth/limit so callers (and logs) can see how saturated the tier was."""
+    depth/limit so callers (and logs) can see how saturated the tier was.
+
+    Example:
+        >>> from repro.api import Shed
+        >>> try:
+        ...     raise Shed(4096, 4096)
+        ... except Shed as e:
+        ...     e.inflight >= e.limit
+        True
+    """
 
     def __init__(self, inflight: int, limit: int):
         super().__init__(

@@ -51,7 +51,18 @@ class ModelRegistry:
     """Named `ServingModel`s with atomic pointer-flip replacement.
 
     All mutation is lock-protected; `resolve` is one dict read under the
-    lock — the atomic snapshot the serving tier takes per batch.
+    lock — the atomic snapshot the serving tier takes per batch. Sources can
+    be a fitted `ClusterModel`, a `SweepResult` (its best candidate), a
+    checkpoint path, or a bare `(X) -> labels` callable; `swap` replaces a
+    live entry atomically (zero-downtime hot swap) and `evict` removes it.
+
+    Example:
+        >>> import numpy as np
+        >>> from repro.api import ModelRegistry
+        >>> reg = ModelRegistry(max_batch=8)
+        >>> _ = reg.register("echo", lambda X: np.zeros(len(X), np.int32), d=4)
+        >>> reg.names()
+        ['echo']
     """
 
     def __init__(self, *, max_batch: int = 256, policy=None):

@@ -76,6 +76,16 @@ class ServingTier:
     Lifecycle: `start()` (or use as a context manager), any number of
     `submit(request_id, x, model=...)` calls from any threads, `stop()`
     (drains every pending batch; every admitted request gets a response).
+
+    Example:
+        >>> import numpy as np
+        >>> from repro.api import ModelRegistry, ServingTier
+        >>> reg = ModelRegistry(max_batch=8)
+        >>> _ = reg.register("echo", lambda X: np.zeros(len(X), np.int32), d=4)
+        >>> with ServingTier(reg) as tier:
+        ...     resp = tier.submit("r1", np.ones(4, np.float32), model="echo")
+        >>> int(resp.result().label)
+        0
     """
 
     def __init__(

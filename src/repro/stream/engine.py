@@ -32,9 +32,30 @@ import jax
 import numpy as np
 
 from repro import obs
-from repro.stream.blockstore import BlockStore, WritableBlockStore
+from repro.stream.blockstore import BlockStore, EncodedBlock, WritableBlockStore
 
 _STOP = object()
+
+
+def fetch_block(store: BlockStore, i: int):
+    """The engine's one block-read seam: the codec wire form (EncodedBlock:
+    quantized payload + scale — the cheap H2D copy, dequantized on device by
+    the Lloyd plan) when the store stages a compressed codec, else the plain
+    decoded block. Every executor (producer thread, synchronous path, pool
+    workers) reads through here so compressed caches stream compressed
+    everywhere."""
+    if store.codec != "f32":
+        enc = store.get_encoded(i)
+        if enc is not None:
+            return enc
+    return store.get(i)
+
+
+def block_nbytes(blk) -> int:
+    """Host->device bytes of one produced block (wire bytes for EncodedBlock)."""
+    if isinstance(blk, EncodedBlock):
+        return blk.payload.nbytes + blk.scale.nbytes
+    return getattr(blk, "nbytes", 0)
 
 # Labeled engine-pass telemetry, now canonically in the obs metrics registry
 # under "engine.passes.<label>". PASS_COUNTS is kept in lockstep as a
@@ -93,12 +114,12 @@ def _producer(store: BlockStore, q: "queue.Queue", stop: threading.Event,
             if stop.is_set():
                 return
             with obs.span("block.get", cat="ingest", block=i):
-                blk = store.get(i)  # host-side cost: generation / disk read
+                blk = fetch_block(store, i)  # host cost: generation / disk read
             with obs.span("h2d", cat="ingest", block=i):
                 dev = jax.device_put(blk, device)  # starts the H2D copy
             blocks.inc()
             dev_blocks.inc()
-            nbytes.inc(getattr(blk, "nbytes", 0))
+            nbytes.inc(block_nbytes(blk))
             if not _offer(q, (i, dev, None), stop):
                 return
         _offer(q, _STOP, stop)
@@ -219,9 +240,9 @@ def map_reduce(
                       prefetch=prefetch):
             acc = init
             for i in range(store.num_blocks):
-                blk = store.get(i)
+                blk = fetch_block(store, i)
                 blocks.inc()
-                nbytes.inc(getattr(blk, "nbytes", 0))
+                nbytes.inc(block_nbytes(blk))
                 dev = jax.device_put(blk, device)
                 out = map_fn(dev)
                 dispatches.inc()
@@ -253,6 +274,7 @@ def cache_embedding(
     *,
     d_out: int,
     out: WritableBlockStore | None = None,
+    codec: str = "f32",
     prefetch: int = 2,
     device=None,
     label: str = "cache_embedding",
@@ -269,16 +291,31 @@ def cache_embedding(
 
     `out=` lets D sharded cache passes (one per device, disjoint round-robin
     block subsets) fill one shared staging area; by default a fresh store
-    sized (store.n, d_out) is allocated.
+    sized (store.n, d_out) is allocated, staged under `codec` ("f32" | "bf16"
+    | "int8" — the policy's cache_dtype; DESIGN.md §17). Each put bumps the
+    `cache.bytes_staged` counter by the block's WIRE size, and the pass sets
+    the `cache.compression_ratio` gauge (f32 bytes / staged bytes).
     """
     if out is None:
-        out = BlockStore.empty(n=store.n, d=d_out, block_rows=store.block_rows)
+        out = BlockStore.empty(
+            n=store.n, d=d_out, block_rows=store.block_rows, codec=codec,
+        )
+
+    bytes_staged = obs.counter("cache.bytes_staged")
+    sized = hasattr(out, "staged_nbytes")
 
     def emit(i, y):
-        out.put(store.block_id(i), np.asarray(y))
+        gid = store.block_id(i)
+        out.put(gid, np.asarray(y))
+        if sized:
+            bytes_staged.inc(out.staged_nbytes(gid))
 
     map_reduce(
         store, map_fn, lambda acc, _: acc, None,
         prefetch=prefetch, emit=emit, device=device, label=label,
     )
+    if sized:  # same value from every sharded writer: gauge, not a sum
+        obs.gauge("cache.compression_ratio").set(
+            (out.n * out.d * 4) / max(out.nbytes_staged, 1)
+        )
     return out

@@ -80,7 +80,9 @@ def stream_embed(
 ) -> WritableBlockStore:
     """Algorithm 1 over a block stream: X blocks in, Y blocks staged to host
     RAM (O(n*m) host, still O(block) device). Use when host memory fits Y and
-    several Lloyd iterations will reuse it."""
+    several Lloyd iterations will reuse it. The policy's `cache_dtype` picks
+    the staging codec (f32 / bf16 / int8, DESIGN.md §17); compressed blocks
+    are dequantized on device by the Lloyd plan when later passes read them."""
     pol = resolve_policy(policy, use_pallas, owner="stream.stream_embed: ")
     prefetch = pol.prefetch if prefetch is None else prefetch
     # cache_embedding writes by GLOBAL block id, so a shard's local block i
@@ -89,6 +91,7 @@ def stream_embed(
         store,
         lambda x: ops.embed_block_map(x, coeffs, policy=pol),
         d_out=coeffs.m,
+        codec=pol.cache_dtype,
         prefetch=prefetch,
     )
 
@@ -204,7 +207,8 @@ def ooc_lloyd(
         from repro.launch.elastic import resume_lloyd_state
 
         fp = lloyd_fingerprint(kind="ooc", n=store.n, d=store.d, k=k, m=m,
-                               init=centroids_cell[0])
+                               init=centroids_cell[0],
+                               cache_dtype=getattr(store, "codec", "f32"))
         state = resume_lloyd_state(checkpoint_dir, fingerprint=fp,
                                    devices_used=1)
         if state is not None:
@@ -351,7 +355,8 @@ def minibatch_lloyd(
         from repro.launch.elastic import resume_lloyd_state
 
         fp = lloyd_fingerprint(kind="minibatch", n=store.n, d=store.d, k=k,
-                               m=m, init=centroids_cell[0], decay=decay)
+                               m=m, init=centroids_cell[0], decay=decay,
+                               cache_dtype=getattr(store, "codec", "f32"))
         saved = resume_lloyd_state(checkpoint_dir, fingerprint=fp,
                                    devices_used=1)
         if saved is not None:

@@ -132,7 +132,8 @@ def stream_embed_sharded(
     pol = as_policy(policy)
     devices = list(devices)
     D = len(devices)
-    out = _BS.empty(n=store.n, d=coeffs.m, block_rows=store.block_rows)
+    out = _BS.empty(n=store.n, d=coeffs.m, block_rows=store.block_rows,
+                    codec=pol.cache_dtype)
     shards = [store.shard(d, D) for d in range(D)]
     coeffs_d = [jax.device_put(coeffs, dev) for dev in devices]
 
@@ -424,7 +425,8 @@ def ooc_lloyd_sharded(
         from repro.launch.elastic import resume_lloyd_state
 
         fp = lloyd_fingerprint(kind="ooc", n=store.n, d=store.d, k=k, m=m,
-                               init=init)
+                               init=init,
+                               cache_dtype=getattr(store, "codec", "f32"))
         state = resume_lloyd_state(checkpoint_dir, fingerprint=fp,
                                    devices_used=D)
         if state is not None:
@@ -581,7 +583,8 @@ def minibatch_lloyd_sharded(
         from repro.launch.elastic import resume_lloyd_state
 
         fp = lloyd_fingerprint(kind="minibatch", n=store.n, d=store.d, k=k,
-                               m=m, init=init, decay=decay)
+                               m=m, init=init, decay=decay,
+                               cache_dtype=getattr(store, "codec", "f32"))
         state = resume_lloyd_state(checkpoint_dir, fingerprint=fp,
                                    devices_used=D)
         if state is not None:

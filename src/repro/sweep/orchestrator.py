@@ -128,6 +128,7 @@ def sweep_estimator(
             stage = load_embed_stage(
                 checkpoint_dir, method=est.method, sweep_key=key,
                 input_shape=input_shape,
+                cache_dtype=est.policy.cache_dtype,
             )
     resumed = stage is not None
     if stage is not None:
@@ -160,11 +161,19 @@ def sweep_estimator(
         if checkpoint_dir is not None:
             y_store = ctx.y_store
             if y_store is None:  # local backend, array input: stage resident Y
-                from repro.stream.blockstore import BlockStore
-
-                y_store = BlockStore.from_array(
-                    np.asarray(ctx.y_array, dtype=np.float32), est.block_rows
+                # Stage under the policy's cache codec so the on-disk stage
+                # fingerprint matches what load_embed_stage will ask for on
+                # resume (an f32 stage under an int8 policy would re-embed
+                # forever).
+                y_np = np.asarray(ctx.y_array, dtype=np.float32)
+                y_store = _BS.empty(
+                    n=y_np.shape[0], d=y_np.shape[1],
+                    block_rows=est.block_rows,
+                    codec=est.policy.cache_dtype,
                 )
+                for b in range(y_store.num_blocks):
+                    lo = b * est.block_rows
+                    y_store.put(b, y_np[lo:lo + est.block_rows])
             with obs.span("sweep.stage_save", cat="sweep"):
                 save_embed_stage(
                     checkpoint_dir, params=params, pool=pool, seed_key=k_seed,

@@ -32,7 +32,17 @@ from repro.api.model import ClusterModel
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class SweepResult:
-    """All candidate models of one embed-once sweep, plus the selection."""
+    """All candidate models of one embed-once sweep, plus the selection.
+
+    Example:
+        >>> import numpy as np
+        >>> from repro.api import KernelKMeans
+        >>> X = np.random.default_rng(0).normal(size=(512, 8)).astype("float32")
+        >>> res = KernelKMeans(2, l=32, m=16, backend="local").sweep(
+        ...     X, k_grid=[2, 4], restarts=2)
+        >>> res.inertia.shape, res.best_k in (2, 4)
+        ((2, 2), True)
+    """
 
     #: models[k_index][restart] — every candidate, sharing one EmbeddingParams.
     models: list[list[ClusterModel]]

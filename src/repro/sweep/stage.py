@@ -9,8 +9,12 @@ discipline):
     embed_stage/
       params.npz   the fitted member's array fields (emb.params_state)
       pool.npy     the embedded seeding pool (k-means++ reads it on resume)
-      Y.bin        the cached embedding, flat row-major f32 (memmap on load)
+      Y.bin        the cached embedding, flat row-major in the cache codec's
+                   WIRE dtype (f32 / bf16 / int8; memmap on load)
+      scales.npy   the (num_blocks, m) per-block, per-column dequant scales
+                   (int8 codec only)
       stage.json   member config + seeding key + a fingerprint of the run
+                   (including `cache_dtype`, DESIGN.md §17)
 
 `load_embed_stage` returns the staged pieces ONLY when the fingerprint
 (embedding member, sweep key, and the input's (n, d) shape) matches the
@@ -62,13 +66,29 @@ def save_embed_stage(
     from repro.embed import embedding_for
 
     ckpt_dir = Path(ckpt_dir)
+    codec = getattr(y_store, "codec", "f32")
     with atomic_publish_dir(ckpt_dir, STAGE_DIR) as tmp:
         arrays, config = embedding_for(params).params_state(params)
         np.savez(tmp / "params.npz", **arrays)
         np.save(tmp / "pool.npy", np.asarray(pool, dtype=np.float32))
+        # A compressed cache persists in WIRE form: Y.bin holds the codec
+        # payload bytes and scales.npy the per-block, per-COLUMN dequant
+        # scales (int8 only; bf16's scale is identically 1.0), so the
+        # on-disk stage keeps the compression ratio (and resume rebuilds the
+        # identical quantized store — no second quantization error).
+        scales = []
         with (tmp / "Y.bin").open("wb") as f:
             for i in range(y_store.num_blocks):
-                f.write(np.ascontiguousarray(y_store.get(i), dtype=np.float32))
+                enc = y_store.get_encoded(i)
+                if enc is None:
+                    f.write(np.ascontiguousarray(
+                        y_store.get(i), dtype=np.float32))
+                else:
+                    f.write(np.ascontiguousarray(enc.payload))
+                    if codec == "int8":
+                        scales.append(np.asarray(enc.scale, np.float32))
+        if codec == "int8":
+            np.save(tmp / "scales.npy", np.concatenate(scales, axis=0))
         manifest = {
             "method": method,
             "config": config,
@@ -78,6 +98,7 @@ def save_embed_stage(
             "m": int(y_store.d),
             "block_rows": int(y_store.block_rows),
             "input_shape": [int(v) for v in input_shape],
+            "cache_dtype": codec,
         }
         fsync_json(tmp / "stage.json", manifest)
     return ckpt_dir / STAGE_DIR
@@ -85,11 +106,15 @@ def save_embed_stage(
 
 def load_embed_stage(
     ckpt_dir: str | Path, *, method: str, sweep_key,
-    input_shape: tuple[int, int],
+    input_shape: tuple[int, int], cache_dtype: str = "f32",
 ):
     """The staged (params, pool, seed_key, y_store) if `ckpt_dir` holds a
-    stage fingerprint-matching this sweep (member + key + input (n, d)),
-    else None (caller re-embeds)."""
+    stage fingerprint-matching this sweep (member + key + input (n, d) +
+    cache codec), else None (caller re-embeds). A stage persisted under a
+    different `cache_dtype` is stale: clustering an int8 cache against a run
+    configured for f32 (or vice versa) would silently change results at codec
+    error scale, so the codec is part of the fingerprint — mismatch means
+    re-embed, exactly like a different member would."""
     from repro.embed import get_embedding
 
     stage = Path(ckpt_dir) / STAGE_DIR
@@ -99,7 +124,8 @@ def load_embed_stage(
     manifest = json.loads(manifest_path.read_text())
     if (manifest["method"] != method
             or manifest["sweep_key"] != _key_fingerprint(sweep_key)
-            or manifest.get("input_shape") != [int(v) for v in input_shape]):
+            or manifest.get("input_shape") != [int(v) for v in input_shape]
+            or manifest.get("cache_dtype", "f32") != cache_dtype):
         return None
     data = np.load(stage / "params.npz")
     params = get_embedding(method).params_restore(
@@ -109,8 +135,12 @@ def load_embed_stage(
     seed_key = jnp.asarray(
         np.asarray(manifest["seed_key"], dtype=np.uint32)
     )
+    codec = manifest.get("cache_dtype", "f32")
+    scales_path = stage / "scales.npy"
+    scales = np.load(scales_path) if scales_path.exists() else None
     y_store = BlockStore.from_memmap(
-        stage / "Y.bin", d=manifest["m"], block_rows=manifest["block_rows"]
+        stage / "Y.bin", d=manifest["m"], block_rows=manifest["block_rows"],
+        codec=codec, scales=scales,
     )
     if y_store.n != manifest["n"]:
         return None  # truncated / corrupt stage: fall back to re-embedding

@@ -1,0 +1,254 @@
+"""Property suite for the quantized embedding cache (DESIGN.md §17).
+
+The load-bearing claims:
+
+  * CODEC CONTRACT: for EVERY registered embedding member, staging the
+    embedded Y under bf16/int8 decodes within the codec's DOCUMENTED
+    elementwise error bound of the f32 staging (the bound in
+    `CacheCodec.error_bound` is the spec; this test is its enforcement);
+  * the unwritten-block guard protects the ENCODED read path exactly like
+    the decoded one, and both guards survive `shard()` views;
+  * a persisted embed stage carries its codec in the fingerprint: a sweep
+    configured for a different `cache_dtype` treats the stage as stale and
+    re-embeds instead of clustering the wrong bytes;
+  * D=8 sharded staging under a compressed codec reads back identically to
+    single-device staging (stage/read identity through the shard seams);
+  * a small sweep over an int8 cache agrees with the f32-cache sweep on
+    label assignments (the keystone's unit-scale cousin; the bench gates the
+    full-scale version).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.embed as E
+from repro.api import ComputePolicy, KernelKMeans
+from repro.core.kernels_fn import Kernel
+from repro.stream.blockstore import (
+    CODECS,
+    BlockStore,
+    EncodedBlock,
+    get_codec,
+)
+from repro.stream.lloyd import stream_embed
+
+# One case per registered member (coverage asserted below).
+MEMBER_CASES = [
+    ("nystrom", Kernel("rbf", gamma=0.5), dict(l=48, m=24)),
+    ("sd", Kernel("rbf", gamma=0.5), dict(l=48, m=32, t=16)),
+    ("rff", Kernel("rbf", gamma=0.5), dict(l=0, m=32)),
+    ("tensorsketch", Kernel("poly", degree=2, coef0=1.0), dict(l=0, m=64)),
+]
+
+
+def test_cases_cover_registry():
+    """Registering a member without extending this suite fails by design."""
+    assert set(E.available_embeddings()) == {n for n, _, _ in MEMBER_CASES}
+
+
+@pytest.fixture(scope="module")
+def X():
+    return jax.random.normal(jax.random.PRNGKey(0), (100, 6)) * 0.8
+
+
+def _staged(name, kernel, kw, X, codec):
+    params = E.get_embedding(name).fit(jax.random.PRNGKey(1), X, kernel, **kw)
+    store = BlockStore.from_array(np.asarray(X), 32)
+    return stream_embed(
+        store, params, policy=ComputePolicy(cache_dtype=codec)
+    )
+
+
+@pytest.mark.parametrize("codec", ["bf16", "int8"])
+@pytest.mark.parametrize(
+    "name,kernel,kw", MEMBER_CASES, ids=[c[0] for c in MEMBER_CASES]
+)
+def test_codec_error_bound_per_member(name, kernel, kw, X, codec):
+    """decode(encode(Y_block)) stays within the documented elementwise bound
+    of the f32-staged block, for every member's real embedded output."""
+    ref = _staged(name, kernel, kw, X, "f32")
+    quant = _staged(name, kernel, kw, X, codec)
+    bound = get_codec(codec).error_bound
+    assert quant.codec == codec
+    for i in range(ref.num_blocks):
+        y32 = ref.get(i)
+        err = np.abs(quant.get(i) - y32)
+        assert (err <= bound(y32) + 1e-7).all(), (
+            f"{name}/{codec} block {i}: max err {err.max()} exceeds bound"
+        )
+
+
+@pytest.mark.parametrize("codec", ["bf16", "int8"])
+def test_encoded_roundtrip_and_header(codec):
+    cod = get_codec(codec)
+    blk = np.random.default_rng(3).standard_normal((16, 8)).astype(np.float32)
+    ws = BlockStore.empty(n=16, d=8, block_rows=16, codec=codec)
+    ws.put(0, blk)
+    enc = ws.get_encoded(0)
+    assert isinstance(enc, EncodedBlock)
+    assert enc.payload.dtype == cod.store_dtype
+    np.testing.assert_array_equal(
+        cod.decode(np.asarray(enc.payload), np.asarray(enc.scale)), ws.get(0)
+    )
+    hdr = ws.header(0)
+    assert (hdr.codec, hdr.rows, hdr.d) == (codec, 16, 8)
+    # compressed staging really is smaller than the f32 logical size
+    assert ws.nbytes_staged < 16 * 8 * 4
+
+
+def test_f32_store_has_no_wire_form():
+    ws = BlockStore.empty(n=8, d=4, block_rows=8)
+    ws.put(0, np.zeros((8, 4), np.float32))
+    assert ws.get_encoded(0) is None
+    assert ws.header(0).scale == 1.0
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_unwritten_guard_covers_both_read_paths(codec):
+    """An unwritten quantized block must raise on BOTH seams, and the guard
+    must survive shard() views (a sharded staged store reading silent zeros
+    would cluster garbage)."""
+    ws = BlockStore.empty(n=64, d=4, block_rows=16, codec=codec)
+    ws.put(0, np.ones((16, 4), np.float32))
+    with pytest.raises(ValueError, match="before it was written"):
+        ws.get(2)
+    if codec != "f32":
+        with pytest.raises(ValueError, match="before it was written"):
+            ws.get_encoded(2)
+    view = ws.shard(0, 2)  # local block 1 -> global block 2 (unwritten)
+    with pytest.raises(ValueError, match="before it was written"):
+        view.get(1)
+    if codec != "f32":
+        with pytest.raises(ValueError, match="before it was written"):
+            view.get_encoded(1)
+
+
+def test_invalid_codec_rejected():
+    with pytest.raises(ValueError, match="unknown cache codec"):
+        get_codec("fp4")
+    with pytest.raises(ValueError, match="unknown cache_dtype"):
+        ComputePolicy(cache_dtype="fp4")
+
+
+def _sweep(X, cache_dtype, ckpt=None, backend="stream", mesh=None):
+    est = KernelKMeans(
+        k=3, method="rff", m=32, iters=6, block_rows=64, backend=backend,
+        policy=ComputePolicy(cache_dtype=cache_dtype), mesh=mesh,
+    )
+    return est.sweep(
+        X, k_grid=[3], restarts=2, key=jax.random.PRNGKey(7),
+        checkpoint_dir=ckpt,
+    )
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    rng = np.random.default_rng(0)
+    centers = rng.standard_normal((3, 5)) * 4.0
+    X = np.concatenate(
+        [c + 0.3 * rng.standard_normal((80, 5)) for c in centers]
+    ).astype(np.float32)
+    rng.shuffle(X)
+    return X
+
+
+def test_sweep_int8_label_agreement(blobs):
+    """Unit-scale keystone: sweeping over the int8 cache reproduces the f32
+    sweep's labels on separated blobs (the bench gates >= 0.999 at scale)."""
+    r32 = _sweep(blobs, "f32")
+    r8 = _sweep(blobs, "int8")
+    for r in range(2):
+        agree = (r32.labels[0][r] == r8.labels[0][r]).mean()
+        assert agree >= 0.999, f"restart {r}: agreement {agree}"
+
+
+def test_stale_codec_stage_reembeds(blobs, tmp_path):
+    """A stage persisted under int8 is STALE for an f32 sweep (and vice
+    versa): the loader must return None -> exactly one extra embed pass, and
+    the f32 run's labels must match a cleanroom f32 run (never decoded-int8
+    bytes)."""
+    from repro.sweep.stage import load_embed_stage
+
+    ckpt = tmp_path / "ckpt"
+    _sweep(blobs, "int8", ckpt=ckpt)
+    assert load_embed_stage(
+        ckpt, method="rff", sweep_key=jax.random.PRNGKey(7),
+        input_shape=blobs.shape, cache_dtype="int8",
+    ) is not None
+    assert load_embed_stage(
+        ckpt, method="rff", sweep_key=jax.random.PRNGKey(7),
+        input_shape=blobs.shape, cache_dtype="f32",
+    ) is None
+    clean = _sweep(blobs, "f32")
+    over_stale = _sweep(blobs, "f32", ckpt=ckpt)
+    for r in range(2):
+        np.testing.assert_array_equal(
+            clean.labels[0][r], over_stale.labels[0][r]
+        )
+
+
+def test_int8_stage_resume_bit_identical(blobs, tmp_path):
+    """Resuming from a persisted int8 stage replays the quantized bytes
+    exactly — labels bit-identical to the run that wrote the stage."""
+    ckpt = tmp_path / "ckpt"
+    first = _sweep(blobs, "int8", ckpt=ckpt)
+    resumed = _sweep(blobs, "int8", ckpt=ckpt)
+    for r in range(2):
+        np.testing.assert_array_equal(
+            first.labels[0][r], resumed.labels[0][r]
+        )
+
+
+@pytest.mark.parametrize("codec", ["bf16", "int8"])
+def test_sharded_stage_read_identity(codec, X):
+    """stream_embed_sharded under a compressed codec stages the SAME bytes a
+    single-device staging produces, block for block (the shard seams carry
+    wire-form reads without re-encoding)."""
+    from repro.stream.sharded import stream_embed_sharded
+
+    params = E.get_embedding("rff").fit(
+        jax.random.PRNGKey(1), X, Kernel("rbf", gamma=0.5), l=0, m=32
+    )
+    store = BlockStore.from_array(np.asarray(X), 16)
+    pol = ComputePolicy(cache_dtype=codec)
+    single = stream_embed(store, params, policy=pol)
+    dev = jax.devices()[0]
+    devices = [dev] * min(8, store.num_blocks)
+    sharded = stream_embed_sharded(store, params, devices=devices, policy=pol)
+    assert sharded.codec == codec
+    for i in range(single.num_blocks):
+        e1, e2 = single.get_encoded(i), sharded.get_encoded(i)
+        np.testing.assert_array_equal(
+            np.asarray(e1.payload), np.asarray(e2.payload)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(e1.scale), np.asarray(e2.scale)
+        )
+        np.testing.assert_array_equal(single.get(i), sharded.get(i))
+
+
+@pytest.mark.parametrize("pallas", [False, True])
+def test_dequant_plan_matches_host_decode(pallas):
+    """The on-device dequant assignment (jnp and fused Pallas kernel) matches
+    running the plain Y-mode plan on the host-decoded block exactly — same
+    labels, same stats within float tolerance."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    Y = rng.standard_normal((96, 16)).astype(np.float32)
+    C = rng.standard_normal((5, 16)).astype(np.float32)
+    cod = get_codec("int8")
+    payload, scale = cod.encode(Y)
+    decoded = cod.decode(payload, scale)
+    plan = ops.lloyd_step_plan(
+        discrepancy="l2", policy=ComputePolicy(pallas=pallas)
+    )
+    Zd, gd, labd, cd = plan.step(jnp.asarray(decoded), jnp.asarray(C))
+    enc = EncodedBlock(jnp.asarray(payload), jnp.asarray(scale))
+    Zq, gq, labq, cq = plan.step(enc, jnp.asarray(C))
+    np.testing.assert_array_equal(np.asarray(labd), np.asarray(labq))
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(gq))
+    np.testing.assert_allclose(np.asarray(Zd), np.asarray(Zq), atol=1e-5)
+    labs, costs = plan.assign(enc, jnp.asarray(C))
+    np.testing.assert_array_equal(np.asarray(labs), np.asarray(labq))

@@ -1,0 +1,96 @@
+"""Docs cross-reference checker: no dangling section refs, no dead paths.
+
+    python tools/check_docs.py
+
+The docs carry two kinds of load-bearing links that rot silently:
+
+  * `§N` references into DESIGN.md (README, ARCHITECTURE and DESIGN itself
+    all use them). A renumbered or deleted section leaves readers on the
+    wrong rationale with no error anywhere.
+  * Backtick-quoted repo paths in docs/ARCHITECTURE.md's subsystem map and
+    entry-point list. A moved module or renamed test makes the map a lie.
+
+This script fails CI (the `docs` job) on either: every `§N` in the checked
+docs must name an existing `## N.` heading of DESIGN.md, and every
+path-looking backtick reference in docs/ must exist in the repo (brace
+groups like `repro/sweep/{engine,stage}.py` are expanded).
+"""
+from __future__ import annotations
+
+import itertools
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DOC_FILES = ["README.md", "DESIGN.md", "docs/ARCHITECTURE.md"]
+
+SECTION_RE = re.compile(r"^## (\d+)\.", re.M)
+REF_RE = re.compile(r"§\s?(\d+)")
+# backtick spans that look like repo paths: contain a "/" and no spaces
+PATH_RE = re.compile(r"`([\w./-]+/[\w.{},/-]+)`")
+
+
+def expand_braces(path: str) -> list[str]:
+    """`a/{b,c}.py` -> [a/b.py, a/c.py] (single level, possibly several)."""
+    groups = re.findall(r"\{([^{}]*)\}", path)
+    if not groups:
+        return [path]
+    template = re.sub(r"\{[^{}]*\}", "{}", path)
+    return [
+        template.format(*combo)
+        for combo in itertools.product(*[g.split(",") for g in groups])
+    ]
+
+
+def main() -> int:
+    errors: list[str] = []
+
+    design = (ROOT / "DESIGN.md").read_text()
+    sections = {int(n) for n in SECTION_RE.findall(design)}
+    if not sections:
+        errors.append("DESIGN.md: found no '## N.' section headings at all")
+
+    for rel in DOC_FILES:
+        path = ROOT / rel
+        if not path.exists():
+            errors.append(f"{rel}: missing (docs set changed without "
+                          "updating tools/check_docs.py)")
+            continue
+        text = path.read_text()
+        for lineno, line in enumerate(text.splitlines(), 1):
+            for ref in REF_RE.findall(line):
+                if int(ref) not in sections:
+                    errors.append(
+                        f"{rel}:{lineno}: dangling reference §{ref} "
+                        f"(DESIGN.md has sections "
+                        f"{min(sections)}–{max(sections)})"
+                    )
+
+    arch = ROOT / "docs" / "ARCHITECTURE.md"
+    if arch.exists():
+        for lineno, line in enumerate(arch.read_text().splitlines(), 1):
+            for raw in PATH_RE.findall(line):
+                for candidate in expand_braces(raw):
+                    # module refs are rooted at src/ in the tree; doc text
+                    # writes them repo-relative either way
+                    ok = (ROOT / candidate).exists() or \
+                        (ROOT / "src" / candidate).exists()
+                    if not ok:
+                        errors.append(
+                            f"docs/ARCHITECTURE.md:{lineno}: dead path "
+                            f"reference `{candidate}`"
+                        )
+
+    if errors:
+        for e in errors:
+            print(f"[check-docs] {e}", file=sys.stderr)
+        print(f"[check-docs] FAILED: {len(errors)} error(s)", file=sys.stderr)
+        return 1
+    print(f"[check-docs] OK: {len(DOC_FILES)} docs, "
+          f"{len(sections)} DESIGN.md sections, all §-refs and paths resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
